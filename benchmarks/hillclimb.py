@@ -1,0 +1,101 @@
+"""Perf hillclimb driver (EXPERIMENTS.md SecPerf).
+
+Each experiment = (cell, variant): lowers + compiles with the variant's
+config/sharding overrides, reruns the HLO analysis, and prints the three
+roofline terms next to the baseline.  Results land in results/dryrun/ with
+a __<variant> suffix so the JSON trail shows the whole path.
+
+Run one:   PYTHONPATH=src python -m benchmarks.hillclimb --cell jamba_train --variant mamba_kernel
+Run plan:  PYTHONPATH=src python -m benchmarks.hillclimb --plan
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+# cell id -> (arch, shape)
+CELLS = {
+    "jamba_train": ("jamba_1_5_large_398b", "train_4k"),
+    "jamba_prefill": ("jamba_1_5_large_398b", "prefill_32k"),
+    "qwen3_0_6b_train": ("qwen3_0_6b", "train_4k"),
+    "qwen2_vl_train": ("qwen2_vl_72b", "train_4k"),
+    "qwen3_moe_train": ("qwen3_moe_235b_a22b", "train_4k"),
+    "rwkv6_train": ("rwkv6_3b", "train_4k"),
+    "rwkv6_prefill": ("rwkv6_3b", "prefill_32k"),
+}
+
+# variant -> (cfg_overrides, fsdp)
+VARIANTS = {
+    "baseline": ({}, True),
+    "mamba_kernel": ({"mamba_kernel": True}, True),
+    "no_fsdp": ({}, False),
+    "remat_dots": ({"remat_policy": "dots"}, True),
+    "no_fsdp_remat_dots": ({"remat_policy": "dots"}, False),
+    "mamba_kernel_chunk128": ({"mamba_kernel": True}, True),
+    "loss_chunk_2k": ({"loss_chunk": 2048}, True),
+    "mamba_kernel_remat_dots": (
+        {"mamba_kernel": True, "remat_policy": "dots"}, True),
+    "proj_first": ({"proj_first": True}, True),
+    "rwkv_kernel": ({"rwkv_kernel": True}, True),
+    "mamba_kernel_proj_first": (
+        {"mamba_kernel": True, "proj_first": True}, True),
+}
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def terms(res):
+    c = res["dot_flops"] / PEAK
+    m = res.get("hbm_bytes", 0) / HBM
+    l = res["collectives"]["total_bytes"] / LINK
+    dom = max((("compute", c), ("memory", m), ("collective", l)),
+              key=lambda kv: kv[1])[0]
+    return c, m, l, dom
+
+
+def run(cell: str, variant: str):
+    from repro.launch.dryrun import RESULTS_DIR, run_cell
+    arch, shape = CELLS[cell]
+    overrides, fsdp = VARIANTS[variant]
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    res = run_cell(arch, shape, multi_pod=False,
+                   cfg_overrides=overrides, fsdp=fsdp, tag_suffix=suffix)
+    out = RESULTS_DIR / f"{arch}__{shape}__singlepod{suffix}.json"
+    out.write_text(json.dumps(res, indent=2))
+    c, m, l, dom = terms(res)
+    print(f"{cell} [{variant}]: compute={c:.3f}s memory={m:.3f}s "
+          f"collective={l:.3f}s dominant={dom} "
+          f"mem/dev={(res['memory']['argument_bytes'] or 0 + res['memory']['temp_bytes'] or 0)/2**30:.1f}GiB "
+          f"compile={res['compile_s']}s")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=CELLS)
+    ap.add_argument("--variant", choices=VARIANTS, default="baseline")
+    ap.add_argument("--plan", action="store_true",
+                    help="run the full 3-cell hillclimb plan")
+    args = ap.parse_args()
+    if args.plan:
+        plan = [
+            ("jamba_train", "mamba_kernel"),
+            ("jamba_train", "mamba_kernel_remat_dots"),
+            ("qwen3_0_6b_train", "no_fsdp"),
+            ("qwen3_0_6b_train", "no_fsdp_remat_dots"),
+            ("qwen2_vl_train", "remat_dots"),
+            ("jamba_prefill", "mamba_kernel"),
+        ]
+        for cell, variant in plan:
+            try:
+                run(cell, variant)
+            except Exception as e:  # noqa: BLE001
+                print(f"[FAIL] {cell} {variant}: {e}")
+        return
+    run(args.cell, args.variant)
+
+
+if __name__ == "__main__":
+    main()

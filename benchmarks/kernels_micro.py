@@ -1,0 +1,70 @@
+"""Microbenchmarks for the three Pallas kernel stages (+ XLA reference).
+
+On this CPU container the kernels run in interpret mode, so absolute times
+are NOT TPU-indicative; the value here is (a) regression tracking of the
+wrapper overhead and (b) the FLOP/byte accounting printed per stage, which
+feeds the kernel-level roofline discussion in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, reps=5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    # encode: K=10 workers, P=4 blocks, E = 512x512 block
+    K, P, E = 10, 4, 512 * 512
+    coeff = jnp.asarray(rng.normal(size=(K, P)), jnp.float32)
+    blocks = jnp.asarray(rng.normal(size=(P, E)), jnp.float32)
+    us_ref = _time(jax.jit(ref.encode_ref), coeff, blocks)
+    us_k = _time(lambda c, b: ops.encode(c, b), coeff, blocks)
+    flops = 2 * K * P * E
+    rows.append(("encode_pallas_interp", us_k, f"flops={flops:.2e}"))
+    rows.append(("encode_xla_ref", us_ref, f"flops={flops:.2e}"))
+
+    # worker block matmul 512^3
+    v = r = t = 512
+    A = jnp.asarray(rng.normal(size=(v, r)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(v, t)), jnp.float32)
+    us_ref = _time(jax.jit(ref.matmul_t_ref), A, B)
+    us_k = _time(lambda a, b: ops.matmul_t(a, b), A, B)
+    rows.append(("block_matmul_pallas_interp", us_k, f"flops={2*v*r*t:.2e}"))
+    rows.append(("block_matmul_xla_ref", us_ref, f"flops={2*v*r*t:.2e}"))
+
+    # decode: mn=4 from tau=4, E block
+    W = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    Y = jnp.asarray(rng.integers(-100, 100, size=(4, E)), jnp.float32)
+    us_ref = _time(jax.jit(lambda w, y: ref.decode_ref(w, y, 1024.0)), W, Y)
+    us_k = _time(lambda w, y: ops.decode(w, y, 1024.0), W, Y)
+    rows.append(("decode_pallas_interp", us_k, f"bytes={Y.nbytes:.2e}"))
+    rows.append(("decode_xla_ref", us_ref, f"bytes={Y.nbytes:.2e}"))
+    return rows
+
+
+def main():
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md Sec. Roofline).
+
+Per (arch x shape x mesh) JSON under results/dryrun/:
+  compute term    = HLO_dot_FLOPs_per_device / peak_FLOPs      [s]
+  memory term     = HLO_bytes_per_device / HBM_bw              [s]
+  collective term = collective_bytes_per_device / link_bw      [s]
+plus MODEL_FLOPS / HLO_FLOPs (useful-compute ratio, catches remat and
+padding waste) and the dominant-term verdict.
+
+Hardware: TPU v5e - 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+NOTE: HLO dot flops are parsed with while-trip multipliers (hlo_analysis);
+XLA's own cost_analysis undercounts scan bodies.  'bytes accessed' comes
+from cost_analysis and is normalised per device.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.models.stats import attention_score_flops, model_flops
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "singlepod"):
+    cells = []
+    for f in sorted(RESULTS_DIR.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def roofline_row(cell: dict) -> dict:
+    arch, shape_name = cell["arch"], cell["shape"]
+    n_dev = cell["n_devices"]
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+
+    compute_s = cell["dot_flops"] / PEAK_FLOPS
+    if cell.get("hbm_bytes"):
+        # instruction-level bytes with while-trip multipliers (hlo_analysis)
+        memory_s = cell["hbm_bytes"] / HBM_BW
+    else:
+        # legacy cells: scale cost_analysis bytes by the flop undercount
+        raw_bytes = cell["cost"].get("bytes accessed") or 0.0
+        raw_flops = cell["cost"].get("flops") or 1.0
+        scale = max(1.0, cell["dot_flops"] / max(raw_flops, 1.0))
+        memory_s = raw_bytes * scale / HBM_BW
+    coll_s = cell["collectives"]["total_bytes"] / LINK_BW
+
+    mf = model_flops(cfg, shape.kind, shape.global_batch, shape.seq_len)
+    attn_f = attention_score_flops(cfg, shape.kind, shape.global_batch,
+                                   shape.seq_len)
+    useful = (mf + attn_f) / n_dev
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name, "mesh": cell["multi_pod"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_per_dev": useful,
+        "hlo_flops_per_dev": cell["dot_flops"],
+        "useful_ratio": useful / max(cell["dot_flops"], 1.0),
+        "roofline_fraction": (useful / PEAK_FLOPS) / max(total, 1e-12),
+        "mem_gib_per_dev": ((cell["memory"]["argument_bytes"] or 0)
+                            + (cell["memory"]["temp_bytes"] or 0)) / 2 ** 30,
+        "compile_s": cell["compile_s"],
+    }
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("no dry-run artifacts yet (run repro.launch.dryrun)")
+        return []
+    rows = [roofline_row(c) for c in cells]
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction,mem_gib_per_dev")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+              f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+              f"{r['mem_gib_per_dev']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

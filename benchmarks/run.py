@@ -1,0 +1,39 @@
+"""Benchmark harness: one section per paper table/figure + roofline readout.
+
+Prints ``name,value,derived`` CSV blocks.  Sizes are scaled to this CPU
+host (documented per bench); EXPERIMENTS.md maps each section back to the
+paper's corresponding table/figure.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("== fig1_latency (paper Fig. 1: latency vs stragglers) ==")
+    from benchmarks import fig1_latency
+    fig1_latency.main()
+
+    print("\n== table1_error (paper Table I: decode error vs bound L) ==")
+    from benchmarks import table1_error
+    table1_error.main()
+
+    print("\n== tradeoff_sweep (paper Sec. IV: tau vs headroom) ==")
+    from benchmarks import tradeoff_sweep
+    tradeoff_sweep.main()
+
+    print("\n== kernels_micro (Pallas stages, interpret mode) ==")
+    from benchmarks import kernels_micro
+    kernels_micro.main()
+
+    print("\n== roofline (from dry-run artifacts) ==")
+    from benchmarks import roofline
+    roofline.main()
+
+    print(f"\ntotal bench time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Sec. IV quantified: threshold tau vs numeric headroom, p' sweep.
+
+For p=8, m=n=2 and the paper-scale L, sweep p' over divisors of p and
+report (tau, analytic max|X|, measured max|X| on random data, f64-safe?).
+This is the tradeoff curve the paper describes qualitatively; plan_p_prime
+uses it as an executable policy (smallest safe tau per dtype).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bounds as bounds_mod
+from repro.core import make_plan
+from repro.core.api import encode_blocks, worker_products
+from repro.core.numerics import enable_x64
+from repro.core.partition import block_decompose
+
+
+def run(p: int = 8, m: int = 2, n: int = 2, v: int = 256, bound: int = 20):
+    rng = np.random.default_rng(0)
+    L = bounds_mod.conservative_L(v, bound, bound)
+    s = bounds_mod.choose_s(L)
+    rows = []
+    with enable_x64():
+        import jax.numpy as jnp
+        A = jnp.asarray(rng.integers(-bound, bound + 1, size=(v, 64)),
+                        jnp.float64)
+        B = jnp.asarray(rng.integers(-bound, bound + 1, size=(v, 64)),
+                        jnp.float64)
+        for pp in [d for d in range(1, p + 1) if p % d == 0]:
+            plan = make_plan("tradeoff", p, m, n, K=None or
+                             (m * n * pp + pp - 1 + 2), L=L, p_prime=pp,
+                             points="chebyshev")
+            ab = block_decompose(A, p, m)
+            bb = block_decompose(B, p, n)
+            at, bt = encode_blocks(plan, ab, bb)
+            Y = worker_products(at, bt)
+            analytic = bounds_mod.max_abs_coefficient(
+                L, s, plan.scheme.digit_depth)
+            rows.append({
+                "p_prime": pp, "tau": plan.tau,
+                "digit_depth": plan.scheme.digit_depth,
+                "log2_analytic_maxX": float(np.log2(analytic)),
+                "log2_measured_maxY": float(np.log2(
+                    np.max(np.abs(np.asarray(Y))) + 1)),
+                "f64_safe": bounds_mod.is_safe(
+                    L, s, plan.scheme.digit_depth, "float64", tau=plan.tau),
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("p_prime,tau,digit_depth,log2_analytic_maxX,log2_measured_maxY,f64_safe")
+    for r in rows:
+        print(f"{r['p_prime']},{r['tau']},{r['digit_depth']},"
+              f"{r['log2_analytic_maxX']:.1f},{r['log2_measured_maxY']:.1f},"
+              f"{r['f64_safe']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

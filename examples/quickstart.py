@@ -1,0 +1,36 @@
+"""Quickstart: the paper's coded matmul in 30 lines.
+
+Computes C = A^T B with the bounded-entry entangled code (threshold tau=mn,
+paper Sec. III-B), kills 6 of 10 workers, and still decodes EXACTLY.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import coded_matmul, make_plan, uncoded_matmul  # noqa: E402
+
+# integer matrices with bounded entries (paper Sec. V uses {0..50})
+rng = np.random.default_rng(0)
+v, r, t = 1024, 512, 512
+A = jnp.asarray(rng.integers(0, 51, size=(v, r)), jnp.float64)
+B = jnp.asarray(rng.integers(0, 51, size=(v, t)), jnp.float64)
+
+# m=n=p=2 block split, K=10 workers -> BEC threshold tau = mn = 4
+# (the baseline polynomial code would need tau = pmn + p - 1 = 9)
+L = v * 50 * 50 + 1                       # entry-product bound (Sec. III-D)
+plan = make_plan("bec", p=2, m=2, n=2, K=10, L=L, points="unit_circle")
+print(f"scheme=BEC  workers={plan.K}  recovery threshold tau={plan.tau}  "
+      f"scale base s=2^{int(np.log2(plan.s))}")
+
+# six stragglers die; any tau=4 survivors suffice
+C = coded_matmul(A, B, plan, erased=[0, 2, 4, 6, 8, 9])
+C_ref = uncoded_matmul(A, B)
+err = float(jnp.max(jnp.abs(C - C_ref)))
+print(f"erased 6/10 workers -> max |C - A^T B| = {err}")
+assert err == 0.0, "decode must be exact"
+print("exact recovery despite 6 erasures - straggler-proof matmul.")

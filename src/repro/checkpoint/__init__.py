@@ -1,0 +1,8 @@
+"""Checkpoint substrate: atomic npz-shard save/restore with manifest."""
+from repro.checkpoint.store import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,16 @@
+"""Architecture registry: one module per assigned arch + the paper's own."""
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ShapeSpec,
+    cells,
+    get_config,
+    get_smoke_config,
+    list_archs,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ShapeSpec", "cells", "get_config",
+    "get_smoke_config", "list_archs", "shape_applicable",
+]

@@ -1,0 +1,76 @@
+"""Config registry + the assigned input-shape sets.
+
+Every architecture module defines CONFIG (the exact published geometry) and
+SMOKE (a reduced same-family config for CPU smoke tests).  The four LM
+shapes are global; ``long_500k`` applies only to sub-quadratic archs
+(cfg.sub_quadratic) per the assignment rules - see DESIGN.md Sec. 8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models import ModelConfig
+
+ARCH_IDS = (
+    "jamba_1_5_large_398b",
+    "qwen3_moe_235b_a22b",
+    "qwen2_moe_a2_7b",
+    "qwen3_0_6b",
+    "qwen2_0_5b",
+    "gemma3_12b",
+    "granite_3_8b",
+    "rwkv6_3b",
+    "musicgen_medium",
+    "qwen2_vl_72b",
+    "paper_matmul",  # the paper's own experiment configuration
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE
+
+
+def list_archs() -> List[str]:
+    return [a for a in ARCH_IDS if a != "paper_matmul"]
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch has no "
+                       "sub-quadratic path (DESIGN.md Sec. 8)")
+    return True, ""
+
+
+def cells(arch: str) -> List[Tuple[str, str]]:
+    cfg = get_config(arch)
+    out = []
+    for s in SHAPES:
+        ok, _ = shape_applicable(cfg, s)
+        if ok:
+            out.append((arch, s))
+    return out

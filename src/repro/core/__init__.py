@@ -1,0 +1,33 @@
+"""Core: the paper's coded-matmul schemes, decoding, bounds, and simulator."""
+from repro.core.api import (
+    CodedMatmulPlan,
+    coded_matmul,
+    encode_blocks,
+    make_plan,
+    uncoded_matmul,
+    worker_products,
+)
+from repro.core.bounds import BoundsReport, choose_s, conservative_L, plan_p_prime
+from repro.core.decoding import decode, decode_masked, digit_extract
+from repro.core.partition import GridSpec, block_decompose, block_recompose
+from repro.core.points import make_points
+from repro.core.schemes import (
+    EntangledBoundedScheme,
+    PolynomialCodeYu,
+    Scheme,
+    TradeoffScheme,
+    make_scheme,
+)
+from repro.core.simulator import LatencyModel, WorkerTimes, simulate_completion
+
+__all__ = [
+    "CodedMatmulPlan", "coded_matmul", "encode_blocks", "make_plan",
+    "uncoded_matmul", "worker_products",
+    "BoundsReport", "choose_s", "conservative_L", "plan_p_prime",
+    "decode", "decode_masked", "digit_extract",
+    "GridSpec", "block_decompose", "block_recompose",
+    "make_points",
+    "EntangledBoundedScheme", "PolynomialCodeYu", "Scheme", "TradeoffScheme",
+    "make_scheme",
+    "LatencyModel", "WorkerTimes", "simulate_completion",
+]

@@ -1,0 +1,136 @@
+"""High-level single-host reference path for coded distributed matmul.
+
+``coded_matmul`` runs the whole pipeline (encode -> per-worker products ->
+erasure -> decode) as one JAX computation; it is the oracle against which
+the Pallas kernels and the on-mesh shard_map runtime are tested, and the
+engine behind the paper-reproduction benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds as bounds_mod
+from repro.core.decoding import decode, decode_masked
+from repro.core.partition import GridSpec, block_decompose, block_recompose, unpad
+from repro.core.points import make_points
+from repro.core.schemes import Scheme, make_scheme
+
+__all__ = ["CodedMatmulPlan", "make_plan", "coded_matmul", "encode_blocks", "worker_products"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedMatmulPlan:
+    """Everything static about one coded matmul configuration."""
+
+    scheme: Scheme
+    K: int
+    s: float
+    z_points: np.ndarray          # (K,)
+    coeff_a: np.ndarray           # (K, p, m) encode coefficients for A blocks
+    coeff_b: np.ndarray           # (K, p, n)
+
+    @property
+    def tau(self) -> int:
+        return self.scheme.tau
+
+    @property
+    def is_complex(self) -> bool:
+        return np.iscomplexobj(self.z_points)
+
+
+def make_plan(
+    kind: str,
+    p: int,
+    m: int,
+    n: int,
+    K: int,
+    L: int,
+    *,
+    p_prime: int = 1,
+    points: str = "equispaced",
+    s: Optional[int] = None,
+) -> CodedMatmulPlan:
+    scheme = make_scheme(kind, p, m, n, p_prime=p_prime)
+    if K < scheme.tau:
+        raise ValueError(f"K={K} below recovery threshold tau={scheme.tau}")
+    z = make_points(points, K)
+    s_val = s if s is not None else bounds_mod.choose_s(L)
+    ca, cb = scheme.encode_coeffs(z, s_val)
+    return CodedMatmulPlan(scheme=scheme, K=K, s=float(s_val), z_points=z,
+                           coeff_a=ca, coeff_b=cb)
+
+
+def encode_blocks(plan: CodedMatmulPlan, a_blocks: jnp.ndarray, b_blocks: jnp.ndarray):
+    """a_blocks: (p, m, bv, br), b_blocks: (p, n, bv, bt)
+    -> (K, bv, br), (K, bv, bt) coded matrices per worker."""
+    ca = jnp.asarray(plan.coeff_a, dtype=_coeff_dtype(a_blocks, plan))
+    cb = jnp.asarray(plan.coeff_b, dtype=_coeff_dtype(b_blocks, plan))
+    a_tilde = jnp.einsum("kpm,pmvr->kvr", ca, a_blocks.astype(ca.dtype))
+    b_tilde = jnp.einsum("kpn,pnvt->kvt", cb, b_blocks.astype(cb.dtype))
+    return a_tilde, b_tilde
+
+
+def worker_products(a_tilde: jnp.ndarray, b_tilde: jnp.ndarray) -> jnp.ndarray:
+    """Per-worker products Y_k = A~_k^T B~_k: (K, bv, br), (K, bv, bt) -> (K, br, bt)."""
+    return jnp.einsum("kvr,kvt->krt", a_tilde, b_tilde)
+
+
+def _coeff_dtype(x: jnp.ndarray, plan: CodedMatmulPlan):
+    if plan.is_complex:
+        return jnp.complex128 if x.dtype == jnp.float64 else jnp.complex64
+    return x.dtype
+
+
+def coded_matmul(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    plan: CodedMatmulPlan,
+    *,
+    erased: Optional[Sequence[int]] = None,
+    survivors: Optional[Sequence[int]] = None,
+    dtype=jnp.float64,
+) -> jnp.ndarray:
+    """Compute C = A^T B through the coded pipeline.
+
+    A: (v, r), B: (v, t).  ``erased`` lists worker ids treated as stragglers
+    (their outputs discarded); alternatively pass an explicit ``survivors``
+    order.  Uses the first tau survivors.  Exact for integer matrices within
+    the plan's numeric bounds.
+    """
+    if erased is not None and survivors is not None:
+        raise ValueError("pass only one of erased/survivors")
+    g = plan.scheme.grid
+    v, r = A.shape
+    v2, t = B.shape
+    if v != v2:
+        raise ValueError(f"contraction mismatch {A.shape} vs {B.shape}")
+    A = A.astype(dtype)
+    B = B.astype(dtype)
+    a_blocks = block_decompose(A, g.p, g.m)
+    b_blocks = block_decompose(B, g.p, g.n)
+    a_tilde, b_tilde = encode_blocks(plan, a_blocks, b_blocks)
+    Y = worker_products(a_tilde, b_tilde)  # (K, br, bt)
+
+    if survivors is None:
+        if erased is None:
+            erased = []
+        survivors = [k for k in range(plan.K) if k not in set(erased)]
+    if len(survivors) < plan.tau:
+        raise ValueError(
+            f"only {len(survivors)} survivors < tau={plan.tau}: undecodable")
+    sel = np.asarray(survivors[: plan.tau])
+    z_s = jnp.asarray(plan.z_points[sel])
+    C_blocks = decode(plan.scheme, z_s, Y[sel], plan.s)  # (m, n, br, bt)
+    C = block_recompose(C_blocks)
+    return unpad(C, (r, t)).astype(dtype)
+
+
+def uncoded_matmul(A: jnp.ndarray, B: jnp.ndarray, dtype=jnp.float64) -> jnp.ndarray:
+    """Direct C = A^T B reference."""
+    return (A.astype(dtype).T @ B.astype(dtype))

@@ -1,0 +1,83 @@
+"""Decoding: interpolation + digit extraction (paper Sec. III-C).
+
+Given worker outputs Y_k = A~(s,z_k)^T B~(s,z_k) from any tau survivors:
+
+1. Vandermonde-interpolate the z-polynomial coefficients X_0..X_{tau-1}.
+2. Select the useful powers X_{phi(i,j)}.
+3. Digit extraction (bounded-entry schemes only):
+     R   = round(X)            # kills the negative s-digits (< 1/2 total)
+     C^  = R mod s             # in [0, s)
+     C   = C^            if C^ <= s/2
+           C^ - s        otherwise       # sign recentering
+   With s a power of two the mod is exact in binary floating point.
+
+For the baseline polynomial code the useful coefficient IS C_ij (round only).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schemes import Scheme
+from repro.core.vandermonde import interpolate_solve, interpolate_masked
+
+__all__ = ["digit_extract", "decode", "decode_masked"]
+
+
+def digit_extract(X: jnp.ndarray, s: float, round_first: bool = True) -> jnp.ndarray:
+    """Recover the s^0 digit of X = ... + *s^{-1} + C + *s + ... , |C| < s/2."""
+    R = jnp.round(X) if round_first else X
+    C_hat = jnp.mod(R, s)  # convention: result in [0, s)
+    return jnp.where(C_hat <= s / 2, C_hat, C_hat - s)
+
+
+def _extract_useful(scheme: Scheme, X: jnp.ndarray, s: float) -> jnp.ndarray:
+    """X: (tau, br, bt) coefficients -> (m, n, br, bt) decoded C blocks."""
+    g = scheme.grid
+    idx = scheme.useful_z_exp().reshape(-1)  # (m*n,)
+    Xu = X[idx]  # (m*n, br, bt)
+    if jnp.iscomplexobj(Xu):
+        Xu = Xu.real
+    if scheme.needs_digit_extraction:
+        C = digit_extract(Xu, s)
+    else:
+        C = jnp.round(Xu)
+    return C.reshape(g.m, g.n, *X.shape[1:])
+
+
+def decode(
+    scheme: Scheme,
+    z_survivors: jnp.ndarray,
+    Y_survivors: jnp.ndarray,
+    s: float,
+) -> jnp.ndarray:
+    """Decode from exactly tau survivor outputs (static survivor set).
+
+    z_survivors: (tau,), Y_survivors: (tau, br, bt) -> C blocks (m, n, br, bt).
+    """
+    tau = scheme.tau
+    if z_survivors.shape[0] != tau:
+        raise ValueError(
+            f"need exactly tau={tau} survivors, got {z_survivors.shape[0]}; "
+            "slice the first tau or use decode_masked"
+        )
+    X = interpolate_solve(jnp.asarray(z_survivors), jnp.asarray(Y_survivors))
+    return _extract_useful(scheme, X, s)
+
+
+def decode_masked(
+    scheme: Scheme,
+    z_all: jnp.ndarray,
+    Y_all: jnp.ndarray,
+    mask: jnp.ndarray,
+    s: float,
+    ridge: float = 0.0,
+) -> jnp.ndarray:
+    """Decode with a dynamic 0/1 survivor mask over all K workers (jit-safe).
+
+    Requires sum(mask) >= tau; erased rows of Y_all may hold garbage.
+    """
+    X = interpolate_masked(jnp.asarray(z_all), jnp.asarray(Y_all), mask, scheme.tau, ridge)
+    return _extract_useful(scheme, X, s)

@@ -1,0 +1,29 @@
+"""Precision helpers: x64 scoping and exact-integer dtype policy.
+
+The paper's decode requires float64 on the master (Table I uses s up to
+2^36, far beyond float32's 24-bit mantissa).  JAX disables x64 by default;
+we scope it explicitly so the LM substrate stays f32/bf16 while the coded
+matmul reference path runs in f64.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["enable_x64", "x64_enabled"]
+
+
+@contextlib.contextmanager
+def enable_x64(enable: bool = True):
+    """Context manager scoping jax_enable_x64 (uses the public config API)."""
+    prev = jax.config.read("jax_enable_x64")
+    try:
+        jax.config.update("jax_enable_x64", enable)
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def x64_enabled() -> bool:
+    return bool(jax.config.read("jax_enable_x64"))

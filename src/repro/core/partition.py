@@ -1,0 +1,84 @@
+"""Block decomposition of matrices for coded distributed matmul.
+
+The paper partitions A (v x r) into a p x m grid and B (v x t) into a p x n
+grid of equal-size blocks.  Workers store one (coded) block of each.  On TPU
+we additionally pad block dims up to MXU-friendly multiples when requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "GridSpec",
+    "pad_to_multiple",
+    "block_decompose",
+    "block_recompose",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Grid geometry for one coded matmul C = A^T B.
+
+    A is split p x m (rows: contraction dim v, cols: output rows r).
+    B is split p x n (rows: contraction dim v, cols: output cols t).
+    C = A^T B is m x n blocks of (r/m x t/n).
+    """
+
+    p: int
+    m: int
+    n: int
+
+    def __post_init__(self):
+        if self.p < 1 or self.m < 1 or self.n < 1:
+            raise ValueError(f"invalid grid {self}")
+
+    @property
+    def num_a_blocks(self) -> int:
+        return self.p * self.m
+
+    @property
+    def num_b_blocks(self) -> int:
+        return self.p * self.n
+
+    @property
+    def num_c_blocks(self) -> int:
+        return self.m * self.n
+
+
+def pad_to_multiple(x: jnp.ndarray, multiples: Tuple[int, int]) -> jnp.ndarray:
+    """Zero-pad a 2-D array so each dim is a multiple of ``multiples``."""
+    v, r = x.shape
+    mv, mr = multiples
+    pv = (-v) % mv
+    pr = (-r) % mr
+    if pv == 0 and pr == 0:
+        return x
+    return jnp.pad(x, ((0, pv), (0, pr)))
+
+
+def block_decompose(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """(v, r) -> (rows, cols, v/rows, r/cols).  Pads with zeros if needed.
+
+    Zero padding is exact for the coding schemes: zero blocks contribute zero
+    useful and zero interference terms.
+    """
+    x = pad_to_multiple(x, (rows, cols))
+    v, r = x.shape
+    bv, br = v // rows, r // cols
+    return x.reshape(rows, bv, cols, br).transpose(0, 2, 1, 3)
+
+
+def block_recompose(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(rows, cols, bv, br) -> (rows*bv, cols*br)."""
+    rows, cols, bv, br = blocks.shape
+    return blocks.transpose(0, 2, 1, 3).reshape(rows * bv, cols * br)
+
+
+def unpad(x: jnp.ndarray, shape: Tuple[int, int]) -> jnp.ndarray:
+    """Crop a padded 2-D result back to ``shape``."""
+    return x[: shape[0], : shape[1]]

@@ -1,0 +1,46 @@
+"""Evaluation points z_1..z_K for the coded matmul polynomials.
+
+The paper (Sec. V) uses K equally spaced reals in [-1, 1] and notes that
+real Vandermonde systems are badly conditioned; complex points on the unit
+circle give error that is "identically zero" at the cost of complex
+arithmetic.  Beyond the paper we also provide Chebyshev nodes, which keep
+real arithmetic but improve the Vandermonde condition number exponentially
+over equispaced nodes (standard approximation-theory fact).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["make_points", "POINT_KINDS"]
+
+POINT_KINDS = ("equispaced", "chebyshev", "unit_circle")
+
+
+def make_points(kind: str, K: int, dtype=np.float64) -> np.ndarray:
+    """Return K distinct evaluation points.
+
+    kind:
+      equispaced  - the paper's choice: K equally spaced in [-1, 1].
+      chebyshev   - cos((2k+1) pi / (2K)): real, much better conditioned.
+      unit_circle - exp(2 pi i k / K): complex, condition number 1 when K
+                    points are used (DFT matrix); the paper's zero-error variant.
+    """
+    if K < 1:
+        raise ValueError("K must be >= 1")
+    if kind == "equispaced":
+        if K == 1:
+            pts = np.array([0.5])  # any nonzero point works; stay inside (-1,1)
+        else:
+            pts = np.linspace(-1.0, 1.0, K)
+            # Avoid z=0 exactly when K is odd: 0 is a fine evaluation point for
+            # positive-power polynomials, keep the paper's grid as-is.
+        return pts.astype(dtype)
+    if kind == "chebyshev":
+        k = np.arange(K)
+        pts = np.cos((2 * k + 1) * np.pi / (2 * K))
+        return pts.astype(dtype)
+    if kind == "unit_circle":
+        k = np.arange(K)
+        pts = np.exp(2j * np.pi * k / K)
+        return pts.astype(np.complex128 if dtype == np.float64 else np.complex64)
+    raise ValueError(f"unknown point kind {kind!r}; options: {POINT_KINDS}")

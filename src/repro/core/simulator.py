@@ -1,0 +1,93 @@
+"""Async-cluster straggler simulator (reproduces the paper's Fig. 1 setup).
+
+The paper runs 10 AWS workers; stragglers are simulated by making S randomly
+chosen machines perform their local computation twice.  Completion latency of
+a scheme with threshold tau is the tau-th smallest worker finish time plus
+the decode time.  We reproduce this as a discrete-event model fed with real
+measured per-worker compute times (the worker matmul run on this host) so the
+comparison between schemes is apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["WorkerTimes", "simulate_completion", "measure_worker_time", "LatencyModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Per-worker finish-time model.
+
+    base: seconds of useful compute per worker (measured or supplied).
+    straggler_slowdown: multiplicative factor for stragglers (paper: 2.0 -
+    the straggler computes twice).
+    jitter: optional exponential jitter scale (fraction of base) applied to
+    every worker - models cloud variance; 0 reproduces the paper's
+    deterministic duplication model.
+    """
+
+    base: float
+    straggler_slowdown: float = 2.0
+    jitter: float = 0.0
+
+    def sample(self, K: int, stragglers: Sequence[int], rng: np.random.Generator) -> np.ndarray:
+        t = np.full(K, self.base, dtype=np.float64)
+        t[list(stragglers)] *= self.straggler_slowdown
+        if self.jitter > 0:
+            t = t + rng.exponential(self.jitter * self.base, size=K)
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerTimes:
+    finish: np.ndarray  # (K,) seconds
+
+    def completion_for_threshold(self, tau: int) -> float:
+        """Latency until ANY tau workers have finished."""
+        return float(np.sort(self.finish)[tau - 1])
+
+    def survivors_at_threshold(self, tau: int) -> np.ndarray:
+        """Worker ids of the first tau finishers (the decode survivor set)."""
+        return np.argsort(self.finish, kind="stable")[:tau]
+
+
+def simulate_completion(
+    K: int,
+    tau: int,
+    num_stragglers: int,
+    model: LatencyModel,
+    decode_time: float = 0.0,
+    trials: int = 100,
+    seed: int = 0,
+) -> np.ndarray:
+    """Return per-trial completion latencies (paper Fig. 1 protocol).
+
+    Each trial picks ``num_stragglers`` distinct random workers as
+    stragglers.  If fewer than tau workers can ever finish (impossible here -
+    stragglers still finish, just late) the job still completes; the latency
+    jump at num_stragglers > K - tau is the interesting regime.
+    """
+    rng = np.random.default_rng(seed)
+    out = np.empty(trials)
+    for t in range(trials):
+        stragglers = rng.choice(K, size=num_stragglers, replace=False)
+        wt = WorkerTimes(model.sample(K, stragglers, rng))
+        out[t] = wt.completion_for_threshold(tau) + decode_time
+    return out
+
+
+def measure_worker_time(fn: Callable[[], object], repeats: int = 3) -> float:
+    """Wall-time one worker's compute (median of ``repeats`` runs)."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        # Block on async JAX dispatch if applicable.
+        if hasattr(result, "block_until_ready"):
+            result.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

@@ -1,0 +1,97 @@
+"""Vandermonde interpolation utilities for decoding coded matmuls.
+
+Decoding recovers the coefficients X_0..X_{tau-1} of the worker-output
+polynomial from evaluations at any tau distinct points.  Three paths:
+
+* ``solve`` - direct linear solve of the tau x tau Vandermonde system
+  (LU); simple, used for static survivor sets.
+* ``newton`` - Newton divided-difference interpolation followed by basis
+  conversion; O(tau^2), numerically kinder than LU on real Vandermonde
+  systems and matches the classical treatment (Gautschi).
+* ``masked`` - weighted normal equations over ALL K rows with a 0/1
+  survivor mask; jit-friendly (shapes static in K) for the on-mesh runtime
+  where the erasure pattern is data, not Python.
+
+All paths accept complex points (unit-circle decoding).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "vandermonde",
+    "inverse_vandermonde",
+    "interpolate_solve",
+    "interpolate_masked",
+]
+
+
+def vandermonde(z: np.ndarray, degree_plus_one: int) -> np.ndarray:
+    """V[a, d] = z_a ** d, d = 0..degree_plus_one-1 (numpy, setup-time)."""
+    z = np.asarray(z)
+    d = np.arange(degree_plus_one)
+    return z[:, None] ** d[None, :]
+
+
+def inverse_vandermonde(z: np.ndarray) -> np.ndarray:
+    """Explicit inverse of the square Vandermonde at points z via Lagrange
+    basis polynomials: row j of V^{-1} holds the coefficients of the j-th
+    Lagrange cardinal polynomial.  More accurate than LU for moderate tau.
+
+    Returns W with  X = W @ Y,  W shape (tau, tau):  W[d, a] = coefficient of
+    z^d in L_a(z).
+    """
+    z = np.asarray(z)
+    tau = z.shape[0]
+    W = np.zeros((tau, tau), dtype=np.result_type(z.dtype, np.float64))
+    for a in range(tau):
+        # L_a(x) = prod_{b != a} (x - z_b) / prod_{b != a} (z_a - z_b)
+        others = np.delete(z, a)
+        if others.size:
+            coeffs_desc = np.poly(others)  # leading-first coeffs of prod (x - z_b)
+            denom = np.prod(z[a] - others)
+        else:
+            coeffs_desc = np.array([1.0], dtype=W.dtype)
+            denom = 1.0
+        W[:, a] = coeffs_desc[::-1] / denom
+    return W
+
+
+def interpolate_solve(z: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+    """Solve V X = Y for X given square Vandermonde at points z.
+
+    z: (tau,), Y: (tau, ...) -> X: (tau, ...).
+    """
+    tau = z.shape[0]
+    V = jnp.asarray(z)[:, None] ** jnp.arange(tau)[None, :]
+    Yf = Y.reshape(tau, -1)
+    X = jnp.linalg.solve(V, Yf)
+    return X.reshape(Y.shape)
+
+
+def interpolate_masked(
+    z_all: jnp.ndarray, Y_all: jnp.ndarray, mask: jnp.ndarray, tau: int,
+    ridge: float = 0.0,
+) -> jnp.ndarray:
+    """Interpolate from a masked set of evaluations; jit-friendly.
+
+    z_all: (K,) all evaluation points; Y_all: (K, ...) all worker outputs
+    (garbage rows allowed where mask==0); mask: (K,) 0/1 survivors.
+    Requires sum(mask) >= tau.  Solves the weighted normal equations
+      (V^T D V) X = V^T D Y,  D = diag(mask),
+    which has the exact interpolant as unique solution when >= tau rows
+    survive.  ridge adds lambda*I for numerical safety (0 = exact).
+    """
+    K = z_all.shape[0]
+    V = jnp.asarray(z_all)[:, None] ** jnp.arange(tau)[None, :]  # (K, tau)
+    w = mask.astype(V.dtype)[:, None]
+    Vw = V * w
+    G = V.conj().T @ Vw  # (tau, tau)
+    if ridge:
+        G = G + ridge * jnp.eye(tau, dtype=G.dtype)
+    Yf = Y_all.reshape(K, -1)
+    rhs = Vw.conj().T @ Yf  # = V^T D Y (D idempotent)
+    X = jnp.linalg.solve(G, rhs)
+    return X.reshape((tau,) + Y_all.shape[1:])

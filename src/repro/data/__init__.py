@@ -1,0 +1,4 @@
+"""Data substrate: deterministic synthetic token pipeline."""
+from repro.data.pipeline import DataConfig, SyntheticLM, make_pipeline
+
+__all__ = ["DataConfig", "SyntheticLM", "make_pipeline"]

@@ -1,0 +1,10 @@
+"""Distribution: mesh axes, sharding rules, coded on-mesh runtime."""
+from repro.distributed.sharding import (
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_sharding,
+    shard,
+)
+
+__all__ = ["AxisRules", "axis_rules", "current_rules", "logical_sharding", "shard"]

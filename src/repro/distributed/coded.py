@@ -1,0 +1,162 @@
+"""On-mesh coded matmul: the paper's pipeline as one shard_map program.
+
+The paper's master/worker RPC becomes a single-program mesh computation over
+a ``workers`` mesh axis (we reuse "model"):
+
+  stage 1  ENCODE   - device k builds its coded blocks A~_k, B~_k from the
+                      coefficient table row k (Pallas coded_encode kernel);
+  stage 2  WORKER   - device k computes Y_k = A~_k^T B~_k (Pallas
+                      block_matmul kernel);
+  stage 3  ERASE    - an erasure mask (data, not process death) zeroes the
+                      outputs of "failed" workers - on a real pod this mask
+                      comes from the health monitor / timeout watchdog;
+  stage 4  DECODE   - Y is all-gathered and every device recovers the C
+                      blocks it owns from ANY tau surviving outputs via the
+                      mask-weighted normal equations + digit extraction.
+
+A lost chip's contribution is thus absorbed WITHIN the step - no restart,
+no recompute - which is the paper's straggler/fault story adapted to the
+synchronous-mesh world (DESIGN.md Sec. 3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.api import CodedMatmulPlan
+from repro.core.decoding import digit_extract
+from repro.core.partition import block_decompose, block_recompose, unpad
+from repro.kernels import ops as kops
+
+__all__ = ["coded_matmul_mesh", "CodedLinearPlan"]
+
+
+def _decode_weights_masked(z_all: jnp.ndarray, mask: jnp.ndarray, tau: int,
+                           useful: np.ndarray):
+    """Rows of the pseudo-inverse Vandermonde for the useful powers only.
+
+    W_useful (mn, K): X_useful = W_useful @ Y_all (erased rows weighted 0).
+    Solved from the normal equations G X = V^T D Y with D = diag(mask)."""
+    K = z_all.shape[0]
+    V = z_all[:, None] ** jnp.arange(tau)[None, :]          # (K, tau)
+    Vw = V * mask.astype(V.dtype)[:, None]
+    G = V.T @ Vw                                             # (tau, tau)
+    # W_full = G^{-1} V_w^T : (tau, K); we need the useful rows.
+    Gin = jnp.linalg.inv(G)
+    W_full = Gin @ Vw.T
+    return W_full[useful]                                    # (mn, K)
+
+
+def _worker_body(a_blocks, b_blocks, mask, coeff_a, coeff_b, z_all,
+                 *, tau, s, useful, axis, use_kernels):
+    """Per-device body.  a_blocks (p, m, bv, br) replicated; mask (K,)."""
+    k = jax.lax.axis_index(axis)
+    p, m, bv, br = a_blocks.shape
+    _, n, _, bt = b_blocks.shape
+
+    ca = jax.lax.dynamic_index_in_dim(coeff_a, k, axis=0)     # (1, p, m)
+    cb = jax.lax.dynamic_index_in_dim(coeff_b, k, axis=0)
+    if use_kernels:
+        a_tilde = kops.encode(ca.reshape(1, p * m),
+                              a_blocks.reshape(p * m, bv * br)).reshape(bv, br)
+        b_tilde = kops.encode(cb.reshape(1, p * n),
+                              b_blocks.reshape(p * n, bv * bt)).reshape(bv, bt)
+        y_local = kops.matmul_t(a_tilde, b_tilde)             # (br, bt)
+    else:
+        a_tilde = jnp.einsum("pm,pmvr->vr", ca[0], a_blocks)
+        b_tilde = jnp.einsum("pn,pnvt->vt", cb[0], b_blocks)
+        y_local = a_tilde.T @ b_tilde
+
+    # stage 3: erasure - zero out "failed" workers' outputs.
+    y_local = y_local * jax.lax.dynamic_index_in_dim(mask, k, 0, keepdims=False)
+    # stage 4: all-gather and decode everywhere (each device keeps its C).
+    Y = jax.lax.all_gather(y_local, axis)                    # (K, br, bt)
+    W = _decode_weights_masked(z_all, mask, tau, useful)      # (mn, K)
+    X = jnp.einsum("uk,krt->urt", W, Y)
+    C = digit_extract(X, s) if s is not None else jnp.round(X)
+    return C.reshape(m, n, br, bt)
+
+
+def coded_matmul_mesh(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    plan: CodedMatmulPlan,
+    mesh: Mesh,
+    mask: Optional[jnp.ndarray] = None,
+    *,
+    axis: str = "model",
+    use_kernels: bool = True,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """C = A^T B on the mesh, tolerating up to K - tau erased workers.
+
+    ``mask``: (K,) 0/1 survivors (default all alive).  K = mesh.shape[axis];
+    must be >= plan.K (extra devices idle).  Exactness is governed by the
+    plan's bounds analysis (use f64 on CPU for paper-scale L).
+    """
+    K = mesh.shape[axis]
+    if K != plan.K:
+        raise ValueError(f"plan built for K={plan.K}, mesh axis has {K}")
+    g = plan.scheme.grid
+    if mask is None:
+        mask = jnp.ones((K,), dtype)
+    a_blocks = block_decompose(A.astype(dtype), g.p, g.m)
+    b_blocks = block_decompose(B.astype(dtype), g.p, g.n)
+    useful = np.asarray(plan.scheme.useful_z_exp().reshape(-1))
+    s = plan.s if plan.scheme.needs_digit_extraction else None
+
+    body = partial(
+        _worker_body, tau=plan.tau, s=s, useful=useful, axis=axis,
+        use_kernels=use_kernels)
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+    C_blocks = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P()),   # replicated inputs
+        out_specs=P(),
+        check_vma=False,
+    )(a_blocks, b_blocks, mask.astype(dtype),
+      jnp.asarray(plan.coeff_a, dtype), jnp.asarray(plan.coeff_b, dtype),
+      jnp.asarray(plan.z_points, dtype))
+    C = block_recompose(C_blocks)
+    return unpad(C, (A.shape[1], B.shape[1]))
+
+
+class CodedLinearPlan:
+    """Straggler-tolerant linear layer y = x @ W via the coded pipeline.
+
+    Maps y = x W onto the paper's C = A^T B with A = x^T (d, N), B = W
+    (d, V): the contraction (d) is the coded dimension, so each worker
+    holds 1/(mp) of the activations and 1/(np) of the weight - the paper's
+    memory model - and any tau of K workers determine the output.
+
+    For float inputs the layer quantises x and W onto integer grids
+    (scale-and-round, the paper's footnote 1), runs the exact integer coded
+    matmul, and rescales.  ``quant_bits`` bounds the grids so the digit
+    stack fits the dtype (bounds.plan_p_prime is the policy).
+    """
+
+    def __init__(self, plan: CodedMatmulPlan, mesh: Mesh, *,
+                 axis: str = "model", quant_bits: int = 4,
+                 dtype=jnp.float32):
+        self.plan = plan
+        self.mesh = mesh
+        self.axis = axis
+        self.quant_bits = quant_bits
+        self.dtype = dtype
+
+    def __call__(self, x: jnp.ndarray, W: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        qmax = 2 ** (self.quant_bits - 1) - 1
+        sx = jnp.max(jnp.abs(x)) / qmax + 1e-9
+        sw = jnp.max(jnp.abs(W)) / qmax + 1e-9
+        xi = jnp.round(x / sx)
+        wi = jnp.round(W / sw)
+        yi = coded_matmul_mesh(xi.T, wi, self.plan, self.mesh, mask,
+                               axis=self.axis, dtype=self.dtype)
+        return (yi * (sx * sw)).astype(x.dtype)

@@ -1,0 +1,72 @@
+"""Elastic scaling: re-specialise the job when the healthy device set shrinks.
+
+Large jobs lose nodes.  Two recovery tiers here:
+
+1. IN-STEP (the paper's contribution): coded matmuls tolerate up to K - tau
+   erased workers per step with NO re-lowering - the erasure mask is data.
+   ``CodedElasticPolicy`` tracks the healthy mask and decides when losses
+   exceed the code's slack.
+
+2. RE-SPECIALISE: when slack is exhausted, pick the largest supported mesh
+   that fits the healthy device count, re-lower the step functions, and
+   restore from the latest checkpoint (parameters are resharded by jit's
+   in_shardings on load).  ``plan_shrink`` chooses the target mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["CodedElasticPolicy", "plan_shrink"]
+
+
+@dataclasses.dataclass
+class CodedElasticPolicy:
+    """Tracks worker health against the code's erasure budget."""
+
+    K: int
+    tau: int
+    healthy: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.healthy is None:
+            self.healthy = np.ones(self.K, dtype=bool)
+
+    @property
+    def slack(self) -> int:
+        return int(self.healthy.sum()) - self.tau
+
+    def mark_failed(self, worker: int) -> None:
+        self.healthy[worker] = False
+
+    def mark_recovered(self, worker: int) -> None:
+        self.healthy[worker] = True
+
+    def mask(self) -> np.ndarray:
+        return self.healthy.astype(np.float64)
+
+    @property
+    def must_respecialize(self) -> bool:
+        """True when another failure would make steps undecodable."""
+        return self.slack <= 0
+
+
+_SUPPORTED_MESHES: Tuple[Tuple[int, int], ...] = (
+    (16, 16), (8, 16), (8, 8), (4, 8), (4, 4), (2, 4), (2, 2), (1, 2), (1, 1),
+)
+
+
+def plan_shrink(healthy_devices: int,
+                meshes: Sequence[Tuple[int, int]] = _SUPPORTED_MESHES
+                ) -> Tuple[int, int]:
+    """Largest (data, model) mesh that fits the healthy device count.
+
+    Shrinking the data axis preserves the model-parallel layout (cheap
+    reshard); the checkpoint + deterministic data stream make the restart
+    exact (tests/test_substrate.py::TestTrainResume)."""
+    for d, m in meshes:
+        if d * m <= healthy_devices:
+            return (d, m)
+    raise ValueError(f"no supported mesh fits {healthy_devices} devices")

@@ -1,0 +1,191 @@
+"""Parameter/optimizer/cache sharding rules (logical axes per leaf).
+
+The layout implements ZeRO-3-style FSDP + Megatron TP + EP:
+  * every weight matrix has one dim on "tp"/"ep" (model axis) and one on
+    "fsdp" (data axes) - so params, master copies, and Adam moments are all
+    fully sharded across the whole mesh;
+  * scanned stacks carry a leading n_groups dim (never sharded);
+  * axes that do not divide evenly are dropped (see sharding.shard).
+
+Rules are keyed on the leaf's dict-key name, which is unique per layer kind.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules
+
+__all__ = ["param_logical_axes", "tree_shardings", "batch_logical_axes",
+           "cache_logical_axes"]
+
+# leaf name -> logical axes by rank (excluding any leading stack dim)
+_RULES = {
+    # embeddings / head
+    "table": ("tp", "fsdp"),
+    # attention
+    "wq": ("fsdp", "tp", None),
+    "wk": ("fsdp", "tp", None),
+    "wv": ("fsdp", "tp", None),
+    "wo": ("tp", None, "fsdp"),
+    "bq": ("tp", None),
+    "bk": ("tp", None),
+    "bv": ("tp", None),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # mlp
+    "w_gate": ("fsdp", "tp"),      # moe (E,d,ff) handled by rank below
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe
+    "router": (None, None),
+    "sh_gate": ("fsdp", "tp"),
+    "sh_up": ("fsdp", "tp"),
+    "sh_down": ("tp", "fsdp"),
+    # mamba
+    "w_in": ("fsdp", "tp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "w_x": ("tp", None),
+    "w_dt": (None, "tp"),
+    "dt_bias": ("tp",),
+    "A_log": ("tp", None),
+    "D": ("tp",),
+    "w_out": ("tp", "fsdp"),
+    # rwkv
+    "mu": (None, None),
+    "w_r": ("fsdp", "tp"),
+    "w_k": ("fsdp", "tp"),
+    "w_v": ("tp", "fsdp"),         # cmix w_v is (ff, d); tmix w_v is (d, d_attn) - rank-2 both; see _leaf_axes
+    "w_g": ("fsdp", "tp"),
+    "w_o": ("tp", "fsdp"),
+    "w_decay_base": ("tp",),
+    "w_decay_a": ("fsdp", None),
+    "w_decay_b": (None, "tp"),
+    "u": ("tp", None),
+    "ln_scale": ("tp",),
+    # norms
+    "scale": (None,),
+}
+
+# MoE expert tensors are rank-3 (E, d, ff) / (E, ff, d): E on "ep".
+_MOE_RANK3 = {
+    "w_gate": ("ep", "fsdp", None),
+    "w_up": ("ep", "fsdp", None),
+    "w_down": ("ep", None, "fsdp"),
+}
+
+# rwkv name collisions resolved by shape context: tmix w_v is (d, d_attn)
+# (shard out dim), cmix w_v is (d_ff, d) (shard in dim).  Both use
+# ("fsdp","tp")/( "tp","fsdp") - either way one dim each; keep simple:
+_RWKV_TMIX_WV = ("fsdp", "tp")
+
+
+def _leaf_axes(name: str, rank: int, stacked: bool) -> Tuple[Optional[str], ...]:
+    base_rank = rank - (1 if stacked else 0)
+    if name in _MOE_RANK3 and base_rank == 3:
+        ax = _MOE_RANK3[name]
+    elif name in _RULES:
+        ax = _RULES[name]
+        if len(ax) != base_rank:
+            ax = tuple(list(ax)[:base_rank]) + (None,) * max(0, base_rank - len(ax))
+    else:
+        ax = (None,) * base_rank
+    if stacked:
+        ax = (None,) + ax
+    return ax
+
+
+def param_logical_axes(params: Any) -> Any:
+    """Pytree of logical-axis tuples matching the params tree.
+
+    Leaves inside params["blocks"] are stacked (leading n_groups dim)."""
+
+    def walk(tree, stacked: bool):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v, stacked)
+            else:
+                out[k] = _leaf_axes(k, len(v.shape), stacked)
+        return out
+
+    result = {}
+    for k, v in params.items():
+        if k == "blocks":
+            result[k] = tuple(walk(b, True) for b in v)
+        else:
+            result[k] = walk(v, False)
+    return result
+
+
+def tree_shardings(rules: AxisRules, tree: Any, logical: Any) -> Any:
+    """Logical-axis tuples -> NamedSharding tree (divisibility-checked)."""
+
+    def one(leaf, axes):
+        resolved = []
+        for dim, name in zip(leaf.shape, axes):
+            phys = rules.physical(name) if name else None
+            if phys is None:
+                resolved.append(None)
+                continue
+            ax_list = phys if isinstance(phys, tuple) else (phys,)
+            size = 1
+            for a in ax_list:
+                size *= rules.mesh.shape[a]
+            resolved.append(phys if dim % size == 0 else None)
+        return NamedSharding(rules.mesh, P(*resolved))
+
+    return jax.tree.map(one, tree, logical,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_logical_axes(cfg, kind: str) -> Any:
+    """Logical axes for the input batch pytrees."""
+    if kind == "train":
+        if cfg.input_mode == "tokens":
+            return {"tokens": ("dp", None), "labels": ("dp", None)}
+        axes = {"embeds": ("dp", "sp", None), "labels": ("dp", None)}
+        if cfg.pos == "mrope":
+            axes["pos_ids"] = (None, "dp", None)
+        return axes
+    if kind == "prefill":
+        if cfg.input_mode == "tokens":
+            axes = {"tokens": ("dp", None)}
+        else:
+            axes = {"embeds": ("dp", "sp", None)}
+            if cfg.pos == "mrope":
+                axes["pos_ids"] = (None, "dp", None)
+        return axes
+    if kind == "decode":
+        if cfg.input_mode == "tokens":
+            axes = {"tokens": ("dp", None)}
+        else:
+            axes = {"embeds": ("dp", None, None)}
+            if cfg.pos == "mrope":
+                axes["pos_ids"] = (None, "dp", None)
+        return axes
+    raise ValueError(kind)
+
+
+def cache_logical_axes(cfg) -> Any:
+    """Logical axes for the serve cache (matches models.lm.cache_shapes)."""
+    out = []
+    for mixer, _ in cfg.pattern:
+        if mixer in ("attn", "attn_local"):
+            one = {"k": (None, "dp", "sp", None, None),
+                   "v": (None, "dp", "sp", None, None)}
+        elif mixer == "mamba":
+            one = {"conv": (None, "dp", None, "tp"),
+                   "ssm": (None, "dp", "tp", None)}
+        elif mixer == "rwkv":
+            one = {"shift_t": (None, "dp", None),
+                   "shift_c": (None, "dp", None),
+                   "wkv": (None, "dp", "tp", None, None)}
+        else:
+            raise ValueError(mixer)
+        out.append(one)
+    return tuple(out)

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the coded-matmul hot spots.
+
+Three stages of the paper's pipeline, each with a pure-jnp oracle in ref.py
+and a padded/jit'd wrapper in ops.py:
+
+  coded_encode  - (K x P) @ (P x E) coefficient combine (bandwidth-bound)
+  block_matmul  - per-worker A~^T B~ MXU-tiled matmul (compute-bound)
+  coded_decode  - inverse-Vandermonde panel @ survivor outputs with FUSED
+                  digit extraction (round/mod-s/recenter) - the decode never
+                  materialises X in HBM.
+
+Off-TPU the wrappers run the kernels in interpret mode (kernel bodies
+execute on CPU), so correctness tests sweep real code paths.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.block_matmul import matmul_t_pallas
+from repro.kernels.coded_decode import decode_pallas
+from repro.kernels.coded_encode import encode_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+
+__all__ = ["ops", "ref", "matmul_t_pallas", "decode_pallas", "encode_pallas",
+           "mamba_scan_pallas"]

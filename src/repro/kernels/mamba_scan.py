@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused Mamba selective-scan (beyond-paper optimization).
+
+The pure-JAX chunked scan (models/mamba.py) materialises (B, c, d, s) decay
+/update/state tensors in HBM every chunk plus O(log c) associative-scan
+passes - the roofline shows it DOMINATES HBM traffic for Jamba training
+(EXPERIMENTS.md SecPerf).  This kernel keeps the (d_blk, s) state resident
+in VMEM scratch across a sequential grid walk over sequence chunks, so HBM
+traffic collapses to: read dt/x/B/C once + write y once (~48 B per (t, d)
+element instead of several hundred).
+
+Grid (B, d/d_blk, S/c): the LAST axis is the sequence walk - TPU executes
+it in order, so the h scratch legally carries state between steps (standard
+revisiting pattern).  Inside a step a fori_loop runs the c-step recurrence
+on VMEM tiles:
+    h   = exp(dt_t * A) * h + (dt_t * x_t) B_t
+    y_t = (h . C_t) + D * x_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba_scan_pallas"]
+
+
+def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_log_ref, d_ref,
+                 y_ref, hout_ref, hbound_ref, h_ref,
+                 *, c_steps: int, n_chunks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    # chunk-ENTRY state checkpoint (h0 of this chunk) - the backward pass
+    # recomputes within-chunk states from these
+    hbound_ref[0, 0] = h_ref[...]
+
+    A = -jnp.exp(a_log_ref[...])          # (d_blk, s)
+    D = d_ref[...]                        # (d_blk,)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t]               # (d_blk,)
+        x_t = x_ref[0, t]                 # (d_blk,)
+        b_t = b_ref[0, t]                 # (s,)
+        c_t = c_ref[0, t]                 # (s,)
+        a_t = jnp.exp(dt_t[:, None] * A)  # (d_blk, s)
+        upd = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = a_t * h + upd
+        y_t = jnp.sum(h * c_t[None, :], axis=1) + D * x_t
+        y_ref[0, t] = y_t
+        return h
+
+    h = jax.lax.fori_loop(0, c_steps, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(pl.program_id(2) == n_chunks - 1)
+    def _flush():
+        hout_ref[0] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "d_blk", "interpret"))
+def mamba_scan_pallas(
+    dt: jnp.ndarray,     # (B, S, d) f32 - post-softplus step sizes
+    x: jnp.ndarray,      # (B, S, d) f32 - conv+silu activations
+    Bm: jnp.ndarray,     # (B, S, s) f32 - input projections
+    Cm: jnp.ndarray,     # (B, S, s) f32 - output projections
+    A_log: jnp.ndarray,  # (d, s) f32
+    D: jnp.ndarray,      # (d,)   f32
+    *,
+    chunk: int = 128,
+    d_blk: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y (B, S, d) f32, h_final (B, d, s) f32)."""
+    B, S, d = dt.shape
+    s = A_log.shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    d_blk = min(d_blk, d)
+    while d % d_blk:
+        d_blk //= 2
+    n_chunks = S // chunk
+
+    kern = functools.partial(_scan_kernel, c_steps=chunk, n_chunks=n_chunks)
+    grid = (B, d // d_blk, n_chunks)
+    y, h_fin, h_bounds = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_blk), lambda b, i, k: (b, k, i)),  # dt
+            pl.BlockSpec((1, chunk, d_blk), lambda b, i, k: (b, k, i)),  # x
+            pl.BlockSpec((1, chunk, s), lambda b, i, k: (b, k, 0)),      # B
+            pl.BlockSpec((1, chunk, s), lambda b, i, k: (b, k, 0)),      # C
+            pl.BlockSpec((d_blk, s), lambda b, i, k: (i, 0)),            # A_log
+            pl.BlockSpec((d_blk,), lambda b, i, k: (i,)),                # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_blk), lambda b, i, k: (b, k, i)),  # y
+            pl.BlockSpec((1, d_blk, s), lambda b, i, k: (b, i, 0)),      # h
+            pl.BlockSpec((1, 1, d_blk, s), lambda b, i, k: (b, k, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, d, s), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_chunks, d, s), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_blk, s), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, Bm, Cm, A_log, D)
+    return y, h_fin, h_bounds

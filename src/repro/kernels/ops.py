@@ -1,0 +1,81 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Pad-to-tile, backend dispatch (interpret=True off-TPU so the kernel bodies
+execute on CPU for tests/benches), and plan-level convenience entry points
+used by the distributed runtime.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.block_matmul import matmul_t_pallas
+from repro.kernels.coded_decode import decode_pallas
+from repro.kernels.coded_encode import encode_pallas
+
+__all__ = ["encode", "decode", "matmul_t", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _pad_last(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[-1]) % multiple
+    if pad == 0:
+        return x
+    width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, width)
+
+
+def encode(coeff: jnp.ndarray, blocks: jnp.ndarray, *, e_blk: int = 2048) -> jnp.ndarray:
+    """coeff: (K, P), blocks: (P, E) -> (K, E) coded blocks (flattened)."""
+    if jnp.iscomplexobj(coeff):
+        # Pallas TPU has no complex support; unit-circle plans use the oracle.
+        return ref.encode_ref(coeff, blocks)
+    E = blocks.shape[-1]
+    e_blk = min(e_blk, int(2 ** np.ceil(np.log2(max(E, 8)))))
+    bp = _pad_last(blocks, e_blk)
+    out = encode_pallas(coeff, bp, e_blk=e_blk, interpret=_interpret())
+    return out[:, :E]
+
+
+def decode(W: jnp.ndarray, Y: jnp.ndarray, s: float, *, extract: bool = True,
+           e_blk: int = 2048) -> jnp.ndarray:
+    """W: (mn, tau), Y: (tau, E) -> (mn, E) decoded + digit-extracted."""
+    if jnp.iscomplexobj(W) or jnp.iscomplexobj(Y):
+        return ref.decode_ref(W, Y, s)
+    E = Y.shape[-1]
+    e_blk = min(e_blk, int(2 ** np.ceil(np.log2(max(E, 8)))))
+    Yp = _pad_last(Y, e_blk)
+    out = decode_pallas(W, Yp, s=float(s), extract=extract, e_blk=e_blk,
+                        interpret=_interpret())
+    return out[:, :E]
+
+
+def matmul_t(A: jnp.ndarray, B: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+             bk: int = 512, out_dtype=None) -> jnp.ndarray:
+    """A: (v, r), B: (v, t) -> A^T B with MXU tiling; pads to tile multiples."""
+    if jnp.iscomplexobj(A) or jnp.iscomplexobj(B):
+        return ref.matmul_t_ref(A, B, out_dtype)
+    v, r = A.shape
+    _, t = B.shape
+    bm_ = min(bm, int(2 ** np.ceil(np.log2(max(r, 8)))))
+    bn_ = min(bn, int(2 ** np.ceil(np.log2(max(t, 8)))))
+    bk_ = min(bk, int(2 ** np.ceil(np.log2(max(v, 8)))))
+    Ap = jnp.pad(A, (((-v) % bk_ and (0, (-v) % bk_)) or (0, 0),
+                     ((-r) % bm_ and (0, (-r) % bm_)) or (0, 0)))
+    Bp = jnp.pad(B, (((-v) % bk_ and (0, (-v) % bk_)) or (0, 0),
+                     ((-t) % bn_ and (0, (-t) % bn_)) or (0, 0)))
+    out = matmul_t_pallas(Ap, Bp, bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype,
+                          interpret=_interpret())
+    return out[:r, :t]

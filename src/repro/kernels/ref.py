@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (interpret mode on
+CPU, real lowering on TPU).  Keep them boring and obviously correct.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["encode_ref", "decode_ref", "matmul_t_ref"]
+
+
+def encode_ref(coeff: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
+    """coeff: (K, P), blocks: (P, E) -> (K, E).
+
+    The encode stage of the coded matmul: worker k's coded block is the
+    coefficient-weighted sum of all P = p*m (or p*n) source blocks.
+    """
+    return jnp.dot(coeff, blocks.astype(coeff.dtype),
+                   preferred_element_type=coeff.dtype)
+
+
+def decode_ref(W: jnp.ndarray, Y: jnp.ndarray, s: float) -> jnp.ndarray:
+    """W: (mn, tau) useful rows of the inverse Vandermonde; Y: (tau, E)
+    survivor outputs -> (mn, E) decoded C blocks (digit-extracted).
+
+    X = W @ Y, then the paper's Sec. III-C extraction:
+    round -> mod s in [0, s) -> recenter to (-s/2, s/2].
+    """
+    X = jnp.dot(W, Y.astype(W.dtype), preferred_element_type=W.dtype)
+    if jnp.iscomplexobj(X):
+        X = X.real
+    R = jnp.round(X)
+    C_hat = jnp.mod(R, s)
+    return jnp.where(C_hat <= s / 2, C_hat, C_hat - s)
+
+
+def matmul_t_ref(A: jnp.ndarray, B: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """A: (v, r), B: (v, t) -> A^T @ B: (r, t) - one worker's task."""
+    acc = jnp.float32 if A.dtype in (jnp.bfloat16, jnp.float16) else A.dtype
+    out = jnp.dot(A.T, B, preferred_element_type=acc)
+    return out.astype(out_dtype or A.dtype)
+
+
+def mamba_scan_ref(dt, x, Bm, Cm, A_log, D):
+    """Sequential selective-scan oracle for the fused Pallas kernel.
+
+    dt/x: (B, S, d) f32; Bm/Cm: (B, S, s) f32 -> (y (B,S,d), h (B,d,s))."""
+    import jax
+
+    A = -jnp.exp(A_log)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        a = jnp.exp(dt_t[:, :, None] * A[None])
+        bb = (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        h = a * h + bb
+        y = jnp.sum(h * c_t[:, None, :], -1) + D[None] * x_t
+        return h, y
+
+    h0 = jnp.zeros((dt.shape[0], dt.shape[2], A_log.shape[1]), jnp.float32)
+    hf, ys = jax.lax.scan(
+        step, h0, (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+                   Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hf

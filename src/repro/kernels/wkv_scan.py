@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused RWKV-6 WKV scan (beyond-paper optimization #2).
+
+Same structure as kernels/mamba_scan.py, applied to the Finch recurrence
+(state S is a (dk, dv) matrix per head, decay w is per-dk):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+The pure-JAX chunked path (models/rwkv6._wkv_chunked) materialises
+(B, c, H, dk, dv) decay/update tensors plus O(log c) associative-scan
+passes per chunk - the roofline shows rwkv6-3b train_4k memory-bound at
+160 s (worst remaining cell).  Here the (dk, dv) state stays in VMEM
+scratch across a sequential grid walk over sequence chunks; HBM traffic
+collapses to reading w/k/v/r once and writing y once.
+
+Grid (B, H, S/c), last axis sequential.  Chunk-ENTRY state checkpoints are
+emitted for the custom-VJP backward (models/rwkv6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv_scan_pallas"]
+
+
+def _wkv_kernel(w_ref, k_ref, v_ref, r_ref, u_ref,
+                y_ref, sout_ref, sbound_ref, s_ref,
+                *, c_steps: int, n_chunks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    sbound_ref[0, 0, 0] = s_ref[...]
+    u = u_ref[0]                                   # (dk,)
+
+    def step(t, S):
+        w_t = w_ref[0, t, 0]                       # (dk,)
+        k_t = k_ref[0, t, 0]                       # (dk,)
+        v_t = v_ref[0, t, 0]                       # (dv,)
+        r_t = r_ref[0, t, 0]                       # (dk,)
+        b_t = k_t[:, None] * v_t[None, :]          # (dk, dv)
+        eff = S + u[:, None] * b_t
+        y_ref[0, t, 0] = jnp.sum(r_t[:, None] * eff, axis=0)
+        return w_t[:, None] * S + b_t
+
+    S = jax.lax.fori_loop(0, c_steps, step, s_ref[...])
+    s_ref[...] = S
+
+    @pl.when(pl.program_id(2) == n_chunks - 1)
+    def _flush():
+        sout_ref[0, 0] = S
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_scan_pallas(
+    w: jnp.ndarray,   # (B, S, H, dk) f32 per-step decay in (0, 1)
+    k: jnp.ndarray,   # (B, S, H, dk) f32
+    v: jnp.ndarray,   # (B, S, H, dv) f32
+    r: jnp.ndarray,   # (B, S, H, dk) f32
+    u: jnp.ndarray,   # (H, dk) f32 bonus
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,dv), S_fin (B,H,dk,dv), S_bounds (B,nc,H,dk,dv))."""
+    B, S, H, dk = k.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    kern = functools.partial(_wkv_kernel, c_steps=chunk, n_chunks=n_chunks)
+    grid = (B, H, n_chunks)
+    in_spec_k = pl.BlockSpec((1, chunk, 1, dk), lambda b, h, c: (b, c, h, 0))
+    in_spec_v = pl.BlockSpec((1, chunk, 1, dv), lambda b, h, c: (b, c, h, 0))
+    y, s_fin, s_bounds = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[in_spec_k, in_spec_k, in_spec_v, in_spec_k,
+                  pl.BlockSpec((1, dk), lambda b, h, c: (h, 0))],
+        out_specs=[
+            in_spec_v,                                            # y
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, dk, dv), lambda b, h, c: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_chunks, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(w, k, v, r, u)
+    return y, s_fin, s_bounds

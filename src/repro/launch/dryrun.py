@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: jit lowering
+with abstract (ShapeDtypeStruct) params/optimizer/cache/batch - nothing is
+allocated - then XLA SPMD-compiles for the production mesh.  Outputs
+memory_analysis (fits-per-device), cost_analysis (FLOPs/bytes), and the
+collective-bytes breakdown parsed from the partitioned HLO, cached as JSON
+under results/dryrun/ for the roofline stage.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.distributed.sharding import axis_rules, default_rules
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_batch,
+    abstract_cache,
+    abstract_state,
+    input_specs,
+)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.optim import OptConfig
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               cfg_overrides: dict | None = None, fsdp: bool = True):
+    """Returns (lowered, meta) for one cell.
+
+    ``cfg_overrides``/``fsdp`` select perf-variant lowerings for the
+    hillclimb (EXPERIMENTS.md SecPerf); defaults = baseline."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        raise SystemExit(f"{arch} x {shape_name}: {why}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh, fsdp=fsdp)
+    with axis_rules(rules):
+        if shape.kind == "train":
+            params, opt = abstract_state(cfg, rules, with_opt=True)
+            batch = abstract_batch(cfg, shape, rules)
+            step = make_train_step(cfg, OptConfig(), rules)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            params, _ = abstract_state(cfg, rules, with_opt=False)
+            batch = abstract_batch(cfg, shape, rules)
+            step = make_prefill_step(cfg, rules, S_max=shape.seq_len)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            params, _ = abstract_state(cfg, rules, with_opt=False)
+            batch = abstract_batch(cfg, shape, rules)
+            cache = abstract_cache(cfg, shape.global_batch, shape.seq_len, rules)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_serve_step(cfg, rules)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params, cache, batch, pos)
+    return lowered, {"arch": arch, "shape": shape_name,
+                     "multi_pod": multi_pod, "kind": shape.kind,
+                     "n_devices": mesh.size}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             hlo_out: str | None = None, save_hlo: bool = True,
+             cfg_overrides: dict | None = None, fsdp: bool = True,
+             tag_suffix: str = "") -> dict:
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod,
+                               cfg_overrides=cfg_overrides, fsdp=fsdp)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = analyze_hlo(hlo)
+    if hlo_out:
+        Path(hlo_out).write_text(hlo)
+    if save_hlo:
+        # compressed HLO kept next to the JSON: re-analysis (new roofline
+        # metrics, debugging) never needs a recompile
+        import gzip
+        tag = (f"{arch}__{shape_name}__"
+               f"{'multipod' if multi_pod else 'singlepod'}{tag_suffix}")
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        with gzip.open(RESULTS_DIR / f"{tag}.hlo.gz", "wt") as f:
+            f.write(hlo)
+
+    result = {
+        **meta,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                          "transcendentals", "optimal_seconds")
+                 if isinstance(cost, dict) and k in cost},
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+        # true per-device dot FLOPs / HBM bytes with while-trip multipliers
+        # (XLA's cost_analysis counts scan bodies once - see hlo_analysis.py)
+        "dot_flops": coll.dot_flops,
+        "dot_count": coll.dot_count,
+        "hbm_bytes": coll.hbm_bytes,
+        "hlo_lines": hlo.count("\n"),
+    }
+    return result
+
+
+def reanalyze_all():
+    """Rebuild analyzer-derived JSON fields from the stored .hlo.gz files
+    (no recompilation) - run after hlo_analysis.py changes."""
+    import gzip
+    n = 0
+    for gz in sorted(RESULTS_DIR.glob("*.hlo.gz")):
+        jpath = gz.with_suffix("").with_suffix(".json")
+        if not jpath.exists():
+            continue
+        res = json.loads(jpath.read_text())
+        stats = analyze_hlo(gzip.open(gz, "rt").read())
+        res["collectives"] = {
+            "bytes_by_kind": stats.bytes_by_kind,
+            "count_by_kind": stats.count_by_kind,
+            "total_bytes": stats.total_bytes,
+        }
+        res["dot_flops"] = stats.dot_flops
+        res["dot_count"] = stats.dot_count
+        res["hbm_bytes"] = stats.hbm_bytes
+        jpath.write_text(json.dumps(res, indent=2))
+        n += 1
+        print(f"[rean] {jpath.name}: flops={stats.dot_flops:.3e} "
+              f"hbm={stats.hbm_bytes:.3e} coll={stats.total_bytes:.3e}")
+    print(f"reanalyzed {n} cells")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--hlo-out")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute analyzer fields from stored .hlo.gz")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze_all()
+        return
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            cfg = get_config(arch)
+            for s in SHAPES:
+                if shape_applicable(cfg, s)[0]:
+                    cells.append((arch, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, s in cells:
+        for mp in meshes:
+            tag = f"{arch}__{s}__{'multipod' if mp else 'singlepod'}"
+            out_path = RESULTS_DIR / f"{tag}.json"
+            if args.skip_existing and out_path.exists():
+                print(f"[skip] {tag}")
+                continue
+            print(f"[run ] {tag} ...", flush=True)
+            try:
+                res = run_cell(arch, s, mp, hlo_out=args.hlo_out)
+                out_path.write_text(json.dumps(res, indent=2))
+                mem = res["memory"]
+                per_dev = (mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+                print(f"[ ok ] {tag}: compile={res['compile_s']}s "
+                      f"flops={res['cost'].get('flops'):.3e} "
+                      f"coll={res['collectives']['total_bytes']:.3e}B "
+                      f"mem/dev={per_dev/2**30:.2f}GiB", flush=True)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((tag, str(e)))
+                out_path.with_suffix(".err").write_text(
+                    f"{e}\n{traceback.format_exc()}")
+                print(f"[FAIL] {tag}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, e in failures:
+            print(f"  {tag}: {e.splitlines()[0] if e else e}")
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

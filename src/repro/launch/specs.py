@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+No allocation ever happens here: params, optimizer state, caches, and
+batches are all abstract stand-ins (weak-type-correct, shardable), used by
+jit(...).lower() in the dry-run and by eval_shape-based tooling.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.distributed.param_sharding import (
+    batch_logical_axes,
+    cache_logical_axes,
+    param_logical_axes,
+    tree_shardings,
+)
+from repro.distributed.sharding import AxisRules
+from repro.models import ModelConfig, cache_shapes, param_shapes
+from repro.optim import adamw_init_shapes
+
+__all__ = ["input_specs", "attach_shardings", "abstract_state"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract batch for one shape spec."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_mode == "tokens":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        out = {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.pos == "mrope":
+            out["pos_ids"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        return out
+    if shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        out = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        if cfg.pos == "mrope":
+            out["pos_ids"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        return out
+    if shape.kind == "decode":
+        if cfg.input_mode == "tokens":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        out = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}
+        if cfg.pos == "mrope":
+            out["pos_ids"] = jax.ShapeDtypeStruct((3, B, 1), jnp.int32)
+        return out
+    raise ValueError(shape.kind)
+
+
+def attach_shardings(rules: AxisRules, tree: Any, logical: Any) -> Any:
+    """Rebuild ShapeDtypeStructs with NamedShardings attached."""
+    shardings = tree_shardings(rules, tree, logical)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def abstract_state(cfg: ModelConfig, rules: Optional[AxisRules],
+                   with_opt: bool = True):
+    """(params_abstract, opt_abstract) with shardings when rules given."""
+    ps = param_shapes(cfg)
+    logical = param_logical_axes(ps)
+    if rules is not None:
+        ps = attach_shardings(rules, ps, logical)
+    opt = None
+    if with_opt:
+        opt = adamw_init_shapes(param_shapes(cfg))
+        if rules is not None:
+            opt_logical = {
+                "step": (),
+                "master": logical,
+                "mu": logical,
+                "nu": logical,
+            }
+            opt = attach_shardings(rules, opt, opt_logical)
+    return ps, opt
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec,
+                   rules: Optional[AxisRules]):
+    b = input_specs(cfg, shape)
+    if rules is None:
+        return b
+    logical = batch_logical_axes(cfg, shape.kind)
+    return attach_shardings(rules, b, logical)
+
+
+def abstract_cache(cfg: ModelConfig, B: int, S_max: int,
+                   rules: Optional[AxisRules]):
+    c = cache_shapes(cfg, B, S_max)
+    if rules is None:
+        return c
+    logical = cache_logical_axes(cfg)
+    return tuple(attach_shardings(rules, cd, ld)
+                 for cd, ld in zip(c, logical))

@@ -1,0 +1,51 @@
+"""Step functions: train_step / prefill_step / serve_step builders.
+
+Each builder returns a pure function suitable for jax.jit with explicit
+in/out shardings; the sharding-rules context is entered inside the function
+so shard() annotations resolve against the active mesh during tracing.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import AxisRules, axis_rules
+from repro.models import ModelConfig, decode_step, prefill, train_loss
+from repro.optim import OptConfig, adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step"]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    rules: Optional[AxisRules] = None):
+    def train_step(params, opt_state, batch):
+        with axis_rules(rules):
+            loss, grads = jax.value_and_grad(
+                lambda p: train_loss(p, cfg, batch))(params)
+            new_params, new_opt, metrics = adamw_update(opt_cfg, grads, opt_state)
+            metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Optional[AxisRules] = None,
+                      S_max: Optional[int] = None):
+    def prefill_step(params, batch):
+        with axis_rules(rules):
+            logits, cache = prefill(params, cfg, batch, S_max=S_max)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Optional[AxisRules] = None):
+    def serve_step(params, cache, batch, pos):
+        with axis_rules(rules):
+            logits, new_cache = decode_step(params, cfg, cache, batch, pos)
+        return logits, new_cache
+
+    return serve_step

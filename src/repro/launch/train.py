@@ -1,0 +1,117 @@
+"""Training driver: data pipeline -> jit'd train step -> checkpoints.
+
+Runs anywhere: single CPU device (examples, smoke configs), a debug mesh
+(XLA_FLAGS=--xla_force_host_platform_device_count=N), or the production
+mesh on real hardware.  Fault tolerance: periodic atomic checkpoints
+(params + optimizer + data-stream step); --resume restarts from the newest
+committed step and replays the exact data stream.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data import make_pipeline
+from repro.distributed.sharding import axis_rules, default_rules
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim import OptConfig, adamw_init
+
+
+def build(arch: str, smoke: bool, seq: int, batch: int, lr: float,
+          steps: int, mesh=None):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    opt_cfg = OptConfig(lr=lr, warmup_steps=max(2, steps // 20),
+                        total_steps=steps)
+    rules = default_rules(mesh) if mesh is not None else None
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, rules),
+                      donate_argnums=(0, 1))
+    pipe = make_pipeline(cfg.vocab, seq, batch)
+    return cfg, step_fn, pipe
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, step_fn, pipe = build(args.arch, args.smoke, args.seq, args.batch,
+                               args.lr, args.steps)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt_state = adamw_init(params)
+    start = 0
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start, extra = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        print(f"resumed from step {start}")
+
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq}")
+
+    losses = []
+    t0 = time.time()
+    for t in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        if cfg.input_mode == "embeds":
+            # frontend stub: deterministic pseudo-embeddings from token ids
+            tok = batch.pop("tokens")
+            emb = _stub_embeds(tok, cfg.d_model)
+            batch["embeds"] = emb
+            if cfg.pos == "mrope":
+                B, S = tok.shape
+                pid = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+                batch["pos_ids"] = pid.astype(jnp.int32)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {t:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, t + 1, (params, opt_state),
+                            extra={"data_step": t + 1})
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, (params, opt_state),
+                        extra={"data_step": args.steps})
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+def _stub_embeds(tokens: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Deterministic frontend stub: hash token ids into pseudo-embeddings
+    (stands in for EnCodec frames / ViT patches per the assignment)."""
+    B, S = tokens.shape
+    base = jnp.arange(d, dtype=jnp.float32)
+    phase = tokens[..., None].astype(jnp.float32)
+    return (jnp.sin(phase * 0.01 + base * 0.1) * 0.1).astype(jnp.bfloat16)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model zoo: pattern-based LM stacks (dense / MoE / SSM / hybrid)."""
+from repro.models.lm import (
+    ModelConfig,
+    cache_shapes,
+    decode_step,
+    init_cache,
+    init_params,
+    param_shapes,
+    prefill,
+    train_loss,
+)
+from repro.models.moe import MoEConfig
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "cache_shapes", "decode_step", "init_cache",
+    "init_params", "param_shapes", "prefill", "train_loss",
+]

@@ -1,0 +1,286 @@
+"""GQA attention: chunked-causal (train/prefill) and cached decode paths.
+
+Training/prefill uses an online-softmax chunked attention (pure JAX "flash"
+schedule): the (S x S) score matrix never materialises - q is processed in
+static chunks, each attending to a statically-sliced kv range, so
+* causal FLOPs are exact (no 2x masked waste), and
+* sliding-window layers are automatically sub-quadratic (the kv slice per
+  q-chunk is [end - window - q_chunk, end), a static band).
+
+Tensor parallelism follows Megatron: heads sharded over "tp", activations
+sequence-sharded ("sp") outside the block, gathered to full-S inside.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models.layers import apply_rope, rms_head_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, d_head: int,
+              qk_norm: bool = False, qkv_bias: bool = False,
+              dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, n_heads, d_head), dtype) * sc,
+        "wk": jax.random.normal(ks[1], (d, n_kv, d_head), dtype) * sc,
+        "wv": jax.random.normal(ks[2], (d, n_kv, d_head), dtype) * sc,
+        "wo": jax.random.normal(ks[3], (n_heads, d_head, d), dtype)
+               * (1.0 / math.sqrt(n_heads * d_head)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, d_head), dtype)
+        p["bk"] = jnp.zeros((n_kv, d_head), dtype)
+        p["bv"] = jnp.zeros((n_kv, d_head), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((d_head,), jnp.float32)
+    return p
+
+
+def attn_shapes(d: int, n_heads: int, n_kv: int, d_head: int,
+                qk_norm: bool = False, qkv_bias: bool = False,
+                dtype=jnp.bfloat16):
+    p = {
+        "wq": jax.ShapeDtypeStruct((d, n_heads, d_head), dtype),
+        "wk": jax.ShapeDtypeStruct((d, n_kv, d_head), dtype),
+        "wv": jax.ShapeDtypeStruct((d, n_kv, d_head), dtype),
+        "wo": jax.ShapeDtypeStruct((n_heads, d_head, d), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jax.ShapeDtypeStruct((n_heads, d_head), dtype)
+        p["bk"] = jax.ShapeDtypeStruct((n_kv, d_head), dtype)
+        p["bv"] = jax.ShapeDtypeStruct((n_kv, d_head), dtype)
+    if qk_norm:
+        p["q_norm"] = jax.ShapeDtypeStruct((d_head,), jnp.float32)
+        p["k_norm"] = jax.ShapeDtypeStruct((d_head,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, x):
+    """x (B, S, d) -> q (B,S,H,hd), k/v (B,S,KH,hd), heads tp-sharded."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if "q_norm" in params:
+        q = rms_head_norm(params["q_norm"], q)
+        k = rms_head_norm(params["k_norm"], k)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (train / prefill)
+
+
+def repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KH, hd) -> (B, S, KH*groups, hd).  Train/prefill GQA layout:
+    repeating kv lets the full H=KH*G head axis shard over tp even when
+    KH < tp (the cache still stores only KH heads)."""
+    if groups == 1:
+        return k
+    B, S, KH, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None], (B, S, KH, groups, hd)
+                            ).reshape(B, S, KH * groups, hd)
+
+
+def _attend_tile(q, k, v, mask):
+    """q (B,H,qc,hd), k/v (B,H,kc,hd), mask (qc,kc) bool ->
+    per-tile (scores-max, exp-sum, weighted-v) for online softmax."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                      # (B,H,qc)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def mha_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """q (B,S,H,hd), k/v (B,S,KH,hd) -> (B,S,H,hd).  Exact-FLOPs chunked
+    causal attention; ``window`` enables the sliding-window band.  kv heads
+    are repeated to H inside so the head axis tp-shards uniformly."""
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    in_dtype = q.dtype
+    scale = 1.0 / math.sqrt(hd)
+    k = shard(repeat_kv(k, G), "dp", None, "tp", None)
+    v = shard(repeat_kv(v, G), "dp", None, "tp", None)
+    q = (q * scale).transpose(0, 2, 1, 3)  # B,H,S,hd
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+
+    q_chunk = min(q_chunk, S)
+    while S % q_chunk:
+        q_chunk //= 2
+    n_q = S // q_chunk
+
+    outs = []
+    for i in range(n_q):  # static unroll: exact causal/banded FLOPs
+        q_start = i * q_chunk
+        q_end = q_start + q_chunk
+        kv_start = 0
+        if window is not None:
+            kv_start = max(0, q_end - window - q_chunk)
+        kv_len = q_end - kv_start if causal else S - kv_start
+        qi = q[:, :, q_start:q_end]
+        ki = kT[:, :, kv_start:kv_start + kv_len]
+        vi = vT[:, :, kv_start:kv_start + kv_len]
+
+        n_kv = max(1, math.ceil(kv_len / kv_chunk))
+        m = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        qpos = q_start + jnp.arange(q_chunk)
+        for j in range(n_kv):  # static inner tiles
+            ks_ = j * kv_chunk
+            ke_ = min(ks_ + kv_chunk, kv_len)
+            kpos = kv_start + ks_ + jnp.arange(ke_ - ks_)
+            mask = jnp.ones((q_chunk, ke_ - ks_), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            mt, lt, ot = _attend_tile(qi, ki[:, :, ks_:ke_], vi[:, :, ks_:ke_], mask)
+            m_new = jnp.maximum(m, mt)
+            c_old = jnp.exp(m - m_new)
+            c_new = jnp.exp(mt - m_new)
+            l = l * c_old + lt * c_new
+            acc = acc * c_old[..., None] + ot * c_new[..., None]
+            m = m_new
+        outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+
+    o = jnp.concatenate(outs, axis=2)  # (B,H,S,hd)
+    return o.transpose(0, 2, 1, 3).astype(in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# full blocks
+
+
+def attn_forward(
+    params,
+    x: jnp.ndarray,
+    cos_sin: Tuple[jnp.ndarray, jnp.ndarray],
+    *,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    return_kv: bool = False,
+    proj_first: bool = False,
+):
+    """Full-sequence attention (train / prefill).
+
+    ``proj_first=False`` (baseline): gather the sequence-sharded residual to
+    full S before QKV - the Megatron-SP default, moving (B,S,d) per layer.
+    ``proj_first=True`` (optimized): project on the SHARDED sequence, then
+    let the q/k/v sharding constraints reshard the head-sharded projections
+    (all-to-all on (B,S,H/tp,hd) - 16x fewer bytes at tp=16).  See
+    EXPERIMENTS.md SecPerf."""
+    if not proj_first:
+        x = shard(x, "dp", None, None)  # gather sequence for the block
+    q, k, v = _project_qkv(params, x)
+    cos, sin = cos_sin
+    q = apply_rope(q, cos, sin) if cos is not None else q
+    k = apply_rope(k, cos, sin) if cos is not None else k
+    o = mha_chunked(q.astype(x.dtype), k.astype(x.dtype), v, window=window,
+                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), params["wo"])
+    y = shard(y, "dp", "sp", None)  # back to sequence-sharded residual
+    if return_kv:
+        return y, (k.astype(x.dtype), v)
+    return y
+
+
+def attn_decode_step(
+    params,
+    x: jnp.ndarray,
+    cos_sin: Tuple[jnp.ndarray, jnp.ndarray],
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+):
+    """One-token decode.  x (B, 1, d); cache_k/v (B, S_c, KH, hd) sharded
+    (dp, sp); pos () int32 - current absolute position (whole batch).
+
+    Two cache layouts:
+    * full  (S_c = S_max >= pos): k written at index ``pos``.
+    * ring  (S_c = window, for sliding-window layers): slot ``pos % window``
+      holds token position t_i = pos - ((pos - i) mod window); keys are
+      stored post-RoPE so absolute positions are baked in.
+
+    Decode shards the cache over SEQUENCE (sp), not heads: scores reduce
+    over the sharded S_c axis (flash-decoding collective schedule).
+    Returns (y (B, 1, d), cache_k, cache_v updated)."""
+    B, one, d = x.shape
+    q, k_new, v_new = _project_qkv(params, x)
+    cos, sin = cos_sin
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    S_c = cache_k.shape[1]
+    ring = window is not None and S_c == window
+    write_at = jnp.mod(pos, S_c) if ring else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), write_at, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), write_at, axis=1)
+    cache_k = shard(cache_k, "dp", "sp", None, None)
+    cache_v = shard(cache_v, "dp", "sp", None, None)
+
+    KH = cache_k.shape[2]
+    H = q.shape[2]
+    G = H // KH
+    hd = q.shape[3]
+    scale = 1.0 / math.sqrt(hd)
+    qh = (q * scale).reshape(B, KH, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh.astype(jnp.float32),
+                   cache_k.astype(jnp.float32))  # (B,KH,G,S_c)
+    idx = jnp.arange(S_c)
+    if ring:
+        tpos = pos - jnp.mod(pos - idx, S_c)  # absolute token pos per slot
+        valid = tpos >= 0
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid &= (pos - idx) < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(jnp.float32),
+                   cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, H, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return shard(y, "dp", None, None), cache_k, cache_v

@@ -1,0 +1,194 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings, loss.
+
+Pure-function style: ``init_*`` returns a param dict, ``apply`` functions
+take (params, x).  All layers take explicit dtypes; logical sharding
+annotations come from repro.distributed.shard.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head RMS norm (qk-norm): x (..., hd), scale (hd,)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_freqs(d_rot: int, theta: float, dtype=jnp.float32):
+    """Inverse frequencies for RoPE: (d_rot/2,)."""
+    exponents = jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot
+    return (1.0 / (theta ** exponents)).astype(dtype)
+
+
+def rope_cos_sin(positions: jnp.ndarray, d_rot: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, d_rot/2) in f32."""
+    inv = rope_freqs(d_rot, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (B, S, H, hd) with leading rotary half-pairs; cos/sin (B, S, hd/2)
+    or (S, hd/2).  Rotates pairs (x1, x2) = (x[..., :hd/2], x[..., hd/2:])
+    (NeoX / llama convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos_b = cos[None, :, None, :]
+        sin_b = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos_b = cos[:, :, None, :]
+        sin_b = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos_b - xf2 * sin_b
+    r2 = xf2 * cos_b + xf1 * sin_b
+    return jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(pos_ids: jnp.ndarray, sections: Tuple[int, ...], d_rot: int,
+                  theta: float):
+    """Multimodal RoPE (Qwen2-VL): pos_ids (3, B, S) for (t, h, w).
+
+    The d_rot/2 frequency slots are split into len(sections) contiguous
+    groups; group g uses pos_ids[g].  Returns cos/sin (B, S, d_rot/2).
+    """
+    assert sum(sections) == d_rot // 2, (sections, d_rot)
+    inv = rope_freqs(d_rot, theta)  # (d_rot/2,)
+    ang_all = pos_ids[..., None].astype(jnp.float32) * inv  # (3, B, S, d_rot/2)
+    parts = []
+    start = 0
+    for g, sec in enumerate(sections):
+        parts.append(ang_all[g, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, d_rot/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def sinusoidal_positions(S: int, d: int, offset=0, dtype=jnp.float32):
+    """MusicGen-style fixed sinusoidal position embeddings (S, d)."""
+    pos = jnp.arange(S, dtype=jnp.float32) + offset
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": jax.random.normal(k2, (d, d_ff), dtype) * scale_in,
+        "w_down": jax.random.normal(k3, (d_ff, d), dtype) * scale_out,
+    }
+    if act == "swiglu":
+        p["w_gate"] = jax.random.normal(k1, (d, d_ff), dtype) * scale_in
+    return p
+
+
+def mlp_shapes(d: int, d_ff: int, act: str, dtype=jnp.bfloat16):
+    p = {
+        "w_up": jax.ShapeDtypeStruct((d, d_ff), dtype),
+        "w_down": jax.ShapeDtypeStruct((d_ff, d), dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = jax.ShapeDtypeStruct((d, d_ff), dtype)
+    return p
+
+
+def apply_mlp(params, x, act: str):
+    """x (B, S, d) -> (B, S, d); hidden sharded over tp."""
+    up = x @ params["w_up"]
+    up = shard(up, "dp", None, "tp")
+    if act == "swiglu":
+        gate = x @ params["w_gate"]
+        gate = shard(gate, "dp", None, "tp")
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    out = h @ params["w_down"]
+    return shard(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head / loss
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params, tokens):
+    """tokens (B, S) int -> (B, S, d)."""
+    out = jnp.take(params["table"], tokens, axis=0)
+    return shard(out, "dp", "sp", None)
+
+
+def lm_head_logits_chunk(table: jnp.ndarray, x: jnp.ndarray):
+    """x (B, C, d) @ table^T (V, d) -> (B, C, V) bf16-matmul f32-accum."""
+    logits = jnp.einsum("bcd,vd->bcv", x, table,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "dp", None, "tp")
+
+
+def chunked_ce_loss(table: jnp.ndarray, x: jnp.ndarray, labels: jnp.ndarray,
+                    chunk: int = 512, z_loss: float = 0.0):
+    """Cross entropy fused with the lm_head matmul, scanned over sequence
+    chunks so (B, S, V) logits never materialise (vocab 152k x 4k seq would
+    be GiB-scale per device otherwise).
+
+    x (B, S, d), labels (B, S) int32 -> scalar mean loss (f32).
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = x.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)       # (N, B, C, d)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)     # (N, B, C)
+
+    def body(carry, inp):
+        xi, li = inp
+        logits = lm_head_logits_chunk(table, xi)               # (B, C, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        loss = (lse - gold).sum()
+        if z_loss:
+            loss = loss + z_loss * jnp.square(lse).sum()
+        return carry + loss, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)

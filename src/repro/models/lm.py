@@ -1,0 +1,507 @@
+"""The LM stack: pattern-based heterogeneous transformer in pure JAX.
+
+An architecture is a repeating PATTERN of (mixer, ffn) blocks - e.g. Jamba's
+1:7 attention:mamba interleave with MoE on alternate layers, or Gemma-3's
+5 local : 1 global attention - scanned over ``n_groups`` repetitions with
+stacked parameters (jax.lax.scan keeps the HLO small regardless of depth).
+
+Three execution paths share the parameter layout:
+  train_loss   - full-sequence fwd + chunked CE (remat per group)
+  prefill      - full-sequence fwd, returns the serve cache
+  decode_step  - one token, consumes/updates the cache
+
+Mixer kinds:  attn | attn_local | mamba | rwkv
+FFN   kinds:  mlp | moe | rwkv_cmix
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.moe import MoEConfig, apply_moe, init_moe, moe_shapes
+
+__all__ = ["ModelConfig", "init_params", "param_shapes", "train_loss",
+           "prefill", "decode_step", "cache_shapes", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[Tuple[str, str], ...] = (("attn", "mlp"),)
+    window: Optional[int] = None          # sliding window for attn_local
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    act: str = "swiglu"                   # swiglu | gelu
+    pos: str = "rope"                     # rope | mrope | sinusoidal
+    rope_theta: float = 1e6
+    mrope_sections: Tuple[int, ...] = ()
+    moe: Optional[MoEConfig] = None
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_dconv: int = 4
+    mamba_kernel: bool = False   # fused Pallas scan (beyond-paper perf)
+    rwkv_kernel: bool = False    # fused Pallas WKV (beyond-paper perf)
+    rwkv_head_dim: int = 64
+    input_mode: str = "tokens"            # tokens | embeds (stubbed frontend)
+    tie_embeddings: bool = True
+    eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tp_pad: int = 16                      # pad rwkv heads to divide tp
+    remat: bool = True
+    remat_policy: str = "none"            # none | dots (save matmul outputs)
+    proj_first: bool = False              # project-then-reshard attention
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    aux_coef: float = 0.01
+    sub_quadratic: bool = False           # eligible for long_500k
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.name}: n_layers={self.n_layers} vs pattern {len(self.pattern)}"
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+
+
+def _block_builders(cfg: ModelConfig, mixer: str, ffn: str):
+    """Returns (init_fn(key), shapes_fn()) pairs for one block position."""
+    dt = cfg.param_dtype
+    d = cfg.d_model
+
+    def mixer_init(key):
+        if mixer in ("attn", "attn_local"):
+            return attn_mod.init_attn(key, d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.d_head, cfg.qk_norm, cfg.qkv_bias, dt)
+        if mixer == "mamba":
+            return mamba_mod.init_mamba(key, d, expand=cfg.mamba_expand,
+                                        d_state=cfg.mamba_d_state,
+                                        dconv=cfg.mamba_dconv, dtype=dt)
+        if mixer == "rwkv":
+            return rwkv_mod.init_rwkv_tmix(key, d, head_dim=cfg.rwkv_head_dim,
+                                           tp_pad=cfg.tp_pad, dtype=dt)
+        raise ValueError(mixer)
+
+    def mixer_shapes():
+        if mixer in ("attn", "attn_local"):
+            return attn_mod.attn_shapes(d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.d_head, cfg.qk_norm, cfg.qkv_bias, dt)
+        if mixer == "mamba":
+            return mamba_mod.mamba_shapes(d, expand=cfg.mamba_expand,
+                                          d_state=cfg.mamba_d_state,
+                                          dconv=cfg.mamba_dconv, dtype=dt)
+        if mixer == "rwkv":
+            return rwkv_mod.rwkv_tmix_shapes(d, head_dim=cfg.rwkv_head_dim,
+                                             tp_pad=cfg.tp_pad, dtype=dt)
+        raise ValueError(mixer)
+
+    def ffn_init(key):
+        if ffn == "mlp":
+            return L.init_mlp(key, d, cfg.d_ff, cfg.act, dt)
+        if ffn == "moe":
+            return init_moe(key, d, cfg.moe, ep_size=cfg.tp_pad, dtype=dt)
+        if ffn == "rwkv_cmix":
+            return rwkv_mod.init_rwkv_cmix(key, d, cfg.d_ff, dt)
+        raise ValueError(ffn)
+
+    def ffn_shapes():
+        if ffn == "mlp":
+            return L.mlp_shapes(d, cfg.d_ff, cfg.act, dt)
+        if ffn == "moe":
+            return moe_shapes(d, cfg.moe, ep_size=cfg.tp_pad, dtype=dt)
+        if ffn == "rwkv_cmix":
+            return rwkv_mod.rwkv_cmix_shapes(d, cfg.d_ff, dt)
+        raise ValueError(ffn)
+
+    return mixer_init, mixer_shapes, ffn_init, ffn_shapes
+
+
+def _stack_leaves(trees: Sequence):
+    """List of G identical-structure pytrees -> single pytree with leading G."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = L.init_embedding(keys[0], cfg.vocab, cfg.d_model, dt)
+    if cfg.input_mode == "embeds" or not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(keys[1], cfg.vocab, cfg.d_model, dt)
+    blocks = []
+    for pos_idx, (mixer, ffn) in enumerate(cfg.pattern):
+        per_group = []
+        for g in range(cfg.n_groups):
+            mi, _, fi, _ = _block_builders(cfg, mixer, ffn)
+            lk = jax.random.fold_in(key, 100 + g * len(cfg.pattern) + pos_idx)
+            k1, k2 = jax.random.split(lk)
+            per_group.append({
+                "norm1": L.init_rmsnorm(cfg.d_model, jnp.float32),
+                "mixer": mi(k1),
+                "norm2": L.init_rmsnorm(cfg.d_model, jnp.float32),
+                "ffn": fi(k2),
+            })
+        blocks.append(_stack_leaves(per_group))
+    params["blocks"] = tuple(blocks)
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, jnp.float32)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree - no allocation (dry-run path)."""
+    dt = cfg.param_dtype
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = {"table": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt)}
+    if cfg.input_mode == "embeds" or not cfg.tie_embeddings:
+        params["lm_head"] = {"table": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt)}
+    blocks = []
+    for mixer, ffn in cfg.pattern:
+        _, ms, _, fs = _block_builders(cfg, mixer, ffn)
+        one = {
+            "norm1": {"scale": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32)},
+            "mixer": ms(),
+            "norm2": {"scale": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32)},
+            "ffn": fs(),
+        }
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_groups,) + s.shape, s.dtype), one)
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    params["final_norm"] = {"scale": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# position embeddings
+
+
+def _cos_sin(cfg: ModelConfig, batch: Dict[str, jnp.ndarray], S: int,
+             pos_offset: Optional[jnp.ndarray] = None):
+    d_rot = cfg.d_head
+    if cfg.pos == "rope":
+        positions = jnp.arange(S)
+        if pos_offset is not None:
+            positions = positions + pos_offset
+        return L.rope_cos_sin(positions, d_rot, cfg.rope_theta)
+    if cfg.pos == "mrope":
+        pos_ids = batch["pos_ids"]  # (3, B, S)
+        if pos_offset is not None:
+            pos_ids = pos_ids + pos_offset
+        return L.mrope_cos_sin(pos_ids, cfg.mrope_sections, d_rot, cfg.rope_theta)
+    return None, None  # sinusoidal handled at the embedding
+
+
+# ---------------------------------------------------------------------------
+# block application (train / prefill / decode)
+
+
+def _apply_mixer_train(cfg, mixer, bp, x, cos_sin):
+    if mixer in ("attn", "attn_local"):
+        w = cfg.window if mixer == "attn_local" else None
+        return attn_mod.attn_forward(bp, x, cos_sin, window=w,
+                                     q_chunk=cfg.q_chunk,
+                                     kv_chunk=cfg.kv_chunk,
+                                     proj_first=cfg.proj_first)
+    if mixer == "mamba":
+        return mamba_mod.mamba_forward(bp, x, use_kernel=cfg.mamba_kernel)
+    if mixer == "rwkv":
+        return rwkv_mod.rwkv_tmix_forward(bp, x, head_dim=cfg.rwkv_head_dim,
+                                          use_kernel=cfg.rwkv_kernel)
+    raise ValueError(mixer)
+
+
+def _apply_ffn(cfg, ffn, ffn_params, x):
+    """Returns (y, aux)."""
+    if ffn == "mlp":
+        return L.apply_mlp(ffn_params, x, cfg.act), 0.0
+    if ffn == "moe":
+        return apply_moe(ffn_params, x, cfg.moe)
+    if ffn == "rwkv_cmix":
+        return rwkv_mod.rwkv_cmix_forward(ffn_params, x), 0.0
+    raise ValueError(ffn)
+
+
+def _group_body_train(cfg: ModelConfig, cos_sin, x, gparams):
+    aux = jnp.zeros((), jnp.float32)
+    for pos_idx, (mixer, ffn) in enumerate(cfg.pattern):
+        bp = gparams[pos_idx]
+        h = L.rmsnorm(bp["norm1"], x, cfg.eps)
+        x = x + _apply_mixer_train(cfg, mixer, bp["mixer"], h, cos_sin)
+        h = L.rmsnorm(bp["norm2"], x, cfg.eps)
+        y, a = _apply_ffn(cfg, ffn, bp["ffn"], h)
+        x = x + y
+        aux = aux + a
+    return x, aux
+
+
+def _embed_input(cfg: ModelConfig, params, batch, S: int):
+    if cfg.input_mode == "tokens":
+        x = L.embed(params["embed"], batch["tokens"])
+    else:
+        x = batch["embeds"].astype(cfg.param_dtype)
+        x = shard(x, "dp", "sp", None)
+    if cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_positions(S, cfg.d_model, dtype=jnp.float32
+                                       ).astype(x.dtype)[None]
+    return x
+
+
+def forward_hidden(params, cfg: ModelConfig, batch):
+    """Full-sequence forward to the final norm.  Returns (x, aux)."""
+    S = (batch["tokens"].shape[1] if cfg.input_mode == "tokens"
+         else batch["embeds"].shape[1])
+    x = _embed_input(cfg, params, batch, S)
+    cos_sin = _cos_sin(cfg, batch, S)
+
+    body = partial(_group_body_train, cfg, cos_sin)
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    def scan_fn(carry, gparams):
+        x, aux = carry
+        x, a = body(x, gparams)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.eps)
+    return x, aux
+
+
+def _head_table(params, cfg):
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        return params["embed"]["table"]
+    return params["lm_head"]["table"]
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    """Scalar LM loss (f32): chunked CE + MoE aux."""
+    x, aux = forward_hidden(params, cfg, batch)
+    x = shard(x, "dp", None, None)
+    loss = L.chunked_ce_loss(_head_table(params, cfg), x, batch["labels"],
+                             chunk=cfg.loss_chunk)
+    if cfg.moe is not None:
+        loss = loss + cfg.aux_coef * aux / max(1, cfg.n_layers)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: cache structure
+
+
+def _mixer_cache_shapes(cfg: ModelConfig, mixer: str, B: int, S_max: int):
+    dt = cfg.param_dtype
+    if mixer == "attn":
+        return {
+            "k": jax.ShapeDtypeStruct((B, S_max, cfg.n_kv_heads, cfg.d_head), dt),
+            "v": jax.ShapeDtypeStruct((B, S_max, cfg.n_kv_heads, cfg.d_head), dt),
+        }
+    if mixer == "attn_local":
+        W = min(cfg.window, S_max)
+        return {
+            "k": jax.ShapeDtypeStruct((B, W, cfg.n_kv_heads, cfg.d_head), dt),
+            "v": jax.ShapeDtypeStruct((B, W, cfg.n_kv_heads, cfg.d_head), dt),
+        }
+    if mixer == "mamba":
+        return mamba_mod.mamba_state_shapes(B, cfg.d_model,
+                                            expand=cfg.mamba_expand,
+                                            d_state=cfg.mamba_d_state,
+                                            dconv=cfg.mamba_dconv)
+    if mixer == "rwkv":
+        return rwkv_mod.rwkv_state_shapes(B, cfg.d_model,
+                                          head_dim=cfg.rwkv_head_dim,
+                                          tp_pad=cfg.tp_pad)
+    raise ValueError(mixer)
+
+
+def cache_shapes(cfg: ModelConfig, B: int, S_max: int):
+    """ShapeDtypeStruct pytree of the serve cache (dry-run input spec)."""
+    out = []
+    for mixer, _ in cfg.pattern:
+        one = _mixer_cache_shapes(cfg, mixer, B, S_max)
+        out.append(jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_groups,) + s.shape, s.dtype),
+            one))
+    return tuple(out)
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, B, S_max))
+
+
+# ---------------------------------------------------------------------------
+# prefill
+
+
+def _prime_ring(k_full: jnp.ndarray, W: int) -> jnp.ndarray:
+    """(B, S, KH, hd) full keys -> (B, W, KH, hd) ring holding the last W
+    tokens at slots (t mod W)."""
+    B, S, KH, hd = k_full.shape
+    take = min(W, S)
+    last = k_full[:, S - take:]
+    slots = (jnp.arange(S - take, S) % W)
+    ring = jnp.zeros((B, W, KH, hd), k_full.dtype)
+    return ring.at[:, slots].set(last)
+
+
+def prefill(params, cfg: ModelConfig, batch, S_max: Optional[int] = None):
+    """Full-sequence forward that also builds the serve cache.
+
+    Returns (last_logits (B, vocab) f32, cache).  ``S_max`` sizes the global
+    attention cache (defaults to the prompt length)."""
+    S = (batch["tokens"].shape[1] if cfg.input_mode == "tokens"
+         else batch["embeds"].shape[1])
+    B = (batch["tokens"].shape[0] if cfg.input_mode == "tokens"
+         else batch["embeds"].shape[0])
+    S_max = S_max or S
+    x = _embed_input(cfg, params, batch, S)
+    cos_sin = _cos_sin(cfg, batch, S)
+
+    def group_body(x, gparams):
+        caches = []
+        for pos_idx, (mixer, ffn) in enumerate(cfg.pattern):
+            bp = gparams[pos_idx]
+            h = L.rmsnorm(bp["norm1"], x, cfg.eps)
+            if mixer in ("attn", "attn_local"):
+                w = cfg.window if mixer == "attn_local" else None
+                y, (k, v) = attn_mod.attn_forward(
+                    bp["mixer"], h, cos_sin, window=w, q_chunk=cfg.q_chunk,
+                    kv_chunk=cfg.kv_chunk, return_kv=True)
+                if mixer == "attn_local":
+                    W = min(cfg.window, S_max)
+                    cache = {"k": _prime_ring(k, W), "v": _prime_ring(v, W)}
+                else:
+                    pad = S_max - S
+                    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    cache = {"k": shard(kp, "dp", "sp", None, None),
+                             "v": shard(vp, "dp", "sp", None, None)}
+            elif mixer == "mamba":
+                y, cache = mamba_mod.mamba_forward(
+                    bp["mixer"], h, return_state=True,
+                    use_kernel=cfg.mamba_kernel)
+            elif mixer == "rwkv":
+                y, cache = rwkv_mod.rwkv_tmix_forward(
+                    bp["mixer"], h, head_dim=cfg.rwkv_head_dim,
+                    return_state=True, use_kernel=cfg.rwkv_kernel)
+            else:
+                raise ValueError(mixer)
+            x = x + y
+            h = L.rmsnorm(bp["norm2"], x, cfg.eps)
+            if ffn == "rwkv_cmix":
+                y, cstate = rwkv_mod.rwkv_cmix_forward(bp["ffn"], h,
+                                                       return_state=True)
+                cache.update(cstate)
+            else:
+                y, _ = _apply_ffn(cfg, ffn, bp["ffn"], h)
+            x = x + y
+            caches.append(cache)
+        return x, tuple(caches)
+
+    x, caches = jax.lax.scan(group_body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.eps)
+    last = x[:, -1]
+    logits = jnp.einsum("bd,vd->bv", last, _head_table(params, cfg),
+                        preferred_element_type=jnp.float32)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch, pos):
+    """One-token serve step.
+
+    batch: {"tokens": (B, 1)} or {"embeds": (B, 1, d)} (+ pos_ids for mrope);
+    pos: () int32 absolute position of this token.
+    Returns (logits (B, vocab) f32, new_cache)."""
+    x = _embed_input_decode(cfg, params, batch, pos)
+    cos_sin = _cos_sin(cfg, batch, 1, pos_offset=pos)
+
+    def group_body(x, inp):
+        gparams, gcache = inp
+        new_caches = []
+        for pos_idx, (mixer, ffn) in enumerate(cfg.pattern):
+            bp = gparams[pos_idx]
+            c = gcache[pos_idx]
+            h = L.rmsnorm(bp["norm1"], x, cfg.eps)
+            if mixer in ("attn", "attn_local"):
+                w = cfg.window if mixer == "attn_local" else None
+                y, ck, cv = attn_mod.attn_decode_step(
+                    bp["mixer"], h, cos_sin, c["k"], c["v"], pos, window=w)
+                nc = {"k": ck, "v": cv}
+            elif mixer == "mamba":
+                y, nc = mamba_mod.mamba_decode_step(bp["mixer"], h, c)
+            elif mixer == "rwkv":
+                y, nc = rwkv_mod.rwkv_tmix_forward(
+                    bp["mixer"], h, head_dim=cfg.rwkv_head_dim, state=c,
+                    return_state=True)
+            else:
+                raise ValueError(mixer)
+            x = x + y
+            h = L.rmsnorm(bp["norm2"], x, cfg.eps)
+            if ffn == "rwkv_cmix":
+                y, cstate = rwkv_mod.rwkv_cmix_forward(bp["ffn"], h, state=c,
+                                                       return_state=True)
+                nc.update(cstate)
+            else:
+                y, _ = _apply_ffn(cfg, ffn, bp["ffn"], h)
+            x = x + y
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], _head_table(params, cfg),
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache
+
+
+def _embed_input_decode(cfg: ModelConfig, params, batch, pos):
+    if cfg.input_mode == "tokens":
+        x = L.embed(params["embed"], batch["tokens"])  # (B, 1, d)
+    else:
+        x = batch["embeds"].astype(cfg.param_dtype)
+    if cfg.pos == "sinusoidal":
+        x = x + L.sinusoidal_positions(1, cfg.d_model, offset=pos,
+                                       dtype=jnp.float32).astype(x.dtype)[None]
+    return shard(x, "dp", None, None)

@@ -1,0 +1,324 @@
+"""Mamba-1 block (as used by Jamba) with a chunked associative-scan SSM.
+
+Selective SSM recurrence per channel d and state s:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D x_t
+The sequence is processed in chunks: within a chunk the linear recurrence is
+evaluated with jax.lax.associative_scan on (decay, update) pairs (numerically
+safe: decay factors <= 1 are only ever multiplied, never inverted); chunks
+are chained with lax.scan carrying the (d_inner, d_state) state.  Peak
+memory is O(B * chunk * d_inner * d_state) instead of O(B * S * ...).
+
+TP: d_inner is sharded over "tp"; the block sees the full sequence
+(sequence-sharded residuals are gathered at entry like attention).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+__all__ = ["init_mamba", "mamba_shapes", "mamba_forward", "mamba_decode_step",
+           "mamba_state_shapes"]
+
+
+def _dims(d_model: int, expand: int, d_state: int):
+    d_inner = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    return d_inner, dt_rank
+
+
+def init_mamba(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               dconv: int = 4, dtype=jnp.bfloat16):
+    d_inner, dt_rank = _dims(d_model, expand, d_state)
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d_model)
+    sci = 1.0 / math.sqrt(d_inner)
+    # S4D-real initialisation for A.
+    A = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         (d_inner, d_state))
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, 2 * d_inner), dtype) * sc,
+        "conv_w": jax.random.normal(ks[1], (dconv, d_inner), dtype) * (1 / math.sqrt(dconv)),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_x": jax.random.normal(ks[2], (d_inner, dt_rank + 2 * d_state), dtype) * sci,
+        "w_dt": jax.random.normal(ks[3], (dt_rank, d_inner), dtype) * (1 / math.sqrt(dt_rank)),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": jax.random.normal(ks[4], (d_inner, d_model), dtype) * sci,
+    }
+
+
+def mamba_shapes(d_model: int, *, expand: int = 2, d_state: int = 16,
+                 dconv: int = 4, dtype=jnp.bfloat16):
+    d_inner, dt_rank = _dims(d_model, expand, d_state)
+    return {
+        "w_in": jax.ShapeDtypeStruct((d_model, 2 * d_inner), dtype),
+        "conv_w": jax.ShapeDtypeStruct((dconv, d_inner), dtype),
+        "conv_b": jax.ShapeDtypeStruct((d_inner,), dtype),
+        "w_x": jax.ShapeDtypeStruct((d_inner, dt_rank + 2 * d_state), dtype),
+        "w_dt": jax.ShapeDtypeStruct((dt_rank, d_inner), dtype),
+        "dt_bias": jax.ShapeDtypeStruct((d_inner,), jnp.float32),
+        "A_log": jax.ShapeDtypeStruct((d_inner, d_state), jnp.float32),
+        "D": jax.ShapeDtypeStruct((d_inner,), jnp.float32),
+        "w_out": jax.ShapeDtypeStruct((d_inner, d_model), dtype),
+    }
+
+
+def mamba_state_shapes(B: int, d_model: int, *, expand: int = 2,
+                       d_state: int = 16, dconv: int = 4):
+    d_inner, _ = _dims(d_model, expand, d_state)
+    return {
+        "conv": jax.ShapeDtypeStruct((B, dconv - 1, d_inner), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((B, d_inner, d_state), jnp.float32),
+    }
+
+
+def _ssm_scan_chunked(params, dt_raw, Bm, Cm, x, h0, chunk: int):
+    """End-to-end chunked selective scan - the (B, S, d_inner, d_state)
+    decay/update/state tensors exist only PER CHUNK (peak memory
+    O(B*chunk*d*s), not O(B*S*d*s)).
+
+    dt_raw: (B, S, dt_rank); Bm, Cm: (B, S, d_state); x: (B, S, d_inner).
+    Returns y: (B, S, d_inner) f32 and final state (B, d_inner, d_state)."""
+    B, S, d_inner = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    A = -jnp.exp(params["A_log"])                             # (d, s) < 0
+
+    def reshape_c(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(reshape_c, (dt_raw, Bm, Cm, x)))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, inp):
+        dt_c, B_c, C_c, x_c = inp  # (B, chunk, ...)
+        dt = jax.nn.softplus((dt_c @ params["w_dt"]).astype(jnp.float32)
+                             + params["dt_bias"])             # (B,c,d)
+        a = jnp.exp(dt[..., None] * A[None, None])            # (B,c,d,s)
+        b = (dt * x_c.astype(jnp.float32))[..., None] \
+            * B_c.astype(jnp.float32)[:, :, None, :]
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_chunk = A_cum * h[:, None] + B_cum
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_chunk, C_c.astype(jnp.float32))
+        return h_chunk[:, -1], y_c
+
+    h_final, y = jax.lax.scan(step, h0, xs)
+    y = y.swapaxes(0, 1).reshape(B, S, d_inner)
+    return y, h_final
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel scan with custom VJP (beyond-paper optimization; see
+# kernels/mamba_scan.py).  Forward = fused VMEM-resident kernel (HBM traffic
+# ~= read inputs + write y); backward = sequential reverse scan over chunks
+# from the kernel's chunk-boundary checkpoints (no full-forward remat).
+
+
+@jax.custom_vjp
+def mamba_scan_fused(dt, x, Bm, Cm, A_log, D):
+    """dt/x: (B,S,d) f32, Bm/Cm: (B,S,s) f32 -> (y (B,S,d), h_fin (B,d,s))."""
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+    y, h_fin, _ = mamba_scan_pallas(dt, x, Bm, Cm, A_log, D,
+                                    interpret=jax.default_backend() != "tpu")
+    return y, h_fin
+
+
+def _fused_fwd(dt, x, Bm, Cm, A_log, D):
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+    y, h_fin, h_bounds = mamba_scan_pallas(
+        dt, x, Bm, Cm, A_log, D, interpret=jax.default_backend() != "tpu")
+    return (y, h_fin), (dt, x, Bm, Cm, A_log, D, h_bounds)
+
+
+def _fused_bwd(res, cot):
+    dt, x, Bm, Cm, A_log, D, h_bounds = res
+    y_bar, hfin_bar = cot
+    B, S, d = dt.shape
+    s = A_log.shape[1]
+    nc = h_bounds.shape[1]
+    c = S // nc
+    A = -jnp.exp(A_log)
+
+    def chunked(t):
+        return t.reshape(B, nc, c, -1).swapaxes(0, 1)  # (nc, B, c, *)
+
+    dt_c, x_c, B_c, C_c, yb_c = map(chunked, (dt, x, Bm, Cm, y_bar))
+    h0_c = h_bounds.swapaxes(0, 1)                     # (nc, B, d, s)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_bwd(gbar, inp):
+        # gbar: dL/dh at the END of this chunk (from later chunks)
+        dt_i, x_i, B_i, C_i, yb_i, h0 = inp            # (B, c, ...)
+        a = jnp.exp(dt_i[..., None] * A[None, None])   # (B,c,d,s)
+        b = (dt_i * x_i)[..., None] * B_i[:, :, None, :]
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = A_cum * h0[:, None] + B_cum                # (B,c,d,s)
+        h_prev = jnp.concatenate([h0[:, None], h[:, :-1]], axis=1)
+        # local dL/dh from y, plus gbar injected at the last step
+        e = yb_i[..., None] * C_i[:, :, None, :]       # (B,c,d,s)
+        e = e.at[:, -1].add(gbar)
+        # reverse first-order recurrence G_t = e_t + a_{t+1} * G_{t+1}
+        a_shift = jnp.concatenate([a[:, 1:], jnp.ones_like(a[:, :1])], axis=1)
+        af = jnp.flip(a_shift, axis=1)
+        ef = jnp.flip(e, axis=1)
+        _, Gf = jax.lax.associative_scan(combine, (af, ef), axis=1)
+        G = jnp.flip(Gf, axis=1)                       # (B,c,d,s)
+
+        a_bar = G * h_prev
+        dt_bar = jnp.sum(a_bar * a * A[None, None], axis=-1) \
+            + jnp.sum(G * B_i[:, :, None, :], axis=-1) * x_i
+        x_bar = jnp.sum(G * B_i[:, :, None, :], axis=-1) * dt_i \
+            + D[None, None] * yb_i
+        B_bar = jnp.sum(G * (dt_i * x_i)[..., None], axis=2)
+        C_bar = jnp.sum(yb_i[..., None] * h, axis=2)
+        A_bar = jnp.sum(a_bar * a * dt_i[..., None], axis=(0, 1))
+        gbar_prev = jnp.sum(a[:, 0:1] * G[:, 0:1], axis=1)  # a_1 * G_1
+        return gbar_prev, (dt_bar, x_bar, B_bar, C_bar, A_bar)
+
+    gbar0 = hfin_bar
+    _, outs = jax.lax.scan(chunk_bwd, gbar0,
+                           (dt_c, x_c, B_c, C_c, yb_c, h0_c), reverse=True)
+    dt_bar, x_bar, B_bar, C_bar, A_bar_c = outs
+
+    def unchunk(t):
+        return t.swapaxes(0, 1).reshape(B, S, -1)
+
+    dt_bar = unchunk(dt_bar)
+    x_bar = unchunk(x_bar)
+    B_bar = unchunk(B_bar)
+    C_bar = unchunk(C_bar)
+    # dA/dA_log = -exp(A_log) = A  ->  A_log_bar = A_bar * A
+    A_log_bar = A_bar_c.sum(0) * A
+    D_bar = jnp.sum(y_bar * x, axis=(0, 1))
+    return dt_bar, x_bar, B_bar, C_bar, A_log_bar, D_bar
+
+
+mamba_scan_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+            state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x (B, S, d); w (dconv, d).  ``state`` holds the
+    trailing dconv-1 inputs from the previous segment (decode)."""
+    dconv = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dconv - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S + dconv - 1, d)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dconv))
+    new_state = xp[:, -(dconv - 1):] if dconv > 1 else pad[:, :0]
+    return out + b[None, None], new_state
+
+
+def _kernel_scan(params, dt_raw, Bm, Cm, x):
+    """Route the scan through the fused Pallas kernel (h0 = 0 path),
+    manually partitioned over (dp, tp) when a mesh is active."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import current_rules
+
+    dt = jax.nn.softplus(
+        (dt_raw @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    xf = x.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    rules = current_rules()
+    if rules is None:
+        y, h_fin = mamba_scan_fused(dt, xf, Bf, Cf, params["A_log"],
+                                    params["D"])
+        return y, h_fin
+    mesh = rules.mesh
+    tp = rules.physical("tp")
+    dp = rules.physical("dp")
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dpN = 1
+    for a in dp_axes:
+        dpN *= mesh.shape[a]
+    B = x.shape[0]
+    d = x.shape[2]
+    tpN = mesh.shape[tp]
+    b_spec = dp if B % dpN == 0 else None
+    d_spec = tp if d % tpN == 0 else None
+    y, h_fin = jax.shard_map(
+        lambda dt_, x_, b_, c_, al_, dd_: mamba_scan_fused(
+            dt_, x_, b_, c_, al_, dd_),
+        mesh=mesh,
+        in_specs=(P(b_spec, None, d_spec), P(b_spec, None, d_spec),
+                  P(b_spec, None, None), P(b_spec, None, None),
+                  P(d_spec, None), P(d_spec)),
+        out_specs=(P(b_spec, None, d_spec), P(b_spec, d_spec, None)),
+        check_vma=False,
+    )(dt, xf, Bf, Cf, params["A_log"], params["D"])
+    return y, h_fin
+
+
+def _ssm_inner(params, xz, conv_state, h0, chunk, use_kernel=False):
+    """Everything after in_proj.  xz (B, S, 2*d_inner)."""
+    d_inner = params["conv_w"].shape[1]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _conv1d(x, params["conv_w"], params["conv_b"], conv_state)
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+    x = shard(x, "dp", None, "tp")
+
+    proj = x @ params["w_x"]  # (B, S, dt_rank + 2*d_state)
+    d_state = params["A_log"].shape[1]
+    dt_rank = proj.shape[-1] - 2 * d_state
+    dt_raw, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    if use_kernel:
+        # fused kernel path (zero initial state; D folded in by the kernel)
+        y, h_last = _kernel_scan(params, dt_raw, Bm, Cm, x)
+    else:
+        y, h_last = _ssm_scan_chunked(params, dt_raw, Bm, Cm, x, h0, chunk)
+        y = y + params["D"][None, None] * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(xz.dtype), conv_state, h_last
+
+
+def mamba_forward(params, x, *, chunk: int = 64, state=None,
+                  return_state=False, use_kernel: bool = False):
+    """x (B, S, d_model) -> (B, S, d_model).  Training/prefill path."""
+    x = shard(x, "dp", None, None)
+    xz = x @ params["w_in"]
+    xz = shard(xz, "dp", None, "tp")
+    B = x.shape[0]
+    d_inner = params["conv_w"].shape[1]
+    d_state = params["A_log"].shape[1]
+    if state is None:
+        conv_state = None
+        h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    else:
+        conv_state, h0 = state["conv"], state["ssm"]
+    # the fused kernel supports only zero initial state (train/prefill)
+    use_kernel = use_kernel and state is None
+    y, conv_state, h_last = _ssm_inner(params, xz, conv_state, h0, chunk,
+                                       use_kernel=use_kernel)
+    out = y @ params["w_out"]
+    out = shard(out, "dp", "sp", None)
+    if return_state:
+        return out, {"conv": conv_state.astype(jnp.bfloat16), "ssm": h_last}
+    return out
+
+
+def mamba_decode_step(params, x, state):
+    """x (B, 1, d_model); state {conv (B, dconv-1, d_inner), ssm (B, d, s)}."""
+    out, new_state = mamba_forward(params, x, chunk=1, state=state,
+                                   return_state=True)
+    return out, new_state

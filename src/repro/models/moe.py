@@ -1,0 +1,256 @@
+"""Mixture-of-Experts FFN: top-k routing with expert parallelism.
+
+Two execution paths sharing one parameter layout:
+
+* ``dense`` - every expert computed for every token, combined with the
+  top-k gate mask.  O(E/k) FLOP waste; used single-device (smoke tests,
+  correctness oracle).
+* ``ep`` - expert-parallel shard_map: tokens are dispatched to the devices
+  owning their experts with a capacity-bounded all_to_all over the "model"
+  ("ep") mesh axis, expert FFNs run as grouped einsums on local experts,
+  and a second all_to_all returns outputs to their source device (GShard /
+  Switch dispatch adapted to TPU: static shapes, sort-free cumsum
+  positioning, capacity drop).  Expert weights are additionally
+  FSDP-sharded over the data axes and all-gathered inside the body.
+
+Routing: softmax -> top-k -> renormalize (Qwen3/Mixtral convention).
+Aux load-balance loss (Switch style) is returned as a metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import current_rules, shard
+from repro.distributed.sharding import AxisRules
+
+__all__ = ["MoEConfig", "init_moe", "moe_shapes", "apply_moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    n_shared: int = 0           # shared-expert width, in units of d_expert_ff
+    capacity_factor: float = 1.25
+    act: str = "swiglu"
+
+    @property
+    def e_pad(self) -> int:
+        """Experts padded so the EP axis divides them (dummy experts are
+        never routed to: their logits are masked before top-k)."""
+        return self.n_experts
+
+
+def _e_padded(cfg: MoEConfig, ep_size: int) -> int:
+    return int(math.ceil(cfg.n_experts / ep_size) * ep_size)
+
+
+def init_moe(key, d: int, cfg: MoEConfig, ep_size: int = 1, dtype=jnp.bfloat16):
+    E = _e_padded(cfg, ep_size)
+    ks = jax.random.split(key, 6)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(cfg.d_expert_ff)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * sc_in,
+        "w_gate": jax.random.normal(ks[1], (E, d, cfg.d_expert_ff), dtype) * sc_in,
+        "w_up": jax.random.normal(ks[2], (E, d, cfg.d_expert_ff), dtype) * sc_in,
+        "w_down": jax.random.normal(ks[3], (E, cfg.d_expert_ff, d), dtype) * sc_out,
+    }
+    if cfg.n_shared:
+        ff_sh = cfg.n_shared * cfg.d_expert_ff
+        p["sh_gate"] = jax.random.normal(ks[4], (d, ff_sh), dtype) * sc_in
+        p["sh_up"] = jax.random.normal(ks[5], (d, ff_sh), dtype) * sc_in
+        p["sh_down"] = jax.random.normal(ks[4], (ff_sh, d), dtype) * sc_out
+    return p
+
+
+def moe_shapes(d: int, cfg: MoEConfig, ep_size: int = 1, dtype=jnp.bfloat16):
+    E = _e_padded(cfg, ep_size)
+    p = {
+        "router": jax.ShapeDtypeStruct((d, E), jnp.float32),
+        "w_gate": jax.ShapeDtypeStruct((E, d, cfg.d_expert_ff), dtype),
+        "w_up": jax.ShapeDtypeStruct((E, d, cfg.d_expert_ff), dtype),
+        "w_down": jax.ShapeDtypeStruct((E, cfg.d_expert_ff, d), dtype),
+    }
+    if cfg.n_shared:
+        ff_sh = cfg.n_shared * cfg.d_expert_ff
+        p["sh_gate"] = jax.ShapeDtypeStruct((d, ff_sh), dtype)
+        p["sh_up"] = jax.ShapeDtypeStruct((d, ff_sh), dtype)
+        p["sh_down"] = jax.ShapeDtypeStruct((ff_sh, d), dtype)
+    return p
+
+
+def _route(router_w, x_flat, cfg: MoEConfig):
+    """x_flat (T, d) -> gates (T, k) f32, eids (T, k) int32, aux loss."""
+    logits = (x_flat.astype(jnp.float32) @ router_w)  # (T, E_pad)
+    E = router_w.shape[1]
+    if E > cfg.n_experts:  # mask dummy padding experts
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, eids = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    onehot = jax.nn.one_hot(eids[:, 0], E, dtype=jnp.float32)
+    frac = onehot.mean(0)
+    aux = cfg.n_experts * jnp.sum(frac * probs.mean(0))
+    return gates, eids, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, xs, act: str):
+    """xs (E_loc, C, d) grouped FFN."""
+    up = jnp.einsum("ecd,edf->ecf", xs, w_up)
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xs, w_gate)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(xs.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _shared_ffn(params, x, act: str):
+    """Shared expert: computed OUTSIDE the EP shard_map so the hidden dim
+    tensor-parallelises like a normal MLP."""
+    up = x @ params["sh_up"]
+    up = shard(up, "dp", None, "tp")
+    if act == "swiglu":
+        g = x @ params["sh_gate"]
+        g = shard(g, "dp", None, "tp")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["sh_down"]
+
+
+# ---------------------------------------------------------------------------
+# dense path (single device / oracle)
+
+
+def _moe_dense(params, x, cfg: MoEConfig):
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, eids, aux = _route(params["router"], xf, cfg)
+    E = params["w_gate"].shape[0]
+    # (T, E) combine weights from top-k selection
+    comb = jnp.zeros((xf.shape[0], E), jnp.float32)
+    comb = comb.at[jnp.arange(xf.shape[0])[:, None], eids].add(gates)
+    all_out = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                          jnp.broadcast_to(xf[None], (E,) + xf.shape), cfg.act)
+    y = jnp.einsum("te,etd->td", comb.astype(x.dtype), all_out)
+    if cfg.n_shared:
+        y = y + _shared_ffn(params, xf, cfg.act)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel path
+
+
+def _moe_ep_body(x, router_w, w_gate, w_up, w_down, cfg: MoEConfig,
+                 ep_axis: str, dp_axes: Tuple[str, ...], capacity: int):
+    """shard_map body.  x (B_loc, S_loc, d) local tokens; expert weights
+    (E_loc, d/dp, ff) - FSDP-gathered here; returns (y, aux)."""
+    # FSDP all-gather of expert weights over the data axes.
+    for ax in dp_axes:
+        w_gate = jax.lax.all_gather(w_gate, ax, axis=1, tiled=True)
+        w_up = jax.lax.all_gather(w_up, ax, axis=1, tiled=True)
+        w_down = jax.lax.all_gather(w_down, ax, axis=2, tiled=True)
+    ep = jax.lax.axis_size(ep_axis)
+    B_loc, S_loc, d = x.shape
+    T = B_loc * S_loc
+    xf = x.reshape(T, d)
+    gates, eids, aux = _route(router_w, xf, cfg)          # (T,k)
+    E = router_w.shape[1]
+    E_loc = E // ep
+    k = cfg.top_k
+
+    flat_e = eids.reshape(-1)                              # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # position in expert
+    my_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = my_pos < capacity                               # capacity drop
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+
+    # Scatter tokens into the (E, C, d) send buffer.
+    send = jnp.zeros((E, capacity, d), xf.dtype)
+    e_idx = jnp.where(keep, flat_e, 0)
+    c_idx = jnp.where(keep, my_pos, 0)
+    vals = jnp.where(keep[:, None], xf[tok_idx], 0.0)
+    send = send.at[e_idx, c_idx].add(vals)                 # unique (e,c) per kept tok
+
+    # all_to_all: (ep, E_loc, C, d) -> recv[src] = tokens from src device.
+    send = send.reshape(ep, E_loc, capacity, d)
+    recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # recv[src, e_loc] = tokens device ``src`` sent to our expert group.
+    xs = recv.swapaxes(0, 1).reshape(E_loc, ep * capacity, d)
+    ys = _expert_ffn(w_gate, w_up, w_down, xs, cfg.act)
+    back = jax.lax.all_to_all(ys.reshape(E_loc, ep, capacity, d).swapaxes(0, 1),
+                              ep_axis, split_axis=0, concat_axis=0, tiled=False)
+    # back: (ep, E_loc, C, d) -> (E, C, d), rows for OUR tokens again.
+    back = back.reshape(E, capacity, d)
+
+    gathered = back[e_idx, c_idx]                          # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = (gates.reshape(-1) * keep).astype(jnp.float32)
+    y = jnp.zeros((T, d), jnp.float32).at[tok_idx].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    y = y.astype(x.dtype)
+    # aux is a local mean; average over all devices.
+    for ax in (ep_axis,) + tuple(dp_axes):
+        aux = jax.lax.pmean(aux, ax)
+    return y.reshape(B_loc, S_loc, d), aux
+
+
+def _moe_ep(params, x, cfg: MoEConfig, rules: AxisRules):
+    mesh = rules.mesh
+    ep_axis = rules.physical("ep")
+    dp_phys = rules.physical("dp")
+    dp_axes = tuple(dp_phys) if isinstance(dp_phys, tuple) else (dp_phys,)
+    ep = mesh.shape[ep_axis]
+    dpN = 1
+    for a in dp_axes:
+        dpN *= mesh.shape[a]
+    B, S, d = x.shape
+    seq_shard = ep if S % ep == 0 else 1   # decode: S=1 cannot seq-shard
+    b_shard = dpN if B % dpN == 0 else 1   # long-context decode: B=1
+    T_loc = (B // b_shard) * (S // seq_shard)
+    E = params["w_gate"].shape[0]
+    capacity = max(1, int(math.ceil(cfg.capacity_factor * cfg.top_k * T_loc / E)))
+
+    batch_spec = dp_axes if b_shard > 1 else None
+    seq_spec = ep_axis if seq_shard > 1 else None
+    body = partial(_moe_ep_body, cfg=cfg, ep_axis=ep_axis, dp_axes=dp_axes,
+                   capacity=capacity)
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(batch_spec, seq_spec, None),         # x: (B, S, d)
+            P(None, None),                         # router replicated
+            P(ep_axis, dp_axes, None),             # w_gate (E, d, ff)
+            P(ep_axis, dp_axes, None),             # w_up
+            P(ep_axis, None, dp_axes),             # w_down (E, ff, d)
+        ),
+        out_specs=(P(batch_spec, seq_spec, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    if cfg.n_shared:
+        y = y + _shared_ffn(params, x.reshape(-1, d), cfg.act).reshape(x.shape)
+    return y, aux
+
+
+def apply_moe(params, x, cfg: MoEConfig):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).  Chooses EP when a
+    sharding-rules context is active, dense otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return _moe_dense(params, x, cfg)
+    return _moe_ep(params, x, cfg, rules)

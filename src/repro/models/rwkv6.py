@@ -1,0 +1,360 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence per head (state S is a (dk, dv) matrix):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            (w_t in (0,1), data-dep.)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+Chunked evaluation: within a chunk, (decay, update) pairs run through
+jax.lax.associative_scan (decays <= 1: no overflow), chunks chained by
+lax.scan - same machinery as the Mamba block, state (B, H, dk, dv).
+
+Faithfulness notes (DESIGN.md Sec. 7): the decay w_t is data-dependent
+through a LoRA (the RWKV-6 hallmark); the five token-shift lerp factors are
+learned per-channel constants rather than the paper's second LoRA stack - a
+documented simplification that does not change the kernel structure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+__all__ = ["init_rwkv_tmix", "rwkv_tmix_shapes", "rwkv_tmix_forward",
+           "init_rwkv_cmix", "rwkv_cmix_shapes", "rwkv_cmix_forward",
+           "rwkv_state_shapes"]
+
+LORA_RANK = 64
+
+
+def _heads(d_model: int, head_dim: int, tp: int = 1) -> int:
+    """Head count padded up so the tp axis divides it."""
+    h = d_model // head_dim
+    return int(math.ceil(h / tp) * tp)
+
+
+def init_rwkv_tmix(key, d_model: int, *, head_dim: int = 64, tp_pad: int = 1,
+                   dtype=jnp.bfloat16):
+    H = _heads(d_model, head_dim, tp_pad)
+    d_attn = H * head_dim  # >= d_model when padded
+    ks = jax.random.split(key, 10)
+    sc = 1.0 / math.sqrt(d_model)
+    return {
+        "mu": jnp.full((5, d_model), 0.5, dtype),  # shift-lerp for w,k,v,r,g
+        "w_r": jax.random.normal(ks[0], (d_model, d_attn), dtype) * sc,
+        "w_k": jax.random.normal(ks[1], (d_model, d_attn), dtype) * sc,
+        "w_v": jax.random.normal(ks[2], (d_model, d_attn), dtype) * sc,
+        "w_g": jax.random.normal(ks[3], (d_model, d_attn), dtype) * sc,
+        "w_o": jax.random.normal(ks[4], (d_attn, d_model), dtype)
+                * (1.0 / math.sqrt(d_attn)),
+        "w_decay_base": jnp.full((d_attn,), -6.0, jnp.float32),
+        "w_decay_a": jax.random.normal(ks[5], (d_model, LORA_RANK), dtype) * sc,
+        "w_decay_b": jax.random.normal(ks[6], (LORA_RANK, d_attn), dtype)
+                      * (1.0 / math.sqrt(LORA_RANK)),
+        "u": jnp.zeros((H, head_dim), jnp.float32),  # bonus
+        "ln_scale": jnp.ones((d_attn,), jnp.float32),  # group-norm over heads
+    }
+
+
+def rwkv_tmix_shapes(d_model: int, *, head_dim: int = 64, tp_pad: int = 1,
+                     dtype=jnp.bfloat16):
+    H = _heads(d_model, head_dim, tp_pad)
+    d_attn = H * head_dim
+    return {
+        "mu": jax.ShapeDtypeStruct((5, d_model), dtype),
+        "w_r": jax.ShapeDtypeStruct((d_model, d_attn), dtype),
+        "w_k": jax.ShapeDtypeStruct((d_model, d_attn), dtype),
+        "w_v": jax.ShapeDtypeStruct((d_model, d_attn), dtype),
+        "w_g": jax.ShapeDtypeStruct((d_model, d_attn), dtype),
+        "w_o": jax.ShapeDtypeStruct((d_attn, d_model), dtype),
+        "w_decay_base": jax.ShapeDtypeStruct((d_attn,), jnp.float32),
+        "w_decay_a": jax.ShapeDtypeStruct((d_model, LORA_RANK), dtype),
+        "w_decay_b": jax.ShapeDtypeStruct((LORA_RANK, d_attn), dtype),
+        "u": jax.ShapeDtypeStruct((H, head_dim), jnp.float32),
+        "ln_scale": jax.ShapeDtypeStruct((d_attn,), jnp.float32),
+    }
+
+
+def rwkv_state_shapes(B: int, d_model: int, *, head_dim: int = 64,
+                      tp_pad: int = 1):
+    H = _heads(d_model, head_dim, tp_pad)
+    return {
+        "shift_t": jax.ShapeDtypeStruct((B, d_model), jnp.bfloat16),
+        "shift_c": jax.ShapeDtypeStruct((B, d_model), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((B, H, head_dim, head_dim), jnp.float32),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]):
+    """x (B, S, d) -> x shifted right one step; ``prev`` is the last token of
+    the previous segment (decode/prefill chaining)."""
+    if prev is None:
+        first = jnp.zeros_like(x[:, :1])
+    else:
+        first = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas WKV with custom VJP (beyond-paper; kernels/wkv_scan.py).
+# Forward = VMEM-resident kernel; backward = sequential reverse chunk scan
+# from the kernel's chunk-entry checkpoints.
+
+
+@jax.custom_vjp
+def wkv_fused(w, k, v, r, u):
+    """w/k/r: (B,S,H,dk), v: (B,S,H,dv), u: (H,dk) -> (y, S_fin).
+    Zero initial state (train/prefill)."""
+    from repro.kernels.wkv_scan import wkv_scan_pallas
+    y, s_fin, _ = wkv_scan_pallas(w, k, v, r, u,
+                                  interpret=jax.default_backend() != "tpu")
+    return y, s_fin
+
+
+def _wkv_fwd(w, k, v, r, u):
+    from repro.kernels.wkv_scan import wkv_scan_pallas
+    y, s_fin, s_bounds = wkv_scan_pallas(
+        w, k, v, r, u, interpret=jax.default_backend() != "tpu")
+    return (y, s_fin), (w, k, v, r, u, s_bounds)
+
+
+def _wkv_bwd(res, cot):
+    w, k, v, r, u, s_bounds = res
+    y_bar, sfin_bar = cot
+    B, S, H, dk = k.shape
+    dv = v.shape[-1]
+    nc = s_bounds.shape[1]
+    c = S // nc
+
+    def chunked(t):
+        return t.reshape(B, nc, c, H, -1).swapaxes(0, 1)  # (nc,B,c,H,*)
+
+    w_c, k_c, v_c, r_c, yb_c = map(chunked, (w, k, v, r, y_bar))
+    s0_c = s_bounds.swapaxes(0, 1)                        # (nc,B,H,dk,dv)
+
+    def combine(l, rr):
+        al, bl = l
+        ar, br = rr
+        return al * ar, bl * ar + br
+
+    def chunk_bwd(gbar, inp):
+        w_i, k_i, v_i, r_i, yb_i, s0 = inp                # (B,c,H,*)
+        a = w_i[..., None]                                # (B,c,H,dk,1)
+        b = k_i[..., None] * v_i[..., None, :]            # (B,c,H,dk,dv)
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        ones = jnp.ones_like(A_cum[:, :1])
+        zeros = jnp.zeros_like(B_cum[:, :1])
+        A_prev = jnp.concatenate([ones, A_cum[:, :-1]], axis=1)
+        B_prev = jnp.concatenate([zeros, B_cum[:, :-1]], axis=1)
+        S_prev = A_prev * s0[:, None] + B_prev            # state BEFORE t
+        # P_bar = dL/d(effective state at t) = r_t (x) y_bar_t
+        P_bar = r_i[..., None] * yb_i[..., None, :]       # (B,c,H,dk,dv)
+        # G_t = dL/dS_t: e_t = P_bar_{t+1} (+ carry at t=c); a' = w_{t+1}
+        e = jnp.concatenate([P_bar[:, 1:], jnp.zeros_like(P_bar[:, :1])],
+                            axis=1)
+        e = e.at[:, -1].add(gbar)
+        a_sh = jnp.concatenate([a[:, 1:], jnp.ones_like(a[:, :1])], axis=1)
+        af = jnp.flip(a_sh, axis=1)
+        ef = jnp.flip(e, axis=1)
+        _, Gf = jax.lax.associative_scan(combine, (af, ef), axis=1)
+        G = jnp.flip(Gf, axis=1)                          # (B,c,H,dk,dv)
+
+        b_bar = G + u[None, None, :, :, None] * P_bar
+        w_bar = jnp.sum(G * S_prev, axis=-1)              # (B,c,H,dk)
+        k_bar = jnp.sum(b_bar * v_i[..., None, :], axis=-1)
+        v_bar = jnp.sum(b_bar * k_i[..., None], axis=-2)
+        eff = S_prev + u[None, None, :, :, None] * b
+        r_bar = jnp.sum(eff * yb_i[..., None, :], axis=-1)
+        u_bar = jnp.sum(P_bar * b, axis=(0, 1, 4))        # (H, dk)
+        gbar_prev = a[:, 0] * G[:, 0] + P_bar[:, 0]       # dL/dS0
+        return gbar_prev, (w_bar, k_bar, v_bar, r_bar, u_bar)
+
+    _, outs = jax.lax.scan(chunk_bwd, sfin_bar,
+                           (w_c, k_c, v_c, r_c, yb_c, s0_c), reverse=True)
+    w_bar, k_bar, v_bar, r_bar, u_bar_c = outs
+
+    def unchunk(t):
+        return t.swapaxes(0, 1).reshape(B, S, H, -1)
+
+    return (unchunk(w_bar), unchunk(k_bar), unchunk(v_bar), unchunk(r_bar),
+            u_bar_c.sum(0))
+
+
+wkv_fused.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def _wkv_kernel_call(w, k, v, r, u):
+    """Route through the fused kernel, shard_mapped over (dp, tp-on-heads)
+    when a mesh is active."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+    if rules is None:
+        return wkv_fused(w, k, v, r, u)
+    mesh = rules.mesh
+    tp = rules.physical("tp")
+    dp = rules.physical("dp")
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dpN = 1
+    for a_ in dp_axes:
+        dpN *= mesh.shape[a_]
+    B, S, H, _ = k.shape
+    tpN = mesh.shape[tp]
+    b_spec = dp if B % dpN == 0 else None
+    h_spec = tp if H % tpN == 0 else None
+    return jax.shard_map(
+        wkv_fused,
+        mesh=mesh,
+        in_specs=(P(b_spec, None, h_spec, None),) * 4
+                 + (P(h_spec, None),),
+        out_specs=(P(b_spec, None, h_spec, None),
+                   P(b_spec, h_spec, None, None)),
+        check_vma=False,
+    )(w, k, v, r, u)
+
+
+def _wkv_chunked(w, k, v, r, u, S0, chunk: int):
+    """w,k,r: (B, S, H, dk) f32 (w = per-step decay in (0,1)); v: (B,S,H,dv).
+    Returns y (B, S, H, dv) and final state (B, H, dk, dv)."""
+    B, S, H, dk = k.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+
+    def reshape_c(x):
+        return x.reshape(B, nc, chunk, H, -1).swapaxes(0, 1)
+
+    w_c, k_c, v_c, r_c = map(reshape_c, (w, k, v, r))
+
+    def combine(l, rr):
+        al, bl = l
+        ar, br = rr
+        return al * ar, bl * ar + br
+
+    def step(S_in, inp):
+        wi, ki, vi, ri = inp  # (B, chunk, H, *)
+        a = wi[..., None]                                   # (B,c,H,dk,1)
+        b = ki[..., None] * vi[..., None, :]                # (B,c,H,dk,dv)
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        # State BEFORE step t: shift the inclusive scan right by one.
+        ones = jnp.ones_like(A_cum[:, :1])
+        zeros = jnp.zeros_like(B_cum[:, :1])
+        A_prev = jnp.concatenate([ones, A_cum[:, :-1]], axis=1)
+        B_prev = jnp.concatenate([zeros, B_cum[:, :-1]], axis=1)
+        S_prev = A_prev * S_in[:, None] + B_prev            # (B,c,H,dk,dv)
+        eff = S_prev + u[None, None, :, :, None] * b
+        y = jnp.einsum("bchk,bchkv->bchv", ri, eff)
+        S_out = A_cum[:, -1] * S_in + B_cum[:, -1]
+        return S_out, y
+
+    S_fin, y = jax.lax.scan(step, S0, (w_c, k_c, v_c, r_c))
+    y = y.swapaxes(0, 1).reshape(B, S, H, dv)
+    return y, S_fin
+
+
+def rwkv_tmix_forward(params, x, *, head_dim: int = 64, chunk: int = 16,
+                      state=None, return_state=False,
+                      use_kernel: bool = False):
+    """x (B, S, d_model) -> (B, S, d_model)."""
+    x = shard(x, "dp", None, None)
+    B, S, d = x.shape
+    prev = None if state is None else state["shift_t"]
+    xs = _token_shift(x, prev)
+    mu = params["mu"]
+    xw, xk, xv, xr, xg = [x + (xs - x) * mu[i][None, None] for i in range(5)]
+
+    r = xr @ params["w_r"]
+    k = xk @ params["w_k"]
+    v = xv @ params["w_v"]
+    g = xg @ params["w_g"]
+    r, k, v, g = (shard(t, "dp", None, "tp") for t in (r, k, v, g))
+    decay_raw = (params["w_decay_base"]
+                 + (jnp.tanh((xw @ params["w_decay_a"]).astype(jnp.float32))
+                    @ params["w_decay_b"].astype(jnp.float32)))
+    w = jnp.exp(-jnp.exp(jnp.clip(decay_raw, -20.0, 8.0)))  # (B,S,d_attn)
+
+    H = params["u"].shape[0]
+    def to_heads(t):
+        return t.reshape(B, S, H, head_dim)
+    if use_kernel and state is None:
+        # fused Pallas path (zero initial state: train / prefill)
+        y, S_fin = _wkv_kernel_call(
+            to_heads(w).astype(jnp.float32),
+            to_heads(k).astype(jnp.float32),
+            to_heads(v).astype(jnp.float32),
+            to_heads(r).astype(jnp.float32),
+            params["u"],
+        )
+    else:
+        y, S_fin = _wkv_chunked(
+            to_heads(w).astype(jnp.float32),
+            to_heads(k).astype(jnp.float32),
+            to_heads(v).astype(jnp.float32),
+            to_heads(r).astype(jnp.float32),
+            params["u"],
+            jnp.zeros((B, H, head_dim, head_dim), jnp.float32) if state is None
+            else state["wkv"],
+            chunk,
+        )
+    y = y.reshape(B, S, H * head_dim)
+    # Group-norm over heads (per-head standardisation).
+    yh = y.reshape(B, S, H, head_dim)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, H * head_dim) * params["ln_scale"][None, None]
+    y = (y.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype))
+    out = y @ params["w_o"]
+    out = shard(out, "dp", "sp", None)
+    if return_state:
+        return out, {"shift_t": x[:, -1].astype(jnp.bfloat16), "wkv": S_fin}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    sc = 1.0 / math.sqrt(d_model)
+    return {
+        "mu": jnp.full((2, d_model), 0.5, dtype),  # for k and r
+        "w_k": jax.random.normal(ks[0], (d_model, d_ff), dtype) * sc,
+        "w_v": jax.random.normal(ks[1], (d_ff, d_model), dtype)
+                * (1.0 / math.sqrt(d_ff)),
+        "w_r": jax.random.normal(ks[2], (d_model, d_model), dtype) * sc,
+    }
+
+
+def rwkv_cmix_shapes(d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    return {
+        "mu": jax.ShapeDtypeStruct((2, d_model), dtype),
+        "w_k": jax.ShapeDtypeStruct((d_model, d_ff), dtype),
+        "w_v": jax.ShapeDtypeStruct((d_ff, d_model), dtype),
+        "w_r": jax.ShapeDtypeStruct((d_model, d_model), dtype),
+    }
+
+
+def rwkv_cmix_forward(params, x, *, state=None, return_state=False):
+    x = shard(x, "dp", None, None)
+    prev = None if state is None else state["shift_c"]
+    xs = _token_shift(x, prev)
+    mu = params["mu"]
+    xk = x + (xs - x) * mu[0][None, None]
+    xr = x + (xs - x) * mu[1][None, None]
+    k = xk @ params["w_k"]
+    k = shard(k, "dp", None, "tp")
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = k @ params["w_v"]
+    out = jax.nn.sigmoid((xr @ params["w_r"]).astype(jnp.float32)).astype(x.dtype) * kv
+    out = shard(out, "dp", "sp", None)
+    if return_state:
+        return out, {"shift_c": x[:, -1].astype(jnp.bfloat16)}
+    return out

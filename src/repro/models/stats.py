@@ -1,0 +1,98 @@
+"""Analytic model statistics: parameter counts and MODEL_FLOPS.
+
+MODEL_FLOPS convention (the roofline 'useful FLOPs'):
+  train    6 * N_active * D            (fwd 2ND + bwd 4ND)
+  prefill  2 * N_active * D
+  decode   2 * N_active * B            (one token per sequence)
+with N_active = non-embedding params, MoE experts counted at top_k/E.
+The attention-score FLOPs (not in 6ND) are reported separately.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.models.lm import ModelConfig, param_shapes
+
+__all__ = ["param_counts", "model_flops", "attention_score_flops"]
+
+
+def _leaf_sizes(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _leaf_sizes(v, path + (k,))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _leaf_sizes(v, path + (str(i),))
+    else:
+        yield path, int(np.prod(tree.shape))
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """total / embedding / active (MoE experts scaled by top_k/E)."""
+    shapes = param_shapes(cfg)
+    total = emb = active = 0.0
+    moe_scale = 1.0
+    if cfg.moe is not None:
+        moe_scale = cfg.moe.top_k / cfg.moe.n_experts
+    for path, size in _leaf_sizes(shapes):
+        total += size
+        name = path[-1]
+        is_embed = "embed" in path or "lm_head" in path
+        if is_embed:
+            emb += size
+            continue
+        in_moe_experts = ("ffn" in path and name in
+                          ("w_gate", "w_up", "w_down") and cfg.moe is not None
+                          and "blocks" in path)
+        # expert tensors are rank-3; shared/dense mlp use the same names but
+        # sit outside MoE configs - distinguish via moe presence + pattern
+        if in_moe_experts and _is_moe_position(cfg, path):
+            active += size * moe_scale
+        else:
+            active += size
+    return {"total": total, "embedding": emb, "non_embedding": total - emb,
+            "active": active}
+
+
+def _is_moe_position(cfg: ModelConfig, path: Tuple[str, ...]) -> bool:
+    try:
+        bi = path.index("blocks")
+        pos = int(path[bi + 1])
+    except (ValueError, IndexError):
+        return False
+    return cfg.pattern[pos][1] == "moe"
+
+
+def model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    counts = param_counts(cfg)
+    n = counts["active"]
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    if kind == "decode":
+        return 2.0 * n * batch
+    raise ValueError(kind)
+
+
+def attention_score_flops(cfg: ModelConfig, kind: str, batch: int,
+                          seq: int) -> float:
+    """QK^T + PV flops (causal ~ S^2/2 each; windowed ~ S*W)."""
+    n_attn = sum(1 for m, _ in cfg.pattern if m == "attn")
+    n_local = sum(1 for m, _ in cfg.pattern if m == "attn_local")
+    reps = cfg.n_groups
+    d_attn = cfg.n_heads * cfg.d_head
+    if kind in ("train", "prefill"):
+        full = 2 * 2 * (seq * seq / 2) * d_attn * batch
+        w = cfg.window or seq
+        local = 2 * 2 * (seq * min(w, seq)) * d_attn * batch
+        fwd = reps * (n_attn * full + n_local * local)
+        return 3 * fwd if kind == "train" else fwd
+    if kind == "decode":
+        full = 2 * 2 * seq * d_attn * batch
+        w = cfg.window or seq
+        local = 2 * 2 * min(w, seq) * d_attn * batch
+        return reps * (n_attn * full + n_local * local)
+    raise ValueError(kind)

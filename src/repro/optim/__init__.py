@@ -1,0 +1,12 @@
+"""Optimizer substrate (pure JAX, no optax)."""
+from repro.optim.adamw import (
+    OptConfig,
+    adamw_init,
+    adamw_init_shapes,
+    adamw_update,
+    cosine_lr,
+    global_norm,
+)
+
+__all__ = ["OptConfig", "adamw_init", "adamw_init_shapes", "adamw_update",
+           "cosine_lr", "global_norm"]

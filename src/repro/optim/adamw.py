@@ -1,0 +1,100 @@
+"""AdamW with fp32 master weights, cosine schedule, global-norm clipping.
+
+Mixed-precision discipline: model params live in bf16 for compute; the
+optimizer holds an fp32 master copy plus fp32 moments (all sharded exactly
+like the params - ZeRO-3).  The update runs in fp32 and re-casts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_init_shapes", "adamw_update",
+           "cosine_lr", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _adamw_init_impl(params: Any) -> Any:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_init(params: Any) -> Any:
+    # jit so every output leaf owns a distinct buffer: identical zeros would
+    # otherwise alias and break buffer donation in the train step.
+    return jax.jit(_adamw_init_impl)(params)
+
+
+def adamw_init_shapes(param_shapes: Any) -> Any:
+    """ShapeDtypeStruct mirror of adamw_init (dry-run path)."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "master": jax.tree.map(f32, param_shapes),
+        "mu": jax.tree.map(f32, param_shapes),
+        "nu": jax.tree.map(f32, param_shapes),
+    }
+
+
+def adamw_update(cfg: OptConfig, grads: Any, opt_state: Any,
+                 param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.betas
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    # Separate maps (XLA fuses/CSEs the recomputed clipped grad casts).
+    gc = lambda g: g.astype(jnp.float32) * clip
+    mu = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * gc(g),
+                      grads, opt_state["mu"])
+    nu = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * jnp.square(gc(g)),
+                      grads, opt_state["nu"])
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    master = jax.tree.map(
+        lambda m, v, w: w - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                                  + cfg.weight_decay * w),
+        mu, nu, opt_state["master"])
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, grads)
+    new_state = {"step": step, "master": master, "mu": mu, "nu": nu}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

@@ -1,0 +1,13 @@
+"""Shared test fixtures.
+
+NOTE: device count is NOT forced here (smoke tests and benches must see one
+device); multi-device tests run in subprocesses (see tests/test_mesh.py).
+x64 is enabled per-module where the paper's decode math needs it.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,72 @@
+"""Tests for the precision/threshold tradeoff policy (paper Sec. III-D, IV)."""
+import numpy as np
+import pytest
+
+from repro.core import bounds
+from repro.core.schemes import make_scheme
+
+
+class TestBasics:
+    def test_conservative_L_matches_paper(self):
+        # paper Sec. V: v=8000, entries in {0..50} -> L = 8000*50*50 + 1
+        assert bounds.conservative_L(8000, 50, 50) == 20_000_001
+
+    def test_choose_s_power_of_two(self):
+        s = bounds.choose_s(100)
+        assert s >= 200 and (s & (s - 1)) == 0
+
+    def test_table1_s_values(self):
+        """Paper Table I: L -> s mapping (s = 2^ceil(log2(2L)) with
+        L = v*bound^2+1, v=8000)."""
+        for bound, expected_s in [(100, 2 ** 28), (200, 2 ** 30),
+                                  (500, 2 ** 32), (1000, 2 ** 34),
+                                  (2000, 2 ** 36)]:
+            L = bounds.conservative_L(8000, bound, bound)
+            assert bounds.choose_s(L) == expected_s, bound
+
+    def test_max_abs_matches_paper_form(self):
+        # paper: with s=2L, |X| <= (2L)^{p/p'}/2 (up to the negative tail)
+        L, p, pp = 1000, 4, 2
+        s = 2 * L
+        depth = p // pp - 1
+        got = bounds.max_abs_coefficient(L, s, depth)
+        paper = (2 * L) ** (p // pp) / 2
+        assert got <= paper * 1.01
+
+
+class TestPlanner:
+    def test_small_L_picks_optimal_threshold(self):
+        rep = bounds.plan_p_prime(4, 2, 2, L=20, dtype="float64")
+        assert rep.p_prime == 1 and rep.tau == 4 and rep.safe
+
+    def test_huge_L_forces_higher_threshold(self):
+        # L = 2e7 (paper scale) with p=4: (2L)^4 ~ 2^100 >> 2^53
+        rep64 = bounds.plan_p_prime(4, 2, 2, L=20_000_001, dtype="float64")
+        assert rep64.p_prime > 1
+        assert rep64.safe
+
+    def test_f32_stricter_than_f64(self):
+        rep32 = bounds.plan_p_prime(4, 2, 2, L=1000, dtype="float32")
+        rep64 = bounds.plan_p_prime(4, 2, 2, L=1000, dtype="float64")
+        assert rep32.p_prime >= rep64.p_prime
+        assert rep32.tau >= rep64.tau
+
+    def test_monotone_tradeoff(self):
+        """Larger p' -> smaller digit stack, higher tau (the paper's curve)."""
+        p, m, n = 8, 2, 2
+        taus, maxes = [], []
+        for pp in (1, 2, 4, 8):
+            sch = make_scheme("tradeoff", p, m, n, p_prime=pp)
+            taus.append(sch.tau)
+            maxes.append(bounds.max_abs_coefficient(1000, 2048, sch.digit_depth))
+        assert taus == sorted(taus)
+        assert maxes == sorted(maxes, reverse=True)
+
+    def test_overflow_detection_table1_row5(self):
+        """Table I row 5 (bound 2000 -> error ~ 1): planner flags p'=1
+        as UNSAFE for f64 at the paper's L."""
+        L = bounds.conservative_L(8000, 2000, 2000)
+        s = bounds.choose_s(L)
+        sch = make_scheme("bec", 2, 2, 2)
+        assert not bounds.is_safe(L, s, sch.digit_depth, "float64",
+                                  tau=sch.tau, conditioning_slack_bits=0.0)

@@ -1,0 +1,74 @@
+"""Tests for gradient compression and elastic policy."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (
+    dequantize_tree,
+    error_feedback_update,
+    quantize_tree,
+)
+from repro.distributed.elastic import CodedElasticPolicy, plan_shrink
+
+
+class TestCompression:
+    def test_quantize_roundtrip_accuracy(self, rng):
+        g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+        q, s = quantize_tree(g, bits=15)
+        back = dequantize_tree(q, s)
+        rel = float(jnp.max(jnp.abs(back["w"] - g["w"])) /
+                    jnp.max(jnp.abs(g["w"])))
+        assert rel < 1e-3
+        assert q["w"].dtype == jnp.int32
+
+    def test_scale_is_power_of_two(self, rng):
+        g = {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+        _, s = quantize_tree(g, bits=15)
+        l2 = float(jnp.log2(s["w"]))
+        assert l2 == int(l2)
+
+    def test_error_feedback_unbiased(self, rng):
+        """Sum of EF-compressed grads converges to sum of true grads."""
+        true_sum = np.zeros(16, np.float32)
+        ef_sum = np.zeros(16, np.float32)
+        res = None
+        for t in range(50):
+            g = {"w": jnp.asarray(rng.normal(size=16), jnp.float32)}
+            true_sum += np.asarray(g["w"])
+            deq, res = error_feedback_update(g, res, bits=6)
+            ef_sum += np.asarray(deq["w"])
+        # residual bounds the gap: |sum_true - sum_ef| = |residual|
+        gap = np.abs(true_sum - ef_sum).max()
+        res_mag = float(jnp.abs(res["w"]).max())
+        assert gap <= res_mag + 1e-5
+
+    def test_int_sum_exact_across_orders(self, rng):
+        """The point of the integer grid: order-independent reduction."""
+        g = [jnp.asarray(rng.normal(size=8), jnp.float32) for _ in range(5)]
+        qs = [quantize_tree({"w": x}, bits=12) for x in g]
+        scale = max(float(s["w"]) for _, s in qs)
+        ints = [np.round(np.asarray(x) / scale).astype(np.int64) for x in g]
+        fwd = sum(ints)
+        rev = sum(reversed(ints))
+        np.testing.assert_array_equal(fwd, rev)
+
+
+class TestElastic:
+    def test_slack_tracking(self):
+        pol = CodedElasticPolicy(K=10, tau=4)
+        assert pol.slack == 6
+        for w in (0, 1, 2, 3, 4, 5):
+            pol.mark_failed(w)
+        assert pol.slack == 0 and pol.must_respecialize
+        pol.mark_recovered(0)
+        assert not pol.must_respecialize
+
+    def test_plan_shrink_prefers_model_preserving(self):
+        assert plan_shrink(256) == (16, 16)
+        assert plan_shrink(255) == (8, 16)
+        assert plan_shrink(100) == (8, 8)
+        assert plan_shrink(1) == (1, 1)
+        with pytest.raises(ValueError):
+            plan_shrink(0)

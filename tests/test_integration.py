@@ -1,0 +1,100 @@
+"""Integration tests: HLO analyzer, roofline plumbing, examples smoke."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+class TestHloAnalysis:
+    HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+  %p = (s32[], f32[8,64]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[8,64]{1,0} get-tuple-element(%p), index=1
+  %all-gather.1 = f32[8,64]{1,0} all-gather(%g1), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %t = (s32[], f32[8,64]) tuple(%g0, %all-gather.1)
+}
+
+%cond (p: (s32[], f32[8,64])) -> pred[] {
+  %p = (s32[], f32[8,64]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g0, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,64] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,32]{1,0} parameter(1)
+  %dot.1 = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32]{1,0} all-reduce(%dot.1), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %init = (s32[], f32[8,64]) tuple()
+  %w = (s32[], f32[8,64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[8,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+    def test_collective_bytes_with_trip_counts(self):
+        s = analyze_hlo(self.HLO)
+        # all-gather inside while x7: 8*64*4 bytes * (4-1)/4 * 7
+        expect_ag = 8 * 64 * 4 * 0.75 * 7
+        assert s.bytes_by_kind["all-gather"] == pytest.approx(expect_ag)
+        # all-reduce at entry: 8*32*4 * 2*(2-1)/2
+        assert s.bytes_by_kind["all-reduce"] == pytest.approx(8 * 32 * 4 * 1.0)
+
+    def test_dot_flops(self):
+        s = analyze_hlo(self.HLO)
+        assert s.dot_flops == pytest.approx(2 * 8 * 32 * 16)
+
+    def test_lhs_name_collision_not_double_counted(self):
+        s = analyze_hlo(self.HLO)
+        assert s.count_by_kind["all-gather"] == 1
+        assert s.count_by_kind["all-reduce"] == 1
+
+
+class TestRoofline:
+    def test_roofline_row_math(self, tmp_path):
+        from benchmarks.roofline import roofline_row
+        cell = {
+            "arch": "qwen3_0_6b", "shape": "train_4k", "multi_pod": False,
+            "n_devices": 256, "compile_s": 1.0,
+            "dot_flops": 4.8e13, "hbm_bytes": 1.1e12,
+            "cost": {"flops": 2e12, "bytes accessed": 1.1e11},
+            "collectives": {"total_bytes": 1.5e11},
+            "memory": {"argument_bytes": 8e10, "temp_bytes": 5e9},
+        }
+        r = roofline_row(cell)
+        assert r["dominant"] == "collective"
+        assert 0 < r["roofline_fraction"] < 1
+        assert r["compute_s"] == pytest.approx(4.8e13 / 197e12)
+
+
+class TestExamples:
+    def _run(self, script, timeout=1500, extra=()):
+        env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+        import os
+        env.update({k: v for k, v in os.environ.items()
+                    if k not in ("XLA_FLAGS",)})
+        env["PYTHONPATH"] = str(ROOT / "src")
+        p = subprocess.run([sys.executable, str(ROOT / "examples" / script),
+                            *extra],
+                           capture_output=True, text=True, timeout=timeout,
+                           env=env)
+        assert p.returncode == 0, f"{script}:\n{p.stdout}\n{p.stderr}"
+        return p.stdout
+
+    def test_quickstart(self):
+        out = self._run("quickstart.py")
+        assert "exact recovery" in out
+
+    def test_train_lm_quick(self):
+        out = self._run("train_lm.py", extra=("--quick",))
+        assert "learned successfully" in out

@@ -1,0 +1,84 @@
+"""Evaluation points, Vandermonde conditioning, and the straggler simulator."""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import LatencyModel, make_points, simulate_completion  # noqa: E402
+from repro.core.vandermonde import (  # noqa: E402
+    inverse_vandermonde,
+    vandermonde,
+)
+
+
+class TestPoints:
+    def test_kinds_distinct(self):
+        for kind in ("equispaced", "chebyshev", "unit_circle"):
+            z = make_points(kind, 10)
+            assert len(np.unique(np.round(z, 12))) == 10
+
+    def test_equispaced_matches_paper(self):
+        z = make_points("equispaced", 10)
+        assert z[0] == -1.0 and z[-1] == 1.0
+        np.testing.assert_allclose(np.diff(z), 2 / 9)
+
+    def test_unit_circle_modulus(self):
+        z = make_points("unit_circle", 8)
+        np.testing.assert_allclose(np.abs(z), 1.0)
+
+    def test_conditioning_ordering(self):
+        """cheb < equispaced condition number; unit circle ~ 1 (paper Sec. V)."""
+        K = 12
+        conds = {}
+        for kind in ("equispaced", "chebyshev", "unit_circle"):
+            V = vandermonde(make_points(kind, K), K)
+            conds[kind] = np.linalg.cond(V)
+        assert conds["chebyshev"] < conds["equispaced"]
+        assert conds["unit_circle"] < 10  # DFT-like
+        assert conds["unit_circle"] < conds["chebyshev"]
+
+
+class TestInverseVandermonde:
+    def test_matches_inv(self):
+        z = make_points("chebyshev", 7)
+        W = inverse_vandermonde(z)
+        V = vandermonde(z, 7)
+        np.testing.assert_allclose(W @ V, np.eye(7), atol=1e-9)
+
+    def test_lagrange_beats_lu_on_clustered_points(self):
+        """Beyond-paper: explicit Lagrange inverse is more accurate than LU
+        on clustered real nodes (the decode path uses it for static sets)."""
+        z = make_points("chebyshev", 24)[:10]  # clustered subset
+        V = vandermonde(z, 10)
+        W = inverse_vandermonde(z)
+        x = np.random.default_rng(0).normal(size=10)
+        y = V @ x
+        err_lagrange = np.abs(W @ y - x).max()
+        err_lu = np.abs(np.linalg.solve(V, y) - x).max()
+        assert err_lagrange <= err_lu * 10  # at least comparable
+        assert err_lagrange < 1e-4
+
+
+class TestSimulator:
+    def test_threshold_latency_flat_then_jump(self):
+        """Paper Fig. 1 shape: tau=4, K=10 -> flat for S <= 6, jump at 7."""
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0)
+        med = {}
+        for S in (0, 2, 4, 6, 7, 8):
+            lat = simulate_completion(10, 4, S, model, trials=50, seed=1)
+            med[S] = float(np.median(lat))
+        assert med[0] == med[2] == med[4] == med[6] == 1.0
+        assert med[7] == 2.0 and med[8] == 2.0
+
+    def test_baseline_degrades_earlier(self):
+        """tau=9 (polycode): ANY 2 stragglers already hurt (paper Fig. 1)."""
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0)
+        lat = simulate_completion(10, 9, 2, model, trials=50, seed=2)
+        assert float(np.median(lat)) == 2.0
+
+    def test_survivor_set(self):
+        from repro.core import WorkerTimes
+        wt = WorkerTimes(np.array([5.0, 1.0, 3.0, 2.0]))
+        assert wt.survivors_at_threshold(2).tolist() == [1, 3]

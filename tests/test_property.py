@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) for the coding-scheme invariants.
+
+Invariants checked over randomized geometries and erasure patterns:
+  1. exact recovery from any >= tau survivors (unit-circle points);
+  2. exponent collision-freedom: useful and interference terms never share
+     a (z, s) monomial (the paper's Sec. III-B / IV 'distinctness' claims);
+  3. the z-degree equals tau - 1 (threshold = degree + 1);
+  4. the digit-extraction bound |sum of negative digits| < 1/2 holds for
+     any L and s >= 2L;
+  5. encode coefficients are consistent with the exponent tables.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import coded_matmul, make_plan, make_scheme, uncoded_matmul  # noqa: E402
+
+
+def geometries():
+    return st.tuples(
+        st.integers(1, 4),   # p
+        st.integers(1, 3),   # m
+        st.integers(1, 3),   # n
+    )
+
+
+@st.composite
+def tradeoff_geometries(draw):
+    p = draw(st.integers(1, 6))
+    divisors = [d for d in range(1, p + 1) if p % d == 0]
+    pp = draw(st.sampled_from(divisors))
+    m = draw(st.integers(1, 3))
+    n = draw(st.integers(1, 3))
+    return p, m, n, pp
+
+
+@settings(max_examples=25, deadline=None)
+@given(geometries(), st.integers(0, 2 ** 31 - 1))
+def test_bec_exact_recovery_any_survivors(geom, seed):
+    p, m, n = geom
+    rng = np.random.default_rng(seed)
+    v = p * 4
+    A = rng.integers(-3, 4, size=(v, m * 3)).astype(np.float64)
+    B = rng.integers(-3, 4, size=(v, n * 3)).astype(np.float64)
+    L = v * 3 * 3 + 1
+    sch = make_scheme("bec", p, m, n)
+    K = sch.tau + 3
+    plan = make_plan("bec", p, m, n, K=K, L=L, points="unit_circle")
+    surv = rng.choice(K, size=sch.tau, replace=False).tolist()
+    C = coded_matmul(A, B, plan, survivors=surv)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(uncoded_matmul(A, B)),
+                               atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tradeoff_geometries())
+def test_exponent_collision_freedom(geom):
+    """Useful (z, s=0) monomials are hit ONLY by u=v (depth-matched) pairs."""
+    p, m, n, pp = geom
+    sch = make_scheme("tradeoff", p, m, n, p_prime=pp)
+    az, asx = sch.a_exponents()
+    bz, bsx = sch.b_exponents()
+    useful = set(map(int, sch.useful_z_exp().ravel()))
+    # enumerate every product monomial
+    for ua in range(p):
+        for ia in range(m):
+            for ub in range(p):
+                for jb in range(n):
+                    ze = int(az[ua, ia] + bz[ub, jb])
+                    se = int(asx[ua, ia] + bsx[ub, jb])
+                    if se == 0 and ze in useful:
+                        # must be a depth-matched (contributing) pair
+                        assert ua == ub, (geom, ua, ia, ub, jb)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tradeoff_geometries())
+def test_degree_matches_threshold(geom):
+    p, m, n, pp = geom
+    sch = make_scheme("tradeoff", p, m, n, p_prime=pp)
+    az, _ = sch.a_exponents()
+    bz, _ = sch.b_exponents()
+    assert int(az.max() + bz.max()) == sch.tau - 1
+    # every useful power is within range
+    assert int(sch.useful_z_exp().max()) <= sch.tau - 1
+    assert int(sch.useful_z_exp().min()) >= 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 40))
+def test_negative_digit_tail_below_half(depth, L):
+    """Paper Sec. III-C: |sum_{d<0} * s^d| <= (L-1)/(2L-1) < 1/2."""
+    s = 2 * L
+    tail = sum((L - 1) * float(s) ** (-d) for d in range(1, depth + 1))
+    assert tail < 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(tradeoff_geometries(), st.integers(0, 2 ** 31 - 1))
+def test_encode_coeffs_match_exponents(geom, seed):
+    p, m, n, pp = geom
+    sch = make_scheme("tradeoff", p, m, n, p_prime=pp)
+    rng = np.random.default_rng(seed)
+    z = rng.uniform(-1, 1, size=3)
+    s = 8.0
+    ca, cb = sch.encode_coeffs(z, s)
+    az, asx = sch.a_exponents()
+    bz, bsx = sch.b_exponents()
+    for k in range(3):
+        np.testing.assert_allclose(
+            ca[k], (s ** asx.astype(float)) * z[k] ** az, rtol=1e-12)
+        np.testing.assert_allclose(
+            cb[k], (s ** bsx.astype(float)) * z[k] ** bz, rtol=1e-12)

@@ -1,0 +1,84 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline at paper geometry (m=n=p=2, K=10 workers, integer
+matrices, equispaced points - paper Sec. V), asserting the headline claims:
+exact decode under the maximum erasure budget, BEC's 6-straggler tolerance
+vs the polynomial-code baseline's 1, and the latency-shape of Fig. 1.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    LatencyModel,
+    coded_matmul,
+    make_plan,
+    simulate_completion,
+    uncoded_matmul,
+)
+
+
+@pytest.fixture(scope="module")
+def paper_setup():
+    rng = np.random.default_rng(42)
+    v = r = t = 256  # scaled-down Sec. V geometry
+    A = jnp.asarray(rng.integers(0, 51, size=(v, r)), jnp.float64)
+    B = jnp.asarray(rng.integers(0, 51, size=(v, t)), jnp.float64)
+    L = v * 50 * 50 + 1
+    return A, B, L
+
+
+class TestPaperSystem:
+    def test_bec_survives_six_stragglers(self, paper_setup):
+        """The paper's headline: tau=4 of K=10 -> any 6 workers can die."""
+        A, B, L = paper_setup
+        plan = make_plan("bec", 2, 2, 2, K=10, L=L, points="unit_circle")
+        assert plan.tau == 4
+        C_ref = uncoded_matmul(A, B)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            dead = rng.choice(10, size=6, replace=False).tolist()
+            C = coded_matmul(A, B, plan, erased=dead)
+            np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref),
+                                       atol=1e-6)
+
+    def test_polycode_needs_nine(self, paper_setup):
+        A, B, L = paper_setup
+        plan = make_plan("polycode", 2, 2, 2, K=10, L=L, points="unit_circle")
+        assert plan.tau == 9
+        C_ref = uncoded_matmul(A, B)
+        C = coded_matmul(A, B, plan, erased=[5])  # 1 straggler ok
+        np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), atol=1e-6)
+        with pytest.raises(ValueError, match="undecodable"):
+            coded_matmul(A, B, plan, erased=[0, 1])  # 2 stragglers fatal
+
+    def test_fig1_latency_shape(self):
+        """BEC flat to S=6 then jumps; polycode degrades from S=2."""
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0)
+        bec = [float(np.median(simulate_completion(10, 4, S, model,
+                                                   trials=30, seed=S)))
+               for S in range(9)]
+        poly = [float(np.median(simulate_completion(10, 9, S, model,
+                                                    trials=30, seed=S)))
+                for S in range(9)]
+        assert bec[:7] == [1.0] * 7 and bec[7] == 2.0
+        assert poly[0] == poly[1] == 1.0 and poly[2] == 2.0
+
+    def test_end_to_end_float_workflow(self, paper_setup):
+        """Floats via scale-and-round (paper footnote 1): quantised coded
+        product matches the quantised reference exactly."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(128, 64))
+        w = rng.normal(size=(128, 96))
+        qmax = 31  # 6-bit grid
+        sx = np.abs(x).max() / qmax
+        sw = np.abs(w).max() / qmax
+        xi, wi = np.round(x / sx), np.round(w / sw)
+        L = 128 * qmax * qmax + 1
+        plan = make_plan("bec", 2, 2, 2, K=8, L=L, points="unit_circle")
+        C = coded_matmul(jnp.asarray(xi), jnp.asarray(wi), plan, erased=[0, 7])
+        np.testing.assert_allclose(np.asarray(C), xi.T @ wi, atol=1e-6)
