@@ -1,12 +1,20 @@
-"""Microbenchmarks for the three Pallas kernel stages (+ XLA reference).
+"""Microbenchmarks for the Pallas kernel stages (+ XLA reference).
 
 On this CPU container the kernels run in interpret mode, so absolute times
 are NOT TPU-indicative; the value here is (a) regression tracking of the
-wrapper overhead and (b) the FLOP/byte accounting printed per stage, which
-feeds the kernel-level roofline discussion in EXPERIMENTS.md.
+wrapper overhead, (b) fused-vs-staged pipeline comparison at matched sizes,
+and (c) the FLOP/byte accounting printed per stage, which feeds the
+kernel-level roofline discussion in EXPERIMENTS.md.
+
+``main(save=path)`` persists the rows as JSON (name, us, derived) so later
+PRs have a regression baseline (run.py writes BENCH_kernels.json).
+``python -m benchmarks.kernels_micro --check`` runs a correctness smoke:
+the fused megakernel must match the XLA reference (CI gate).
 """
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import numpy as np
@@ -25,6 +33,24 @@ def _time(f, *args, reps=5):
         out = f(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _fused_inputs(rng, K=4, P=4, Q=4, v=256, r=256, t=256):
+    ca = jnp.asarray(rng.normal(size=(K, P)), jnp.float32)
+    cb = jnp.asarray(rng.normal(size=(K, Q)), jnp.float32)
+    a_blocks = jnp.asarray(rng.normal(size=(P, v, r)), jnp.float32)
+    b_blocks = jnp.asarray(rng.normal(size=(Q, v, t)), jnp.float32)
+    return ca, cb, a_blocks, b_blocks
+
+
+def _staged_pipeline(ca, cb, a_blocks, b_blocks):
+    """encode -> HBM -> matmul per worker: the pre-fusion schedule."""
+    K = ca.shape[0]
+    P, v, r = a_blocks.shape
+    Q, _, t = b_blocks.shape
+    at = ops.encode(ca, a_blocks.reshape(P, v * r)).reshape(K, v, r)
+    bt = ops.encode(cb, b_blocks.reshape(Q, v * t)).reshape(K, v, t)
+    return jnp.stack([ops.matmul_t(at[k], bt[k]) for k in range(K)])
 
 
 def run():
@@ -49,6 +75,25 @@ def run():
     rows.append(("block_matmul_pallas_interp", us_k, f"flops={2*v*r*t:.2e}"))
     rows.append(("block_matmul_xla_ref", us_ref, f"flops={2*v*r*t:.2e}"))
 
+    # fused encode+product megakernel vs the staged schedule, K=4 workers.
+    # HBM traffic saved by fusion: the coded operands A~/B~ (2*v*(r+t)
+    # floats per worker written then re-read) never materialise.
+    ca, cb, a_blocks, b_blocks = _fused_inputs(rng)
+    Kf, Pf, (_, vf, rf) = ca.shape[0], ca.shape[1], a_blocks.shape
+    tf = b_blocks.shape[2]
+    flops_f = Kf * (2 * Pf * vf * rf + 2 * cb.shape[1] * vf * tf
+                    + 2 * vf * rf * tf)
+    saved = Kf * 2 * vf * (rf + tf) * 4  # bytes of A~/B~ HBM round-trip
+    us_fused = _time(
+        lambda *a: ops.fused_worker(*a), ca, cb, a_blocks, b_blocks)
+    us_staged = _time(_staged_pipeline, ca, cb, a_blocks, b_blocks)
+    us_ref = _time(jax.jit(ref.fused_worker_ref), ca, cb, a_blocks, b_blocks)
+    rows.append(("fused_worker_pallas_interp", us_fused,
+                 f"flops={flops_f:.2e};hbm_saved_bytes={saved:.2e}"))
+    rows.append(("staged_encode_matmul_interp", us_staged,
+                 f"flops={flops_f:.2e}"))
+    rows.append(("fused_worker_xla_ref", us_ref, f"flops={flops_f:.2e}"))
+
     # decode: mn=4 from tau=4, E block
     W = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
     Y = jnp.asarray(rng.integers(-100, 100, size=(4, E)), jnp.float32)
@@ -59,12 +104,48 @@ def run():
     return rows
 
 
-def main():
+def check() -> None:
+    """CI smoke: the fused megakernel must match the XLA reference."""
+    rng = np.random.default_rng(1)
+    ca, cb, a_blocks, b_blocks = _fused_inputs(rng, K=3, P=4, Q=2,
+                                               v=192, r=160, t=96)
+    out = ops.fused_worker(ca, cb, a_blocks, b_blocks)
+    exp = ref.fused_worker_ref(ca, cb, a_blocks, b_blocks)
+    err = float(jnp.max(jnp.abs(out - exp)))
+    scale = float(jnp.max(jnp.abs(exp))) + 1e-9
+    assert err / scale < 1e-4, f"fused kernel mismatch: rel err {err/scale:.3e}"
+    print(f"fused kernel check OK (rel err {err/scale:.3e})")
+
+
+def save_json(rows, path: str) -> None:
+    records = []
+    for name, us, derived in rows:
+        rec = {"name": name, "us": round(us, 1)}
+        for item in derived.split(";"):
+            k, _, val = item.partition("=")
+            rec[k] = float(val)
+        records.append(rec)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=2)
+        f.write("\n")
+
+
+def main(save: str | None = None):
     rows = run()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if save:
+        save_json(rows, save)
+        print(f"saved {save}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    if "--check" in sys.argv:
+        check()
+    else:
+        save = None
+        if "--save" in sys.argv:
+            i = sys.argv.index("--save")
+            save = sys.argv[i + 1] if i + 1 < len(sys.argv) else "BENCH_kernels.json"
+        main(save=save)

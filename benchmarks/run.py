@@ -26,7 +26,7 @@ def main() -> None:
 
     print("\n== kernels_micro (Pallas stages, interpret mode) ==")
     from benchmarks import kernels_micro
-    kernels_micro.main()
+    kernels_micro.main(save="BENCH_kernels.json")
 
     print("\n== roofline (from dry-run artifacts) ==")
     from benchmarks import roofline

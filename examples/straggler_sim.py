@@ -50,5 +50,5 @@ for lost in ([], [2], [0, 1]):
     C = coded_matmul_mesh(A, B, plan, mesh, jnp.asarray(mask),
                           dtype=jnp.float64)
     err = float(jnp.max(jnp.abs(C - C_ref)))
-    print(f"lost chips {lost or 'none':<8} -> max error {err} "
+    print(f"lost chips {str(lost or 'none'):<8} -> max error {err} "
           f"({'exact' if err == 0 else 'FAIL'})")

@@ -3,12 +3,21 @@ from repro.core.api import (
     CodedMatmulPlan,
     coded_matmul,
     encode_blocks,
+    fused_worker_products,
     make_plan,
     uncoded_matmul,
     worker_products,
 )
 from repro.core.bounds import BoundsReport, choose_s, conservative_L, plan_p_prime
-from repro.core.decoding import decode, decode_masked, digit_extract
+from repro.core.decoding import (
+    DecodePanel,
+    DecodePanelCache,
+    decode,
+    decode_masked,
+    decode_with_panel,
+    digit_extract,
+    make_decode_panel,
+)
 from repro.core.partition import GridSpec, block_decompose, block_recompose
 from repro.core.points import make_points
 from repro.core.schemes import (
@@ -22,9 +31,11 @@ from repro.core.simulator import LatencyModel, WorkerTimes, simulate_completion
 
 __all__ = [
     "CodedMatmulPlan", "coded_matmul", "encode_blocks", "make_plan",
-    "uncoded_matmul", "worker_products",
+    "uncoded_matmul", "worker_products", "fused_worker_products",
     "BoundsReport", "choose_s", "conservative_L", "plan_p_prime",
     "decode", "decode_masked", "digit_extract",
+    "DecodePanel", "DecodePanelCache", "decode_with_panel",
+    "make_decode_panel",
     "GridSpec", "block_decompose", "block_recompose",
     "make_points",
     "EntangledBoundedScheme", "PolynomialCodeYu", "Scheme", "TradeoffScheme",

@@ -16,12 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds as bounds_mod
-from repro.core.decoding import decode, decode_masked
+from repro.core.decoding import DecodePanelCache, decode, decode_masked
 from repro.core.partition import GridSpec, block_decompose, block_recompose, unpad
 from repro.core.points import make_points
 from repro.core.schemes import Scheme, make_scheme
 
-__all__ = ["CodedMatmulPlan", "make_plan", "coded_matmul", "encode_blocks", "worker_products"]
+__all__ = ["CodedMatmulPlan", "make_plan", "coded_matmul", "encode_blocks",
+           "worker_products", "fused_worker_products"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,15 @@ class CodedMatmulPlan:
     @property
     def is_complex(self) -> bool:
         return np.iscomplexobj(self.z_points)
+
+    def make_panel_cache(self, ridge: float = 0.0) -> DecodePanelCache:
+        """Per-mask decode-panel cache (LU of the masked normal equations).
+
+        Build ONE cache per plan and reuse it across steps: panels are
+        factored on the host on first sight of an erasure pattern and
+        amortised to a dict lookup afterwards (DESIGN.md Sec. 3.4).
+        """
+        return DecodePanelCache(self.scheme, self.z_points, ridge)
 
 
 def make_plan(
@@ -81,6 +91,27 @@ def worker_products(a_tilde: jnp.ndarray, b_tilde: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("kvr,kvt->krt", a_tilde, b_tilde)
 
 
+def fused_worker_products(plan: CodedMatmulPlan, a_blocks: jnp.ndarray,
+                          b_blocks: jnp.ndarray) -> jnp.ndarray:
+    """All worker products via the fused encode+product Pallas megakernel.
+
+    a_blocks: (p, m, bv, br), b_blocks: (p, n, bv, bt) -> (K, br, bt).
+    Equivalent to encode_blocks + worker_products but the coded matrices
+    A~, B~ are formed only tile-wise in VMEM, never written to HBM.
+    """
+    from repro.kernels import ops as kops
+
+    p, m, bv, br = a_blocks.shape
+    _, n, _, bt = b_blocks.shape
+    ca = jnp.asarray(plan.coeff_a.reshape(plan.K, p * m),
+                     dtype=_coeff_dtype(a_blocks, plan))
+    cb = jnp.asarray(plan.coeff_b.reshape(plan.K, p * n),
+                     dtype=_coeff_dtype(b_blocks, plan))
+    return kops.fused_worker(ca, cb,
+                             a_blocks.reshape(p * m, bv, br),
+                             b_blocks.reshape(p * n, bv, bt))
+
+
 def _coeff_dtype(x: jnp.ndarray, plan: CodedMatmulPlan):
     if plan.is_complex:
         return jnp.complex128 if x.dtype == jnp.float64 else jnp.complex64
@@ -95,13 +126,16 @@ def coded_matmul(
     erased: Optional[Sequence[int]] = None,
     survivors: Optional[Sequence[int]] = None,
     dtype=jnp.float64,
+    fused: bool = False,
 ) -> jnp.ndarray:
     """Compute C = A^T B through the coded pipeline.
 
     A: (v, r), B: (v, t).  ``erased`` lists worker ids treated as stragglers
     (their outputs discarded); alternatively pass an explicit ``survivors``
     order.  Uses the first tau survivors.  Exact for integer matrices within
-    the plan's numeric bounds.
+    the plan's numeric bounds.  ``fused=True`` computes the worker products
+    through the fused encode+product Pallas megakernel (coded matrices never
+    materialised) instead of the staged einsum path.
     """
     if erased is not None and survivors is not None:
         raise ValueError("pass only one of erased/survivors")
@@ -114,8 +148,11 @@ def coded_matmul(
     B = B.astype(dtype)
     a_blocks = block_decompose(A, g.p, g.m)
     b_blocks = block_decompose(B, g.p, g.n)
-    a_tilde, b_tilde = encode_blocks(plan, a_blocks, b_blocks)
-    Y = worker_products(a_tilde, b_tilde)  # (K, br, bt)
+    if fused:
+        Y = fused_worker_products(plan, a_blocks, b_blocks)  # (K, br, bt)
+    else:
+        a_tilde, b_tilde = encode_blocks(plan, a_blocks, b_blocks)
+        Y = worker_products(a_tilde, b_tilde)  # (K, br, bt)
 
     if survivors is None:
         if erased is None:

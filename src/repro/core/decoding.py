@@ -15,6 +15,7 @@ For the baseline polynomial code the useful coefficient IS C_ij (round only).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax.numpy as jnp
@@ -23,7 +24,11 @@ import numpy as np
 from repro.core.schemes import Scheme
 from repro.core.vandermonde import interpolate_solve, interpolate_masked
 
-__all__ = ["digit_extract", "decode", "decode_masked"]
+__all__ = [
+    "digit_extract", "decode", "decode_masked",
+    "DecodePanel", "DecodePanelCache", "make_decode_panel",
+    "decode_with_panel",
+]
 
 
 def digit_extract(X: jnp.ndarray, s: float, round_first: bool = True) -> jnp.ndarray:
@@ -33,18 +38,24 @@ def digit_extract(X: jnp.ndarray, s: float, round_first: bool = True) -> jnp.nda
     return jnp.where(C_hat <= s / 2, C_hat, C_hat - s)
 
 
-def _extract_useful(scheme: Scheme, X: jnp.ndarray, s: float) -> jnp.ndarray:
-    """X: (tau, br, bt) coefficients -> (m, n, br, bt) decoded C blocks."""
+def _finish_extract(scheme: Scheme, Xu: jnp.ndarray, s: float,
+                    tail: tuple) -> jnp.ndarray:
+    """Already-selected useful rows Xu (m*n, ...) -> (m, n, *tail) C blocks:
+    real part, digit extraction (or plain rounding), block reshape."""
     g = scheme.grid
-    idx = scheme.useful_z_exp().reshape(-1)  # (m*n,)
-    Xu = X[idx]  # (m*n, br, bt)
     if jnp.iscomplexobj(Xu):
         Xu = Xu.real
     if scheme.needs_digit_extraction:
         C = digit_extract(Xu, s)
     else:
         C = jnp.round(Xu)
-    return C.reshape(g.m, g.n, *X.shape[1:])
+    return C.reshape(g.m, g.n, *tail)
+
+
+def _extract_useful(scheme: Scheme, X: jnp.ndarray, s: float) -> jnp.ndarray:
+    """X: (tau, br, bt) coefficients -> (m, n, br, bt) decoded C blocks."""
+    idx = scheme.useful_z_exp().reshape(-1)  # (m*n,)
+    return _finish_extract(scheme, X[idx], s, X.shape[1:])
 
 
 def decode(
@@ -81,3 +92,100 @@ def decode_masked(
     """
     X = interpolate_masked(jnp.asarray(z_all), jnp.asarray(Y_all), mask, scheme.tau, ridge)
     return _extract_useful(scheme, X, s)
+
+
+# ---------------------------------------------------------------------------
+# Decode panels: per-survivor-mask setup factored OUT of the decode hot path.
+#
+# The masked normal equations G X = V_w^T Y depend only on (z, mask), not on
+# the worker outputs Y.  A DecodePanel solves them ONCE on the host (LU
+# factorisation of G, then the useful rows of G^{-1} V_w^T) and is reused for
+# every subsequent step with the same erasure pattern: decode becomes a
+# single (mn, K) @ (K, E) matmul + digit extraction, with no per-call
+# factorisation on any device.  Erased workers get zero COLUMNS in W, so
+# garbage rows of Y_all are annihilated without touching the mask again.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePanel:
+    """Precomputed decode weights for one (z_points, survivor-mask) pair."""
+
+    mask: np.ndarray       # (K,) 0/1 as built
+    W: np.ndarray          # (mn, K) useful rows of G^{-1} V_w^T (host const)
+
+    @property
+    def K(self) -> int:
+        return self.W.shape[1]
+
+
+def make_decode_panel(scheme: Scheme, z_all: np.ndarray,
+                      mask: Optional[np.ndarray] = None,
+                      ridge: float = 0.0) -> DecodePanel:
+    """Factor the masked normal equations for a CONCRETE survivor mask.
+
+    Pure HOST math (scipy/numpy, never jax): the panel must stay a constant
+    even when built inside a trace context, so the jitted/shard-mapped decode
+    body that closes over it contains no ``lu``/``triangular_solve``.
+    """
+    import scipy.linalg as sl
+
+    z = np.asarray(z_all)
+    K = z.shape[0]
+    # Binarise: panels model 0/1 survivorship (and the cache keys by
+    # support), so fractional weights would silently alias a cached panel.
+    m = np.ones(K) if mask is None else (np.asarray(mask) != 0).astype(np.float64)
+    if m.shape != (K,):
+        raise ValueError(f"mask shape {m.shape} != ({K},)")
+    if int(np.sum(m != 0)) < scheme.tau:
+        raise ValueError(
+            f"only {int(np.sum(m != 0))} survivors < tau={scheme.tau}")
+    tau = scheme.tau
+    V = z[:, None] ** np.arange(tau)[None, :]               # (K, tau)
+    Vw = V * m[:, None]
+    G = V.conj().T @ Vw                                      # (tau, tau)
+    if ridge:
+        G = G + ridge * np.eye(tau, dtype=G.dtype)
+    lu_piv = sl.lu_factor(G)
+    W_full = sl.lu_solve(lu_piv, Vw.conj().T)                # (tau, K)
+    useful = np.asarray(scheme.useful_z_exp()).reshape(-1)
+    return DecodePanel(mask=m, W=np.asarray(W_full[useful]))
+
+
+def decode_with_panel(scheme: Scheme, panel: DecodePanel, Y_all: jnp.ndarray,
+                      s: float) -> jnp.ndarray:
+    """Y_all: (K, br, bt) ALL worker outputs (garbage where erased)
+    -> (m, n, br, bt) via the precomputed panel.  No linear solve inside."""
+    K = Y_all.shape[0]
+    Yf = Y_all.reshape(K, -1)
+    W = jnp.asarray(panel.W)
+    Xu = W @ Yf.astype(W.dtype)                              # (mn, E)
+    return _finish_extract(scheme, Xu, s, Y_all.shape[1:])
+
+
+class DecodePanelCache:
+    """Memoises DecodePanels by erasure pattern.
+
+    The mesh runtime asks for a panel every step; for a stable mask (the
+    common case - failures are rare events) this turns decode setup from
+    O(tau^3) per call per device into an amortised host-side constant.
+    ``builds`` counts actual factorisations (tests assert cache hits).
+    """
+
+    def __init__(self, scheme: Scheme, z_all: np.ndarray, ridge: float = 0.0):
+        self.scheme = scheme
+        self.z_all = np.asarray(z_all)
+        self.ridge = ridge
+        self.builds = 0
+        self._panels: dict = {}
+
+    def get(self, mask: Optional[np.ndarray] = None) -> DecodePanel:
+        K = self.z_all.shape[0]
+        m = np.ones(K) if mask is None else np.asarray(mask)
+        key = tuple(int(x != 0) for x in m)
+        panel = self._panels.get(key)
+        if panel is None:
+            panel = make_decode_panel(self.scheme, self.z_all, m, self.ridge)
+            self._panels[key] = panel
+            self.builds += 1
+        return panel

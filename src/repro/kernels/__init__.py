@@ -5,6 +5,9 @@ and a padded/jit'd wrapper in ops.py:
 
   coded_encode  - (K x P) @ (P x E) coefficient combine (bandwidth-bound)
   block_matmul  - per-worker A~^T B~ MXU-tiled matmul (compute-bound)
+  coded_fused   - encode + worker product in ONE kernel: coded tiles are
+                  formed in VMEM inside the matmul tiling, so A~/B~ never
+                  touch HBM (the preferred execution mode, DESIGN.md Sec. 3)
   coded_decode  - inverse-Vandermonde panel @ survivor outputs with FUSED
                   digit extraction (round/mod-s/recenter) - the decode never
                   materialises X in HBM.
@@ -16,7 +19,8 @@ from repro.kernels import ops, ref
 from repro.kernels.block_matmul import matmul_t_pallas
 from repro.kernels.coded_decode import decode_pallas
 from repro.kernels.coded_encode import encode_pallas
+from repro.kernels.coded_fused import fused_worker_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
 
 __all__ = ["ops", "ref", "matmul_t_pallas", "decode_pallas", "encode_pallas",
-           "mamba_scan_pallas"]
+           "fused_worker_pallas", "mamba_scan_pallas"]

@@ -17,8 +17,9 @@ from repro.kernels import ref
 from repro.kernels.block_matmul import matmul_t_pallas
 from repro.kernels.coded_decode import decode_pallas
 from repro.kernels.coded_encode import encode_pallas
+from repro.kernels.coded_fused import fused_worker_pallas
 
-__all__ = ["encode", "decode", "matmul_t", "on_tpu"]
+__all__ = ["encode", "decode", "matmul_t", "fused_worker", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -27,6 +28,11 @@ def on_tpu() -> bool:
 
 def _interpret() -> bool:
     return not on_tpu()
+
+
+def _pow2_tile(cap: int, dim: int) -> int:
+    """Clamp a tile size to the next pow2 >= dim (floor 8), capped at cap."""
+    return min(cap, int(2 ** np.ceil(np.log2(max(dim, 8)))))
 
 
 def _pad_last(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
@@ -43,7 +49,7 @@ def encode(coeff: jnp.ndarray, blocks: jnp.ndarray, *, e_blk: int = 2048) -> jnp
         # Pallas TPU has no complex support; unit-circle plans use the oracle.
         return ref.encode_ref(coeff, blocks)
     E = blocks.shape[-1]
-    e_blk = min(e_blk, int(2 ** np.ceil(np.log2(max(E, 8)))))
+    e_blk = _pow2_tile(e_blk, E)
     bp = _pad_last(blocks, e_blk)
     out = encode_pallas(coeff, bp, e_blk=e_blk, interpret=_interpret())
     return out[:, :E]
@@ -55,11 +61,54 @@ def decode(W: jnp.ndarray, Y: jnp.ndarray, s: float, *, extract: bool = True,
     if jnp.iscomplexobj(W) or jnp.iscomplexobj(Y):
         return ref.decode_ref(W, Y, s)
     E = Y.shape[-1]
-    e_blk = min(e_blk, int(2 ** np.ceil(np.log2(max(E, 8)))))
+    e_blk = _pow2_tile(e_blk, E)
     Yp = _pad_last(Y, e_blk)
     out = decode_pallas(W, Yp, s=float(s), extract=extract, e_blk=e_blk,
                         interpret=_interpret())
     return out[:, :E]
+
+
+def fused_worker(
+    coeff_a: jnp.ndarray,
+    coeff_b: jnp.ndarray,
+    a_blocks: jnp.ndarray,
+    b_blocks: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """All-K fused encode+product: coeff_a (K, P), coeff_b (K, Q),
+    a_blocks (P, v, r), b_blocks (Q, v, t) -> (K, r, t).
+
+    Pads v/r/t to tile multiples; promotes blocks to the coefficient dtype
+    (encode semantics).  Complex plans (unit-circle points) fall back to the
+    jnp oracle - Pallas TPU has no complex support.
+    """
+    if any(jnp.iscomplexobj(x) for x in (coeff_a, coeff_b, a_blocks, b_blocks)):
+        return ref.fused_worker_ref(coeff_a, coeff_b, a_blocks, b_blocks,
+                                    out_dtype)
+    dt = jnp.result_type(coeff_a.dtype, coeff_b.dtype,
+                         a_blocks.dtype, b_blocks.dtype)
+    ca = coeff_a.astype(dt)
+    cb = coeff_b.astype(dt)
+    P, v, r = a_blocks.shape
+    Q, _, t = b_blocks.shape
+    bm_ = _pow2_tile(bm, r)
+    bn_ = _pow2_tile(bn, t)
+    # Keep the streamed (P, bk, bm) + (Q, bk, bn) tiles under ~4 MiB f32 so
+    # the double-buffered pipeline fits VMEM even for fat block grids.
+    bk_cap = max(8, int(2 ** np.floor(np.log2(
+        max((4 << 20) // (4 * max(P * bm_ + Q * bn_, 1)), 8)))))
+    bk_ = min(_pow2_tile(bk, v), bk_cap)
+    pad_a = [(0, 0), (0, (-v) % bk_), (0, (-r) % bm_)]
+    pad_b = [(0, 0), (0, (-v) % bk_), (0, (-t) % bn_)]
+    ap = jnp.pad(a_blocks.astype(dt), pad_a)
+    bp = jnp.pad(b_blocks.astype(dt), pad_b)
+    out = fused_worker_pallas(ca, cb, ap, bp, bm=bm_, bn=bn_, bk=bk_,
+                              out_dtype=out_dtype, interpret=_interpret())
+    return out[:, :r, :t]
 
 
 def matmul_t(A: jnp.ndarray, B: jnp.ndarray, *, bm: int = 128, bn: int = 128,
@@ -69,9 +118,9 @@ def matmul_t(A: jnp.ndarray, B: jnp.ndarray, *, bm: int = 128, bn: int = 128,
         return ref.matmul_t_ref(A, B, out_dtype)
     v, r = A.shape
     _, t = B.shape
-    bm_ = min(bm, int(2 ** np.ceil(np.log2(max(r, 8)))))
-    bn_ = min(bn, int(2 ** np.ceil(np.log2(max(t, 8)))))
-    bk_ = min(bk, int(2 ** np.ceil(np.log2(max(v, 8)))))
+    bm_ = _pow2_tile(bm, r)
+    bn_ = _pow2_tile(bn, t)
+    bk_ = _pow2_tile(bk, v)
     Ap = jnp.pad(A, (((-v) % bk_ and (0, (-v) % bk_)) or (0, 0),
                      ((-r) % bm_ and (0, (-r) % bm_)) or (0, 0)))
     Bp = jnp.pad(B, (((-v) % bk_ and (0, (-v) % bk_)) or (0, 0),

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["encode_ref", "decode_ref", "matmul_t_ref"]
+__all__ = ["encode_ref", "decode_ref", "matmul_t_ref", "fused_worker_ref"]
 
 
 def encode_ref(coeff: jnp.ndarray, blocks: jnp.ndarray) -> jnp.ndarray:
@@ -33,6 +33,23 @@ def decode_ref(W: jnp.ndarray, Y: jnp.ndarray, s: float) -> jnp.ndarray:
     R = jnp.round(X)
     C_hat = jnp.mod(R, s)
     return jnp.where(C_hat <= s / 2, C_hat, C_hat - s)
+
+
+def fused_worker_ref(coeff_a: jnp.ndarray, coeff_b: jnp.ndarray,
+                     a_blocks: jnp.ndarray, b_blocks: jnp.ndarray,
+                     out_dtype=None) -> jnp.ndarray:
+    """coeff_a: (K, P), coeff_b: (K, Q), a_blocks: (P, v, r),
+    b_blocks: (Q, v, t) -> (K, r, t).
+
+    The fused encode+product stage: worker k's output is
+    Y_k = (sum_P ca[k,P] A_P)^T (sum_Q cb[k,Q] B_Q), staged explicitly here
+    (coded matrices materialised) as ground truth for the megakernel.
+    """
+    dt = coeff_a.dtype
+    a_tilde = jnp.einsum("kp,pvr->kvr", coeff_a, a_blocks.astype(dt))
+    b_tilde = jnp.einsum("kq,qvt->kvt", coeff_b, b_blocks.astype(dt))
+    Y = jnp.einsum("kvr,kvt->krt", a_tilde, b_tilde)
+    return Y.astype(out_dtype or dt)
 
 
 def matmul_t_ref(A: jnp.ndarray, B: jnp.ndarray, out_dtype=None) -> jnp.ndarray:

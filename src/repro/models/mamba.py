@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import shard
+from repro.distributed.sharding import shard_map_compat
 
 __all__ = ["init_mamba", "mamba_shapes", "mamba_forward", "mamba_decode_step",
            "mamba_state_shapes"]
@@ -257,7 +258,7 @@ def _kernel_scan(params, dt_raw, Bm, Cm, x):
     tpN = mesh.shape[tp]
     b_spec = dp if B % dpN == 0 else None
     d_spec = tp if d % tpN == 0 else None
-    y, h_fin = jax.shard_map(
+    y, h_fin = shard_map_compat(
         lambda dt_, x_, b_, c_, al_, dd_: mamba_scan_fused(
             dt_, x_, b_, c_, al_, dd_),
         mesh=mesh,
@@ -265,7 +266,6 @@ def _kernel_scan(params, dt_raw, Bm, Cm, x):
                   P(b_spec, None, None), P(b_spec, None, None),
                   P(d_spec, None), P(d_spec)),
         out_specs=(P(b_spec, None, d_spec), P(b_spec, d_spec, None)),
-        check_vma=False,
     )(dt, xf, Bf, Cf, params["A_log"], params["D"])
     return y, h_fin
 

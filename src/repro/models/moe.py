@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import current_rules, shard
-from repro.distributed.sharding import AxisRules
+from repro.distributed.sharding import AxisRules, shard_map_compat
 
 __all__ = ["MoEConfig", "init_moe", "moe_shapes", "apply_moe"]
 
@@ -154,7 +154,8 @@ def _moe_dense(params, x, cfg: MoEConfig):
 
 
 def _moe_ep_body(x, router_w, w_gate, w_up, w_down, cfg: MoEConfig,
-                 ep_axis: str, dp_axes: Tuple[str, ...], capacity: int):
+                 ep_axis: str, dp_axes: Tuple[str, ...], capacity: int,
+                 ep: int):
     """shard_map body.  x (B_loc, S_loc, d) local tokens; expert weights
     (E_loc, d/dp, ff) - FSDP-gathered here; returns (y, aux)."""
     # FSDP all-gather of expert weights over the data axes.
@@ -162,7 +163,6 @@ def _moe_ep_body(x, router_w, w_gate, w_up, w_down, cfg: MoEConfig,
         w_gate = jax.lax.all_gather(w_gate, ax, axis=1, tiled=True)
         w_up = jax.lax.all_gather(w_up, ax, axis=1, tiled=True)
         w_down = jax.lax.all_gather(w_down, ax, axis=2, tiled=True)
-    ep = jax.lax.axis_size(ep_axis)
     B_loc, S_loc, d = x.shape
     T = B_loc * S_loc
     xf = x.reshape(T, d)
@@ -228,8 +228,8 @@ def _moe_ep(params, x, cfg: MoEConfig, rules: AxisRules):
     batch_spec = dp_axes if b_shard > 1 else None
     seq_spec = ep_axis if seq_shard > 1 else None
     body = partial(_moe_ep_body, cfg=cfg, ep_axis=ep_axis, dp_axes=dp_axes,
-                   capacity=capacity)
-    y, aux = jax.shard_map(
+                   capacity=capacity, ep=ep)
+    y, aux = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(
@@ -240,7 +240,6 @@ def _moe_ep(params, x, cfg: MoEConfig, rules: AxisRules):
             P(ep_axis, None, dp_axes),             # w_down (E, ff, d)
         ),
         out_specs=(P(batch_spec, seq_spec, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
     if cfg.n_shared:
         y = y + _shared_ffn(params, x.reshape(-1, d), cfg.act).reshape(x.shape)

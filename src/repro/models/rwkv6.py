@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import shard
+from repro.distributed.sharding import shard_map_compat
 
 __all__ = ["init_rwkv_tmix", "rwkv_tmix_shapes", "rwkv_tmix_forward",
            "init_rwkv_cmix", "rwkv_cmix_shapes", "rwkv_cmix_forward",
@@ -206,14 +207,13 @@ def _wkv_kernel_call(w, k, v, r, u):
     tpN = mesh.shape[tp]
     b_spec = dp if B % dpN == 0 else None
     h_spec = tp if H % tpN == 0 else None
-    return jax.shard_map(
+    return shard_map_compat(
         wkv_fused,
         mesh=mesh,
         in_specs=(P(b_spec, None, h_spec, None),) * 4
                  + (P(h_spec, None),),
         out_specs=(P(b_spec, None, h_spec, None),
                    P(b_spec, h_spec, None, None)),
-        check_vma=False,
     )(w, k, v, r, u)
 
 

@@ -11,7 +11,10 @@ Invariants checked over randomized geometries and erasure patterns:
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 
