@@ -20,12 +20,12 @@ import jax
 from repro.configs.paper_matmul import SMOKE as PCFG
 from repro.core import (
     LatencyModel,
-    coded_matmul,
     make_plan,
     simulate_completion,
     uncoded_matmul,
 )
 from repro.core.numerics import enable_x64
+from repro.runtime import CodedMatmul, ReferenceExecutor
 
 
 def run(size: int = 0, trials: int = 20):
@@ -61,13 +61,11 @@ def run(size: int = 0, trials: int = 20):
         C_ref = uncoded_matmul(A, B)
         for name, plan in plans.items():
             # measure the MASTER's decode separately on precomputed Y
-            from repro.core.api import encode_blocks, worker_products
             from repro.core.decoding import decode as decode_fn
             from repro.core.partition import block_decompose
             ab = block_decompose(A, cfg.p, cfg.m)
             bb = block_decompose(B, cfg.p, cfg.n)
-            at, btl = encode_blocks(plan, ab, bb)
-            Y = worker_products(at, btl)
+            Y = ReferenceExecutor().worker_products(plan, ab, bb)
             zs = jnp.asarray(plan.z_points[: plan.tau])
             dec = jax.jit(lambda z, y: decode_fn(plan.scheme, z, y, plan.s))
             dec(zs, Y[: plan.tau])  # warm up
@@ -76,7 +74,7 @@ def run(size: int = 0, trials: int = 20):
                 jax.block_until_ready(dec(zs, Y[: plan.tau]))
             t_decode = (time.perf_counter() - t0) / 3
 
-            C = coded_matmul(A, B, plan)
+            C = CodedMatmul(plan, "reference")(A, B)
             err = float(np.linalg.norm(np.asarray(C - C_ref)) /
                         np.linalg.norm(np.asarray(C_ref)))
             model = LatencyModel(base=t_worker,

@@ -13,7 +13,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import json
-from pathlib import Path
 
 # cell id -> (arch, shape)
 CELLS = {
@@ -65,9 +64,11 @@ def run(cell: str, variant: str):
     out = RESULTS_DIR / f"{arch}__{shape}__singlepod{suffix}.json"
     out.write_text(json.dumps(res, indent=2))
     c, m, l, dom = terms(res)
+    mem_bytes = ((res["memory"]["argument_bytes"] or 0)
+                 + (res["memory"]["temp_bytes"] or 0))
     print(f"{cell} [{variant}]: compute={c:.3f}s memory={m:.3f}s "
           f"collective={l:.3f}s dominant={dom} "
-          f"mem/dev={(res['memory']['argument_bytes'] or 0 + res['memory']['temp_bytes'] or 0)/2**30:.1f}GiB "
+          f"mem/dev={mem_bytes / 2**30:.1f}GiB "
           f"compile={res['compile_s']}s")
     return res
 

@@ -22,7 +22,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import make_plan
+from repro.core.partition import block_decompose
 from repro.kernels import ops, ref
+from repro.runtime import FusedKernelExecutor, ReferenceExecutor, StagedKernelExecutor
 
 
 def _time(f, *args, reps=5):
@@ -41,16 +44,6 @@ def _fused_inputs(rng, K=4, P=4, Q=4, v=256, r=256, t=256):
     a_blocks = jnp.asarray(rng.normal(size=(P, v, r)), jnp.float32)
     b_blocks = jnp.asarray(rng.normal(size=(Q, v, t)), jnp.float32)
     return ca, cb, a_blocks, b_blocks
-
-
-def _staged_pipeline(ca, cb, a_blocks, b_blocks):
-    """encode -> HBM -> matmul per worker: the pre-fusion schedule."""
-    K = ca.shape[0]
-    P, v, r = a_blocks.shape
-    Q, _, t = b_blocks.shape
-    at = ops.encode(ca, a_blocks.reshape(P, v * r)).reshape(K, v, r)
-    bt = ops.encode(cb, b_blocks.reshape(Q, v * t)).reshape(K, v, t)
-    return jnp.stack([ops.matmul_t(at[k], bt[k]) for k in range(K)])
 
 
 def run():
@@ -75,19 +68,25 @@ def run():
     rows.append(("block_matmul_pallas_interp", us_k, f"flops={2*v*r*t:.2e}"))
     rows.append(("block_matmul_xla_ref", us_ref, f"flops={2*v*r*t:.2e}"))
 
-    # fused encode+product megakernel vs the staged schedule, K=4 workers.
+    # fused encode+product megakernel vs the staged schedule, via the
+    # runtime executors at matched sizes (K=4 workers, bec 2x2x2 plan).
     # HBM traffic saved by fusion: the coded operands A~/B~ (2*v*(r+t)
     # floats per worker written then re-read) never materialise.
-    ca, cb, a_blocks, b_blocks = _fused_inputs(rng)
-    Kf, Pf, (_, vf, rf) = ca.shape[0], ca.shape[1], a_blocks.shape
-    tf = b_blocks.shape[2]
-    flops_f = Kf * (2 * Pf * vf * rf + 2 * cb.shape[1] * vf * tf
-                    + 2 * vf * rf * tf)
+    vf = rf = tf = 256
+    plan = make_plan("bec", 2, 2, 2, K=4, L=2 * vf * 9 + 1, points="chebyshev")
+    Af = jnp.asarray(rng.normal(size=(2 * vf, 2 * rf)), jnp.float32)
+    Bf = jnp.asarray(rng.normal(size=(2 * vf, 2 * tf)), jnp.float32)
+    ab = block_decompose(Af, 2, 2)                       # (2, 2, vf, rf)
+    bb = block_decompose(Bf, 2, 2)
+    Kf, Pf = plan.K, 4
+    flops_f = Kf * (2 * Pf * vf * rf + 2 * Pf * vf * tf + 2 * vf * rf * tf)
     saved = Kf * 2 * vf * (rf + tf) * 4  # bytes of A~/B~ HBM round-trip
-    us_fused = _time(
-        lambda *a: ops.fused_worker(*a), ca, cb, a_blocks, b_blocks)
-    us_staged = _time(_staged_pipeline, ca, cb, a_blocks, b_blocks)
-    us_ref = _time(jax.jit(ref.fused_worker_ref), ca, cb, a_blocks, b_blocks)
+    fused_x, staged_x, ref_x = (FusedKernelExecutor(), StagedKernelExecutor(),
+                                ReferenceExecutor())
+    us_fused = _time(lambda a, b: fused_x.worker_products(plan, a, b), ab, bb)
+    us_staged = _time(lambda a, b: staged_x.worker_products(plan, a, b), ab, bb)
+    us_ref = _time(jax.jit(lambda a, b: ref_x.worker_products(plan, a, b)),
+                   ab, bb)
     rows.append(("fused_worker_pallas_interp", us_fused,
                  f"flops={flops_f:.2e};hbm_saved_bytes={saved:.2e}"))
     rows.append(("staged_encode_matmul_interp", us_staged,

@@ -6,7 +6,6 @@ paper's corresponding table/figure.
 """
 from __future__ import annotations
 
-import sys
 import time
 
 
@@ -27,6 +26,10 @@ def main() -> None:
     print("\n== kernels_micro (Pallas stages, interpret mode) ==")
     from benchmarks import kernels_micro
     kernels_micro.main(save="BENCH_kernels.json")
+
+    print("\n== runtime_bench (executor cold-compile vs cached serving) ==")
+    from benchmarks import runtime_bench
+    runtime_bench.main(save="BENCH_runtime.json")
 
     print("\n== roofline (from dry-run artifacts) ==")
     from benchmarks import roofline

@@ -11,9 +11,9 @@ import numpy as np
 
 from repro.core import bounds as bounds_mod
 from repro.core import make_plan
-from repro.core.api import encode_blocks, worker_products
 from repro.core.numerics import enable_x64
 from repro.core.partition import block_decompose
+from repro.runtime import ReferenceExecutor
 
 
 def run(p: int = 8, m: int = 2, n: int = 2, v: int = 256, bound: int = 20):
@@ -33,8 +33,7 @@ def run(p: int = 8, m: int = 2, n: int = 2, v: int = 256, bound: int = 20):
                              points="chebyshev")
             ab = block_decompose(A, p, m)
             bb = block_decompose(B, p, n)
-            at, bt = encode_blocks(plan, ab, bb)
-            Y = worker_products(at, bt)
+            Y = ReferenceExecutor().worker_products(plan, ab, bb)
             analytic = bounds_mod.max_abs_coefficient(
                 L, s, plan.scheme.digit_depth)
             rows.append({

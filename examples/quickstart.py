@@ -12,7 +12,8 @@ import jax
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import coded_matmul, make_plan, uncoded_matmul  # noqa: E402
+from repro.core import make_plan, uncoded_matmul  # noqa: E402
+from repro.runtime import CodedMatmul  # noqa: E402
 
 # integer matrices with bounded entries (paper Sec. V uses {0..50})
 rng = np.random.default_rng(0)
@@ -27,8 +28,9 @@ plan = make_plan("bec", p=2, m=2, n=2, K=10, L=L, points="unit_circle")
 print(f"scheme=BEC  workers={plan.K}  recovery threshold tau={plan.tau}  "
       f"scale base s=2^{int(np.log2(plan.s))}")
 
-# six stragglers die; any tau=4 survivors suffice
-C = coded_matmul(A, B, plan, erased=[0, 2, 4, 6, 8, 9])
+# one facade, pluggable backends; six stragglers die, any tau=4 survive
+cm = CodedMatmul(plan)                    # fused Pallas backend by default
+C = cm(A, B, erased=[0, 2, 4, 6, 8, 9])
 C_ref = uncoded_matmul(A, B)
 err = float(jnp.max(jnp.abs(C - C_ref)))
 print(f"erased 6/10 workers -> max |C - A^T B| = {err}")

@@ -39,3 +39,6 @@ agree = float(jnp.mean((jnp.argmax(logits_ok, -1) ==
 drift = float(jnp.max(jnp.abs(logits_ok - logits_lost)))
 print(f"argmax agreement with a lost worker: {agree*100:.0f}%  "
       f"(max logit drift {drift:.2e} - the coded grid is erasure-invariant)")
+info = lin.matmul.cache_info()
+print(f"runtime cache: {info['builds']} compiled executable(s), "
+      f"{info['hits']} cache hits, {info['panel_builds']} decode panels")

@@ -25,7 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from benchmarks.fig1_latency import run as fig1_run  # noqa: E402
 from repro.core import make_plan, uncoded_matmul  # noqa: E402
-from repro.distributed.coded import coded_matmul_mesh  # noqa: E402
+from repro.runtime import CodedMatmul  # noqa: E402
 
 print("== Part 1: async-cluster latency (paper Fig. 1, scaled) ==")
 rows = fig1_run(size=512, trials=10)
@@ -43,12 +43,14 @@ A = jnp.asarray(rng.integers(0, 9, size=(256, 128)), jnp.float64)
 B = jnp.asarray(rng.integers(0, 9, size=(256, 128)), jnp.float64)
 plan = make_plan("bec", p=2, m=2, n=1, K=4, L=256 * 8 * 8 + 1,
                  points="chebyshev")
+cm = CodedMatmul(plan, "mesh", mesh=mesh, dtype=jnp.float64)
 C_ref = uncoded_matmul(A, B)
 for lost in ([], [2], [0, 1]):
-    mask = np.ones(4)
-    mask[lost] = 0.0
-    C = coded_matmul_mesh(A, B, plan, mesh, jnp.asarray(mask),
-                          dtype=jnp.float64)
+    C = cm(A, B, erased=lost)
     err = float(jnp.max(jnp.abs(C - C_ref)))
     print(f"lost chips {str(lost or 'none'):<8} -> max error {err} "
           f"({'exact' if err == 0 else 'FAIL'})")
+info = cm.cache_info()
+print(f"(served {info['hits'] + info['builds']} erasure patterns from "
+      f"{info['builds']} compiled executable(s) - the jit cache absorbs "
+      f"mask churn)")

@@ -46,7 +46,6 @@ def main():
     args = ap.parse_args()
 
     # register the config under a temporary module-level name
-    import repro.configs.base as base
     cfg = CFG_100M
     steps = args.steps
     lr = "2e-3"

@@ -1,28 +1,29 @@
-"""High-level single-host reference path for coded distributed matmul.
+"""Plan construction + the encode/product building blocks.
 
-``coded_matmul`` runs the whole pipeline (encode -> per-worker products ->
-erasure -> decode) as one JAX computation; it is the oracle against which
-the Pallas kernels and the on-mesh shard_map runtime are tested, and the
-engine behind the paper-reproduction benchmarks.
+``CodedMatmulPlan`` freezes everything static about one coded matmul;
+``encode_blocks`` / ``worker_products`` / ``fused_worker_products`` are the
+stage primitives the runtime executors are built from.
+
+``coded_matmul`` remains as a deprecation shim over the unified runtime
+(``repro.runtime.CodedMatmul``), which owns backend selection, erasure
+normalisation, and jit-executable caching.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds as bounds_mod
-from repro.core.decoding import DecodePanelCache, decode, decode_masked
-from repro.core.partition import GridSpec, block_decompose, block_recompose, unpad
+from repro.core.decoding import DecodePanelCache
 from repro.core.points import make_points
 from repro.core.schemes import Scheme, make_scheme
 
 __all__ = ["CodedMatmulPlan", "make_plan", "coded_matmul", "encode_blocks",
-           "worker_products", "fused_worker_products"]
+           "worker_products", "fused_worker_products", "runtime_facade"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,15 +65,37 @@ def make_plan(
     *,
     p_prime: int = 1,
     points: str = "equispaced",
-    s: Optional[int] = None,
+    s: Optional[float] = None,
 ) -> CodedMatmulPlan:
+    """Freeze one coded-matmul configuration into a plan.
+
+    kind:    scheme family - "bec" (Sec. III-B), "tradeoff" (Sec. IV, with
+             ``p_prime``), or "polycode" (the Yu et al. baseline).
+    p, m, n: block grid - A is split p x m, B is split p x n.
+    K:       number of workers (evaluation points); must be >= the scheme's
+             recovery threshold tau.
+    L:       entry-product bound (Sec. III-D): every C entry and every
+             interference product must have magnitude < L.
+    points:  evaluation-point family ("equispaced" / "chebyshev" /
+             "unit_circle").
+    s:       the digit base of the bounded-entry superposition, in the same
+             units as the matrix entries (a dimensionless integer scale).
+             Default ``None`` picks ``bounds.choose_s(L)`` - the smallest
+             power of two >= 2L, which makes digit extraction (round +
+             mod s) exact in binary floating point.  An explicit ``s`` must
+             be >= 2 (bases below 2 cannot separate digits) and is only
+             exact when s >= 2L; it is stored on the plan as ``float``.
+    """
     scheme = make_scheme(kind, p, m, n, p_prime=p_prime)
     if K < scheme.tau:
         raise ValueError(f"K={K} below recovery threshold tau={scheme.tau}")
     z = make_points(points, K)
-    s_val = s if s is not None else bounds_mod.choose_s(L)
+    s_val = float(s) if s is not None else float(bounds_mod.choose_s(L))
+    if s_val < 2:
+        raise ValueError(f"digit base s={s_val} must be >= 2 (and >= 2L={2 * L} "
+                         "for exact digit extraction)")
     ca, cb = scheme.encode_coeffs(z, s_val)
-    return CodedMatmulPlan(scheme=scheme, K=K, s=float(s_val), z_points=z,
+    return CodedMatmulPlan(scheme=scheme, K=K, s=s_val, z_points=z,
                            coeff_a=ca, coeff_b=cb)
 
 
@@ -118,6 +141,46 @@ def _coeff_dtype(x: jnp.ndarray, plan: CodedMatmulPlan):
     return x.dtype
 
 
+# ---------------------------------------------------------------------------
+# Legacy entry point: deprecation shim over the unified runtime.
+# ---------------------------------------------------------------------------
+
+_RUNTIME_FACADES: dict = {}
+_RUNTIME_FACADES_MAX = 64
+
+
+def runtime_facade(plan: CodedMatmulPlan, backend: str = "fused",
+                   dtype=jnp.float64, *, panel_cache=None, **opts):
+    """Module-level memo of ``repro.runtime.CodedMatmul`` facades.
+
+    Keyed by plan VALUE (scheme geometry + points + base), not identity, so
+    equal plans share one facade - and therefore one decode-panel cache and
+    one jit-executable memo - across shim calls.  A caller-supplied
+    ``panel_cache`` is part of the key (by identity): callers with their
+    own caches get their own facades instead of clobbering the shared one.
+    The memo is FIFO-bounded so long-lived processes churning through many
+    distinct plans cannot pin executables without limit.
+    """
+    from repro.runtime import CodedMatmul
+
+    key = (plan.scheme, plan.K, plan.s,
+           tuple(np.asarray(plan.z_points).ravel().tolist()),
+           str(jnp.dtype(dtype)), backend,
+           None if panel_cache is None else id(panel_cache),
+           tuple(sorted(opts.items(), key=lambda kv: kv[0])))
+    cm = _RUNTIME_FACADES.get(key)
+    if cm is None:
+        cm = CodedMatmul(plan, backend, dtype=dtype, **opts)
+        if panel_cache is not None:
+            # facade holds the reference, so id(panel_cache) stays valid
+            # for as long as this memo entry lives
+            cm.panel_cache = panel_cache
+        while len(_RUNTIME_FACADES) >= _RUNTIME_FACADES_MAX:
+            _RUNTIME_FACADES.pop(next(iter(_RUNTIME_FACADES)))
+        _RUNTIME_FACADES[key] = cm
+    return cm
+
+
 def coded_matmul(
     A: jnp.ndarray,
     B: jnp.ndarray,
@@ -128,44 +191,23 @@ def coded_matmul(
     dtype=jnp.float64,
     fused: bool = False,
 ) -> jnp.ndarray:
-    """Compute C = A^T B through the coded pipeline.
+    """DEPRECATED: use ``repro.runtime.CodedMatmul`` instead.
 
-    A: (v, r), B: (v, t).  ``erased`` lists worker ids treated as stragglers
-    (their outputs discarded); alternatively pass an explicit ``survivors``
-    order.  Uses the first tau survivors.  Exact for integer matrices within
-    the plan's numeric bounds.  ``fused=True`` computes the worker products
-    through the fused encode+product Pallas megakernel (coded matrices never
-    materialised) instead of the staged einsum path.
+    Compute C = A^T B through the coded pipeline.  A: (v, r), B: (v, t).
+    ``erased`` lists worker ids treated as stragglers; alternatively pass an
+    explicit ``survivors`` set (decoding now weights ALL listed survivors,
+    so order no longer matters).  Exact for integer matrices within the
+    plan's numeric bounds.  ``fused=True`` selects the fused megakernel
+    backend, ``fused=False`` the staged einsum reference backend.
     """
+    warnings.warn(
+        "coded_matmul is deprecated; use repro.runtime.CodedMatmul "
+        "(plan facade with pluggable backends and jit caching)",
+        DeprecationWarning, stacklevel=2)
     if erased is not None and survivors is not None:
         raise ValueError("pass only one of erased/survivors")
-    g = plan.scheme.grid
-    v, r = A.shape
-    v2, t = B.shape
-    if v != v2:
-        raise ValueError(f"contraction mismatch {A.shape} vs {B.shape}")
-    A = A.astype(dtype)
-    B = B.astype(dtype)
-    a_blocks = block_decompose(A, g.p, g.m)
-    b_blocks = block_decompose(B, g.p, g.n)
-    if fused:
-        Y = fused_worker_products(plan, a_blocks, b_blocks)  # (K, br, bt)
-    else:
-        a_tilde, b_tilde = encode_blocks(plan, a_blocks, b_blocks)
-        Y = worker_products(a_tilde, b_tilde)  # (K, br, bt)
-
-    if survivors is None:
-        if erased is None:
-            erased = []
-        survivors = [k for k in range(plan.K) if k not in set(erased)]
-    if len(survivors) < plan.tau:
-        raise ValueError(
-            f"only {len(survivors)} survivors < tau={plan.tau}: undecodable")
-    sel = np.asarray(survivors[: plan.tau])
-    z_s = jnp.asarray(plan.z_points[sel])
-    C_blocks = decode(plan.scheme, z_s, Y[sel], plan.s)  # (m, n, br, bt)
-    C = block_recompose(C_blocks)
-    return unpad(C, (r, t)).astype(dtype)
+    cm = runtime_facade(plan, "fused" if fused else "reference", dtype)
+    return cm(A, B, erased=erased, survivors=survivors)
 
 
 def uncoded_matmul(A: jnp.ndarray, B: jnp.ndarray, dtype=jnp.float64) -> jnp.ndarray:

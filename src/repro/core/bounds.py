@@ -11,11 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.schemes import Scheme, TradeoffScheme, make_scheme
+from repro.core.schemes import make_scheme
 
 __all__ = [
     "mantissa_bits",

@@ -27,7 +27,7 @@ from repro.core.vandermonde import interpolate_solve, interpolate_masked
 __all__ = [
     "digit_extract", "decode", "decode_masked",
     "DecodePanel", "DecodePanelCache", "make_decode_panel",
-    "decode_with_panel",
+    "decode_with_panel", "decode_with_weights",
 ]
 
 
@@ -152,15 +152,26 @@ def make_decode_panel(scheme: Scheme, z_all: np.ndarray,
     return DecodePanel(mask=m, W=np.asarray(W_full[useful]))
 
 
+def decode_with_weights(scheme: Scheme, W: jnp.ndarray, Y_all: jnp.ndarray,
+                        s: float) -> jnp.ndarray:
+    """Decode from a ready (mn, K) weight panel passed as an ARRAY.
+
+    Y_all: (K, br, bt) ALL worker outputs (garbage where erased) ->
+    (m, n, br, bt).  No linear solve inside; erased workers have zero
+    columns in W.  Because W is an operand (not a closed-over constant),
+    one compiled executable serves every concrete erasure pattern.
+    """
+    K = Y_all.shape[0]
+    Yf = Y_all.reshape(K, -1)
+    Xu = W @ Yf.astype(W.dtype)                              # (mn, E)
+    return _finish_extract(scheme, Xu, s, Y_all.shape[1:])
+
+
 def decode_with_panel(scheme: Scheme, panel: DecodePanel, Y_all: jnp.ndarray,
                       s: float) -> jnp.ndarray:
     """Y_all: (K, br, bt) ALL worker outputs (garbage where erased)
     -> (m, n, br, bt) via the precomputed panel.  No linear solve inside."""
-    K = Y_all.shape[0]
-    Yf = Y_all.reshape(K, -1)
-    W = jnp.asarray(panel.W)
-    Xu = W @ Yf.astype(W.dtype)                              # (mn, E)
-    return _finish_extract(scheme, Xu, s, Y_all.shape[1:])
+    return decode_with_weights(scheme, jnp.asarray(panel.W), Y_all, s)
 
 
 class DecodePanelCache:

@@ -10,7 +10,6 @@ import dataclasses
 from typing import Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "GridSpec",

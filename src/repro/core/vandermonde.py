@@ -17,7 +17,6 @@ All paths accept complex points (unit-circle decoding).
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 __all__ = [

@@ -1,109 +1,25 @@
-"""On-mesh coded matmul: the paper's pipeline as one shard_map program.
+"""On-mesh coded matmul: thin delegates over the unified runtime.
 
-The paper's master/worker RPC becomes a single-program mesh computation over
-a ``workers`` mesh axis (we reuse "model"):
-
-  stage 1  ENCODE   - device k builds its coded blocks A~_k, B~_k from the
-                      coefficient table row k;
-  stage 2  WORKER   - device k computes Y_k = A~_k^T B~_k;
-                      in the default FUSED mode stages 1+2 run as ONE Pallas
-                      megakernel (coded_fused) that forms the coded tiles in
-                      VMEM inside the matmul tiling - A~/B~ never touch HBM;
-                      ``fused=False`` keeps the staged encode -> matmul_t
-                      schedule for A/B comparison;
-  stage 3  ERASE    - an erasure mask (data, not process death) zeroes the
-                      outputs of "failed" workers - on a real pod this mask
-                      comes from the health monitor / timeout watchdog;
-  stage 4  DECODE   - Y is all-gathered and every device recovers the C
-                      blocks it owns from ANY tau surviving outputs via the
-                      mask-weighted normal equations + digit extraction.
-                      With a ``panel_cache`` (concrete masks) the normal
-                      equations are LU-factored ONCE on the host per erasure
-                      pattern and the body receives the ready (mn, K) weight
-                      panel - no linear solve runs on any device.
-
-A lost chip's contribution is thus absorbed WITHIN the step - no restart,
-no recompute - which is the paper's straggler/fault story adapted to the
-synchronous-mesh world (DESIGN.md Sec. 3).
+The 4-stage shard_map pipeline (ENCODE -> WORKER -> ERASE -> DECODE, one
+worker per device, a lost chip absorbed within the step - DESIGN.md Sec. 3)
+now lives in ``repro.runtime.executors.MeshExecutor``.  This module keeps
+the legacy ``coded_matmul_mesh`` signature as a deprecation shim and the
+``CodedLinearPlan`` layer as a thin wrapper over the ``CodedMatmul``
+facade.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.api import CodedMatmulPlan
-from repro.core.decoding import DecodePanelCache, digit_extract
-from repro.core.partition import block_decompose, block_recompose, unpad
-from repro.distributed.sharding import shard_map_compat
-from repro.kernels import ops as kops
+from repro.core.api import CodedMatmulPlan, runtime_facade
+from repro.core.decoding import DecodePanelCache
+from repro.runtime import CodedMatmul
 
 __all__ = ["coded_matmul_mesh", "CodedLinearPlan"]
-
-
-def _decode_weights_masked(z_all: jnp.ndarray, mask: jnp.ndarray, tau: int,
-                           useful: np.ndarray):
-    """Rows of the pseudo-inverse Vandermonde for the useful powers only.
-
-    W_useful (mn, K): X_useful = W_useful @ Y_all (erased rows weighted 0).
-    Solved from the normal equations G X = V^T D Y with D = diag(mask);
-    LU solve, not explicit inversion - for large tau the Vandermonde normal
-    equations are ill-conditioned and G^{-1} squares the error."""
-    K = z_all.shape[0]
-    V = z_all[:, None] ** jnp.arange(tau)[None, :]          # (K, tau)
-    Vw = V * mask.astype(V.dtype)[:, None]
-    G = V.T @ Vw                                             # (tau, tau)
-    # W_full = G^{-1} V_w^T : (tau, K); we need the useful rows.
-    W_full = jnp.linalg.solve(G, Vw.T)
-    return W_full[useful]                                    # (mn, K)
-
-
-def _worker_body(a_blocks, b_blocks, mask, coeff_a, coeff_b, zW,
-                 *, tau, s, useful, axis, use_kernels, fused, have_panel):
-    """Per-device body.  a_blocks (p, m, bv, br) replicated; mask (K,).
-
-    ``zW`` is the decode operand: the precomputed (mn, K) weight panel when
-    ``have_panel`` (no solve below), else the (K,) evaluation points from
-    which the masked normal equations are solved in-body (dynamic masks).
-    """
-    k = jax.lax.axis_index(axis)
-    p, m, bv, br = a_blocks.shape
-    _, n, _, bt = b_blocks.shape
-
-    ca = jax.lax.dynamic_index_in_dim(coeff_a, k, axis=0)     # (1, p, m)
-    cb = jax.lax.dynamic_index_in_dim(coeff_b, k, axis=0)
-    if use_kernels and fused:
-        # stages 1+2 fused: coded tiles exist only in VMEM.
-        y_local = kops.fused_worker(
-            ca.reshape(1, p * m), cb.reshape(1, p * n),
-            a_blocks.reshape(p * m, bv, br),
-            b_blocks.reshape(p * n, bv, bt))[0]               # (br, bt)
-    elif use_kernels:
-        a_tilde = kops.encode(ca.reshape(1, p * m),
-                              a_blocks.reshape(p * m, bv * br)).reshape(bv, br)
-        b_tilde = kops.encode(cb.reshape(1, p * n),
-                              b_blocks.reshape(p * n, bv * bt)).reshape(bv, bt)
-        y_local = kops.matmul_t(a_tilde, b_tilde)             # (br, bt)
-    else:
-        a_tilde = jnp.einsum("pm,pmvr->vr", ca[0], a_blocks)
-        b_tilde = jnp.einsum("pn,pnvt->vt", cb[0], b_blocks)
-        y_local = a_tilde.T @ b_tilde
-
-    # stage 3: erasure - zero out "failed" workers' outputs.
-    y_local = y_local * jax.lax.dynamic_index_in_dim(mask, k, 0, keepdims=False)
-    # stage 4: all-gather and decode everywhere (each device keeps its C).
-    Y = jax.lax.all_gather(y_local, axis)                    # (K, br, bt)
-    if have_panel:
-        W = zW                                               # (mn, K), ready
-    else:
-        W = _decode_weights_masked(zW, mask, tau, useful)    # (mn, K)
-    X = jnp.einsum("uk,krt->urt", W, Y)
-    C = digit_extract(X, s) if s is not None else jnp.round(X)
-    return C.reshape(m, n, br, bt)
 
 
 def coded_matmul_mesh(
@@ -119,51 +35,37 @@ def coded_matmul_mesh(
     panel_cache: Optional[DecodePanelCache] = None,
     dtype=jnp.float32,
 ) -> jnp.ndarray:
-    """C = A^T B on the mesh, tolerating up to K - tau erased workers.
+    """DEPRECATED: use ``repro.runtime.CodedMatmul(plan, "mesh", mesh=...)``.
 
-    ``mask``: (K,) 0/1 survivors (default all alive).  The mesh axis size
-    must equal plan.K (one worker per device).  Exactness is governed by the
-    plan's bounds analysis (use f64 on CPU for paper-scale L).
-
-    ``fused`` runs stages 1+2 through the coded_fused megakernel (only
-    meaningful with ``use_kernels``).  ``panel_cache`` (from
-    ``plan.make_panel_cache()``) precomputes/LU-caches the decode weights per
-    erasure pattern on the host, so the shard-mapped body contains NO linear
-    solve; it is used whenever ``mask`` is concrete (not a tracer) and falls
-    back to the in-body masked solve for traced masks.
+    C = A^T B on the mesh, tolerating up to K - tau erased workers.
+    ``mask``: (K,) 0/1 survivors (default all alive); the mesh axis size
+    must equal plan.K (one worker per device).  Concrete masks decode
+    through a host-factored panel (no solve in the traced program); traced
+    masks fall back to the in-body masked normal-equation solve.  A passed
+    ``panel_cache`` is adopted by the shared facade so its ``builds``
+    counter keeps tracking factorisations.
     """
-    K = mesh.shape[axis]
-    if K != plan.K:
-        raise ValueError(f"plan built for K={plan.K}, mesh axis has {K}")
-    g = plan.scheme.grid
-    mask_concrete = mask is None or not isinstance(mask, jax.core.Tracer)
-    if mask is None:
-        mask = jnp.ones((K,), dtype)
-    a_blocks = block_decompose(A.astype(dtype), g.p, g.m)
-    b_blocks = block_decompose(B.astype(dtype), g.p, g.n)
-    useful = np.asarray(plan.scheme.useful_z_exp().reshape(-1))
-    s = plan.s if plan.scheme.needs_digit_extraction else None
+    warnings.warn(
+        "coded_matmul_mesh is deprecated; use repro.runtime.CodedMatmul "
+        "with backend='mesh'",
+        DeprecationWarning, stacklevel=2)
+    cm = runtime_facade(plan, "mesh", dtype, panel_cache=panel_cache,
+                        mesh=mesh, axis=axis, use_kernels=use_kernels,
+                        fused=fused)
+    return cm(A, B, mask=mask)
 
-    have_panel = panel_cache is not None and mask_concrete
-    if have_panel:
-        panel = panel_cache.get(np.asarray(mask))
-        zW = jnp.asarray(np.asarray(panel.W).real, dtype)     # (mn, K)
-    else:
-        zW = jnp.asarray(plan.z_points, dtype)                # (K,)
 
-    body = partial(
-        _worker_body, tau=plan.tau, s=s, useful=useful, axis=axis,
-        use_kernels=use_kernels, fused=fused, have_panel=have_panel)
-    C_blocks = shard_map_compat(
-        body,
-        mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(), P()),   # replicated inputs
-        out_specs=P(),
-    )(a_blocks, b_blocks, mask.astype(dtype),
-      jnp.asarray(plan.coeff_a, dtype), jnp.asarray(plan.coeff_b, dtype),
-      zW)
-    C = block_recompose(C_blocks)
-    return unpad(C, (A.shape[1], B.shape[1]))
+def _quant_scale(x: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """Scale so round(x / scale) lands on the integer grid [-qmax, qmax].
+
+    All-zero (or denormal-tiny) inputs get scale 1 instead of the old
+    additive epsilon: with ``max|x| = 0`` the quantised tensor is exactly
+    zero either way, but for ``max|x|`` below the epsilon the old formula
+    collapsed every entry to zero (scale-only outputs); dividing by the
+    true max keeps the full quantisation range at any magnitude.
+    """
+    mx = jnp.max(jnp.abs(x))
+    return jnp.where(mx > 0, mx / qmax, jnp.ones_like(mx))
 
 
 class CodedLinearPlan:
@@ -179,9 +81,10 @@ class CodedLinearPlan:
     matmul, and rescales.  ``quant_bits`` bounds the grids so the digit
     stack fits the dtype (bounds.plan_p_prime is the policy).
 
-    The layer owns a DecodePanelCache: across steps with an unchanged
-    erasure pattern the decode weights are factored once and reused (the
-    per-step decode is then one einsum on-device).
+    The layer delegates to a ``CodedMatmul`` facade on the "mesh" backend:
+    the facade owns the ``DecodePanelCache`` (decode weights factored once
+    per erasure pattern) and the jit-executable memo (steps after the first
+    reuse one compiled program even as the mask changes).
     """
 
     def __init__(self, plan: CodedMatmulPlan, mesh: Mesh, *,
@@ -193,16 +96,16 @@ class CodedLinearPlan:
         self.quant_bits = quant_bits
         self.fused = fused
         self.dtype = dtype
-        self.panel_cache = plan.make_panel_cache()
+        self.matmul = CodedMatmul(plan, "mesh", mesh=mesh, axis=axis,
+                                  fused=fused, dtype=dtype)
+        self.panel_cache = self.matmul.panel_cache
 
     def __call__(self, x: jnp.ndarray, W: jnp.ndarray,
                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         qmax = 2 ** (self.quant_bits - 1) - 1
-        sx = jnp.max(jnp.abs(x)) / qmax + 1e-9
-        sw = jnp.max(jnp.abs(W)) / qmax + 1e-9
+        sx = _quant_scale(x, qmax)
+        sw = _quant_scale(W, qmax)
         xi = jnp.round(x / sx)
         wi = jnp.round(W / sw)
-        yi = coded_matmul_mesh(xi.T, wi, self.plan, self.mesh, mask,
-                               axis=self.axis, fused=self.fused,
-                               panel_cache=self.panel_cache, dtype=self.dtype)
+        yi = self.matmul(xi.T, wi, mask=mask)
         return (yi * (sx * sw)).astype(x.dtype)

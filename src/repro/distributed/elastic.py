@@ -15,7 +15,7 @@ Large jobs lose nodes.  Two recovery tiers here:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -58,7 +58,9 @@ _RULES = {
     "mu": (None, None),
     "w_r": ("fsdp", "tp"),
     "w_k": ("fsdp", "tp"),
-    "w_v": ("tp", "fsdp"),         # cmix w_v is (ff, d); tmix w_v is (d, d_attn) - rank-2 both; see _leaf_axes
+    # cmix w_v is (ff, d); tmix w_v is (d, d_attn) - rank-2 both;
+    # see _leaf_axes
+    "w_v": ("tp", "fsdp"),
     "w_g": ("fsdp", "tp"),
     "w_o": ("tp", "fsdp"),
     "w_decay_base": ("tp",),

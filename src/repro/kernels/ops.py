@@ -6,8 +6,6 @@ used by the distributed runtime.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

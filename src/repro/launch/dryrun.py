@@ -16,7 +16,6 @@ Usage:
 """
 import argparse
 import json
-import math
 import time
 import traceback
 from pathlib import Path
@@ -32,7 +31,6 @@ from repro.launch.specs import (
     abstract_batch,
     abstract_cache,
     abstract_state,
-    input_specs,
 )
 from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
 from repro.optim import OptConfig

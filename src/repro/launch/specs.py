@@ -6,7 +6,7 @@ jit(...).lower() in the dry-run and by eval_shape-based tooling.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,11 +6,9 @@ so shard() annotations resolve against the active mesh during tracing.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.distributed.sharding import AxisRules, axis_rules
 from repro.models import ModelConfig, decode_step, prefill, train_loss

@@ -13,9 +13,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +22,7 @@ import numpy as np
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.data import make_pipeline
-from repro.distributed.sharding import axis_rules, default_rules
+from repro.distributed.sharding import default_rules
 from repro.launch.steps import make_train_step
 from repro.models import init_params
 from repro.optim import OptConfig, adamw_init

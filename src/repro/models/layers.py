@@ -7,7 +7,7 @@ annotations come from repro.distributed.shard.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ FFN   kinds:  mlp | moe | rwkv_cmix
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Any, Dict, Optional, Sequence, Tuple
 

@@ -15,7 +15,7 @@ TP: d_inner is sharded over "tp"; the block sees the full sequence
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ documented simplification that does not change the kernel structure.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

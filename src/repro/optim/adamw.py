@@ -7,7 +7,7 @@ like the params - ZeRO-3).  The update runs in fp32 and re-casts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,32 @@
+"""Runtime: the unified coded-matmul executor API.
+
+``CodedMatmul`` is the single entry point for every backend (reference /
+staged Pallas / fused megakernel / mesh shard_map); ``ErasurePattern``
+normalises every erasure convention; executors are pluggable via
+``with_backend``.  See DESIGN.md "Runtime & Executors".
+"""
+from repro.runtime.erasure import ErasurePattern
+from repro.runtime.executors import (
+    BACKENDS,
+    Executor,
+    FusedKernelExecutor,
+    LocalExecutor,
+    MeshExecutor,
+    ReferenceExecutor,
+    StagedKernelExecutor,
+    resolve_executor,
+)
+from repro.runtime.facade import CodedMatmul
+
+__all__ = [
+    "CodedMatmul",
+    "ErasurePattern",
+    "Executor",
+    "LocalExecutor",
+    "ReferenceExecutor",
+    "StagedKernelExecutor",
+    "FusedKernelExecutor",
+    "MeshExecutor",
+    "resolve_executor",
+    "BACKENDS",
+]

@@ -1,0 +1,165 @@
+"""One erasure-pattern type for every entry point.
+
+Historically each entry point had its own convention: ``coded_matmul`` took
+``erased=`` / ``survivors=`` lists, ``coded_matmul_mesh`` took a 0/1 ``mask``
+array (concrete or traced), and ``CodedLinearPlan`` forwarded a mask.
+``ErasurePattern`` normalises all of them into one value with two *kinds*:
+
+* ``concrete`` - the survivor set is host-known (a Python list, a numpy
+  array, or a committed jax array).  The runtime can build/look up a
+  ``DecodePanel`` for it and the erasure pattern never enters the traced
+  program as a shape or branch - repeated calls with different concrete
+  patterns reuse ONE compiled executable.
+* ``traced``   - the mask is a jax tracer (the pattern is data inside an
+  enclosing jit/vmap).  Decode falls back to the in-body masked
+  normal-equation solve.
+
+Positional normalisation rule: an array-like of length K is a 0/1 mask;
+anything else sequence-like is a list of erased worker ids.  Use the
+keyword forms when in doubt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["ErasurePattern"]
+
+
+def _is_traced(x: Any) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErasurePattern:
+    """Normalised survivor/erasure description for K workers.
+
+    ``mask`` is a (K,) 0/1 numpy array for ``kind == "concrete"`` and the
+    original jax value for ``kind == "traced"``.
+    """
+
+    K: int
+    kind: str  # "concrete" | "traced"
+    mask: Any
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def all_alive(cls, K: int) -> "ErasurePattern":
+        return cls(K=K, kind="concrete", mask=np.ones(K, dtype=np.float64))
+
+    @classmethod
+    def from_erased(cls, K: int, erased: Sequence[int]) -> "ErasurePattern":
+        ids = cls._check_ids(K, erased, "erased")
+        mask = np.ones(K, dtype=np.float64)
+        mask[list(ids)] = 0.0
+        return cls(K=K, kind="concrete", mask=mask)
+
+    @classmethod
+    def from_survivors(cls, K: int, survivors: Sequence[int]) -> "ErasurePattern":
+        ids = cls._check_ids(K, survivors, "survivors")
+        mask = np.zeros(K, dtype=np.float64)
+        mask[list(ids)] = 1.0
+        return cls(K=K, kind="concrete", mask=mask)
+
+    @classmethod
+    def from_mask(cls, K: int, mask: Any) -> "ErasurePattern":
+        if _is_traced(mask):
+            if getattr(mask, "shape", None) != (K,):
+                raise ValueError(
+                    f"traced mask shape {getattr(mask, 'shape', None)} != ({K},)")
+            return cls(K=K, kind="traced", mask=mask)
+        m = np.asarray(mask)
+        if m.shape != (K,):
+            raise ValueError(f"mask shape {m.shape} != ({K},)")
+        return cls(K=K, kind="concrete", mask=(m != 0).astype(np.float64))
+
+    @classmethod
+    def normalize(
+        cls,
+        K: int,
+        spec: Any = None,
+        *,
+        erased: Optional[Sequence[int]] = None,
+        survivors: Optional[Sequence[int]] = None,
+        mask: Any = None,
+    ) -> "ErasurePattern":
+        """Accept exactly one of spec/erased/survivors/mask (or none)."""
+        given = [x is not None for x in (spec, erased, survivors, mask)]
+        if sum(given) > 1:
+            raise ValueError(
+                "pass only one of erasure spec / erased / survivors / mask")
+        if spec is not None:
+            if isinstance(spec, ErasurePattern):
+                if spec.K != K:
+                    raise ValueError(f"pattern built for K={spec.K}, plan has K={K}")
+                return spec
+            if _is_traced(spec) or (
+                hasattr(spec, "shape") and getattr(spec, "shape") == (K,)
+            ):
+                return cls.from_mask(K, spec)
+            if isinstance(spec, (list, tuple, np.ndarray)):
+                arr = np.asarray(spec)
+                if arr.shape == (K,):
+                    return cls.from_mask(K, arr)
+                return cls.from_erased(K, [int(i) for i in arr.reshape(-1)])
+            raise TypeError(f"cannot interpret erasure spec {type(spec).__name__}")
+        if erased is not None:
+            return cls.from_erased(K, erased)
+        if survivors is not None:
+            return cls.from_survivors(K, survivors)
+        if mask is not None:
+            return cls.from_mask(K, mask)
+        return cls.all_alive(K)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def is_concrete(self) -> bool:
+        return self.kind == "concrete"
+
+    @property
+    def survivors(self) -> tuple:
+        self._require_concrete("survivors")
+        return tuple(int(i) for i in np.flatnonzero(self.mask))
+
+    @property
+    def erased(self) -> tuple:
+        self._require_concrete("erased")
+        return tuple(int(i) for i in np.flatnonzero(self.mask == 0))
+
+    @property
+    def n_survivors(self) -> int:
+        self._require_concrete("n_survivors")
+        return int(np.sum(self.mask != 0))
+
+    @property
+    def key(self) -> tuple:
+        """Hashable identity: the support for concrete, the kind for traced."""
+        if self.is_concrete:
+            return tuple(int(x != 0) for x in self.mask)
+        return ("traced",)
+
+    def mask_array(self, dtype):
+        """The mask as a jax-consumable array of ``dtype`` (traced passthrough)."""
+        import jax.numpy as jnp
+
+        if self.is_concrete:
+            return jnp.asarray(self.mask, dtype)
+        return self.mask.astype(dtype)
+
+    # -- helpers ------------------------------------------------------------
+    def _require_concrete(self, what: str) -> None:
+        if not self.is_concrete:
+            raise ValueError(f"{what} is undefined for a traced erasure pattern")
+
+    @staticmethod
+    def _check_ids(K: int, ids: Sequence[int], what: str) -> Sequence[int]:
+        ids = [int(i) for i in ids]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate worker ids in {what}: {ids}")
+        for i in ids:
+            if not 0 <= i < K:
+                raise ValueError(f"{what} id {i} out of range for K={K}")
+        return ids

@@ -1,0 +1,318 @@
+"""Pluggable backends for the coded-matmul pipeline.
+
+Every executor turns (A, B, erasure) into the decoded product C through the
+same four stages (encode -> worker products -> erase -> decode); what varies
+is WHERE and HOW the worker products are computed:
+
+  reference  pure-jnp einsum oracle (ground truth, any backend, complex ok)
+  staged     Pallas encode kernel -> HBM -> Pallas block matmul per worker
+  fused      one Pallas megakernel per call; coded tiles live only in VMEM
+  mesh       shard_map over a worker axis: one device per worker, erasure
+             as a runtime mask, all-gather + replicated decode
+
+Executors expose ``make_pipeline(plan, kind, dtype)`` returning a pure
+function the ``CodedMatmul`` facade jit-compiles and memoises:
+
+  kind == "concrete":  fn(A, B, mask, W)  with W the (mn, K) decode panel
+  kind == "traced":    fn(A, B, mask)     in-body masked solve
+
+Both signatures take the erasure pattern strictly as DATA, so one compiled
+executable serves every erasure pattern of that kind.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.api import (
+    CodedMatmulPlan,
+    _coeff_dtype,
+    encode_blocks,
+    fused_worker_products,
+    worker_products,
+)
+from repro.core.decoding import decode_masked, decode_with_weights, digit_extract
+from repro.core.partition import block_decompose, block_recompose, unpad
+from repro.distributed.sharding import shard_map_compat
+from repro.kernels import ops as kops
+
+__all__ = [
+    "Executor",
+    "LocalExecutor",
+    "ReferenceExecutor",
+    "StagedKernelExecutor",
+    "FusedKernelExecutor",
+    "MeshExecutor",
+    "resolve_executor",
+    "BACKENDS",
+]
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Backend protocol: a name plus a pipeline builder per erasure kind."""
+
+    name: str
+    supports_batching: bool
+
+    def make_pipeline(
+        self, plan: CodedMatmulPlan, kind: str, dtype
+    ) -> Callable:  # pragma: no cover - protocol
+        ...
+
+    def cache_token(self):  # pragma: no cover - protocol
+        """Hashable identity for the executable memo: name + any config
+        that changes the compiled pipeline (mesh, axis, kernel flags)."""
+        ...
+
+
+class LocalExecutor:
+    """Shared single-host pipeline; subclasses provide the worker stage."""
+
+    name = "local"
+    supports_batching = True
+
+    def cache_token(self):
+        return self.name
+
+    def worker_products(
+        self, plan: CodedMatmulPlan, a_blocks: jnp.ndarray, b_blocks: jnp.ndarray
+    ) -> jnp.ndarray:
+        """(p, m, bv, br), (p, n, bv, bt) -> all-K worker outputs (K, br, bt)."""
+        raise NotImplementedError
+
+    def make_pipeline(self, plan: CodedMatmulPlan, kind: str, dtype) -> Callable:
+        g = plan.scheme.grid
+
+        def stages(A, B, mask):
+            a_blocks = block_decompose(A.astype(dtype), g.p, g.m)
+            b_blocks = block_decompose(B.astype(dtype), g.p, g.n)
+            Y = self.worker_products(plan, a_blocks, b_blocks)  # (K, br, bt)
+            # stage 3 ERASE: zero failed workers' outputs (decode weights
+            # also annihilate them; the multiply keeps parity with the mesh
+            # pipeline where erased devices genuinely emit garbage).
+            return Y * mask.astype(Y.dtype)[:, None, None]
+
+        def finish(C_blocks, r, t):
+            return unpad(block_recompose(C_blocks), (r, t)).astype(dtype)
+
+        if kind == "concrete":
+
+            def fn(A, B, mask, W):
+                Y = stages(A, B, mask)
+                C_blocks = decode_with_weights(plan.scheme, W, Y, plan.s)
+                return finish(C_blocks, A.shape[1], B.shape[1])
+
+            return fn
+
+        z_all = jnp.asarray(plan.z_points)
+
+        def fn(A, B, mask):
+            Y = stages(A, B, mask)
+            C_blocks = decode_masked(plan.scheme, z_all, Y,
+                                     mask.astype(Y.real.dtype), plan.s)
+            return finish(C_blocks, A.shape[1], B.shape[1])
+
+        return fn
+
+
+class ReferenceExecutor(LocalExecutor):
+    """Pure-jnp staged einsums: the oracle every other backend must match."""
+
+    name = "reference"
+
+    def worker_products(self, plan, a_blocks, b_blocks):
+        a_tilde, b_tilde = encode_blocks(plan, a_blocks, b_blocks)
+        return worker_products(a_tilde, b_tilde)
+
+
+class StagedKernelExecutor(LocalExecutor):
+    """Pallas encode kernel -> HBM -> Pallas block matmul per worker."""
+
+    name = "staged"
+
+    def worker_products(self, plan, a_blocks, b_blocks):
+        p, m, bv, br = a_blocks.shape
+        _, n, _, bt = b_blocks.shape
+        ca = jnp.asarray(plan.coeff_a.reshape(plan.K, p * m),
+                         dtype=_coeff_dtype(a_blocks, plan))
+        cb = jnp.asarray(plan.coeff_b.reshape(plan.K, p * n),
+                         dtype=_coeff_dtype(b_blocks, plan))
+        a_tilde = kops.encode(ca, a_blocks.reshape(p * m, bv * br))
+        b_tilde = kops.encode(cb, b_blocks.reshape(p * n, bv * bt))
+        a_tilde = a_tilde.reshape(plan.K, bv, br)
+        b_tilde = b_tilde.reshape(plan.K, bv, bt)
+        return jnp.stack(
+            [kops.matmul_t(a_tilde[k], b_tilde[k]) for k in range(plan.K)])
+
+
+class FusedKernelExecutor(LocalExecutor):
+    """Fused encode+product megakernel: coded matrices never touch HBM."""
+
+    name = "fused"
+
+    def worker_products(self, plan, a_blocks, b_blocks):
+        return fused_worker_products(plan, a_blocks, b_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend: the pipeline as one shard_map program, one device per worker.
+# ---------------------------------------------------------------------------
+
+
+def _decode_weights_masked(z_all: jnp.ndarray, mask: jnp.ndarray, tau: int,
+                           useful: np.ndarray):
+    """Useful rows of the masked pseudo-inverse Vandermonde (in-body solve).
+
+    W_useful (mn, K): X_useful = W_useful @ Y_all (erased rows weighted 0).
+    Solved from the normal equations G X = V^T D Y with D = diag(mask);
+    LU solve, not explicit inversion - for large tau the Vandermonde normal
+    equations are ill-conditioned and G^{-1} squares the error."""
+    K = z_all.shape[0]
+    V = z_all[:, None] ** jnp.arange(tau)[None, :]          # (K, tau)
+    Vw = V * mask.astype(V.dtype)[:, None]
+    G = V.T @ Vw                                             # (tau, tau)
+    W_full = jnp.linalg.solve(G, Vw.T)
+    return W_full[useful]                                    # (mn, K)
+
+
+def _mesh_worker_body(a_blocks, b_blocks, mask, coeff_a, coeff_b, zW,
+                      *, tau, s, useful, axis, use_kernels, fused, have_panel):
+    """Per-device body.  a_blocks (p, m, bv, br) replicated; mask (K,).
+
+    ``zW`` is the decode operand: the ready (mn, K) weight panel when
+    ``have_panel`` (no solve below), else the (K,) evaluation points from
+    which the masked normal equations are solved in-body (dynamic masks).
+    """
+    k = jax.lax.axis_index(axis)
+    p, m, bv, br = a_blocks.shape
+    _, n, _, bt = b_blocks.shape
+
+    ca = jax.lax.dynamic_index_in_dim(coeff_a, k, axis=0)     # (1, p, m)
+    cb = jax.lax.dynamic_index_in_dim(coeff_b, k, axis=0)
+    if use_kernels and fused:
+        # stages 1+2 fused: coded tiles exist only in VMEM.
+        y_local = kops.fused_worker(
+            ca.reshape(1, p * m), cb.reshape(1, p * n),
+            a_blocks.reshape(p * m, bv, br),
+            b_blocks.reshape(p * n, bv, bt))[0]               # (br, bt)
+    elif use_kernels:
+        a_tilde = kops.encode(ca.reshape(1, p * m),
+                              a_blocks.reshape(p * m, bv * br)).reshape(bv, br)
+        b_tilde = kops.encode(cb.reshape(1, p * n),
+                              b_blocks.reshape(p * n, bv * bt)).reshape(bv, bt)
+        y_local = kops.matmul_t(a_tilde, b_tilde)             # (br, bt)
+    else:
+        a_tilde = jnp.einsum("pm,pmvr->vr", ca[0], a_blocks)
+        b_tilde = jnp.einsum("pn,pnvt->vt", cb[0], b_blocks)
+        y_local = a_tilde.T @ b_tilde
+
+    # stage 3: erasure - zero out "failed" workers' outputs.
+    y_local = y_local * jax.lax.dynamic_index_in_dim(mask, k, 0, keepdims=False)
+    # stage 4: all-gather and decode everywhere (each device keeps its C).
+    Y = jax.lax.all_gather(y_local, axis)                    # (K, br, bt)
+    if have_panel:
+        W = zW                                               # (mn, K), ready
+    else:
+        W = _decode_weights_masked(zW, mask, tau, useful)    # (mn, K)
+    X = jnp.einsum("uk,krt->urt", W, Y)
+    C = digit_extract(X, s) if s is not None else jnp.round(X)
+    return C.reshape(m, n, br, bt)
+
+
+class MeshExecutor:
+    """One worker per device along a mesh axis; erasure is a runtime mask."""
+
+    name = "mesh"
+    supports_batching = True  # vmap lifts through shard_map
+
+    def __init__(self, mesh, *, axis: str = "model", use_kernels: bool = True,
+                 fused: bool = True):
+        if mesh is None:
+            raise ValueError("MeshExecutor requires a mesh (backend='mesh')")
+        self.mesh = mesh
+        self.axis = axis
+        self.use_kernels = use_kernels
+        self.fused = fused
+
+    def cache_token(self):
+        return (self.name, self.mesh, self.axis, self.use_kernels, self.fused)
+
+    def make_pipeline(self, plan: CodedMatmulPlan, kind: str, dtype) -> Callable:
+        K = self.mesh.shape[self.axis]
+        if K != plan.K:
+            raise ValueError(
+                f"plan built for K={plan.K}, mesh axis {self.axis!r} has {K}")
+        if plan.is_complex:
+            # the legacy mesh path silently cast the complex encode
+            # coefficients to real (discarding imaginary parts -> corrupt
+            # decode); an explicit error replaces that silent corruption.
+            raise ValueError(
+                "mesh backend does not support complex (unit-circle) plans; "
+                "use chebyshev/equispaced points or a local backend")
+        g = plan.scheme.grid
+        useful = np.asarray(plan.scheme.useful_z_exp().reshape(-1))
+        s = plan.s if plan.scheme.needs_digit_extraction else None
+        coeff_a = jnp.asarray(plan.coeff_a, dtype)
+        coeff_b = jnp.asarray(plan.coeff_b, dtype)
+        body = partial(
+            _mesh_worker_body, tau=plan.tau, s=s, useful=useful,
+            axis=self.axis, use_kernels=self.use_kernels, fused=self.fused,
+            have_panel=(kind == "concrete"))
+        mapped = shard_map_compat(
+            body,
+            mesh=self.mesh,
+            in_specs=(P(), P(), P(), P(), P(), P()),   # replicated operands
+            out_specs=P(),
+        )
+
+        def run(A, B, mask, zW):
+            a_blocks = block_decompose(A.astype(dtype), g.p, g.m)
+            b_blocks = block_decompose(B.astype(dtype), g.p, g.n)
+            C_blocks = mapped(a_blocks, b_blocks, mask.astype(dtype),
+                              coeff_a, coeff_b, zW)
+            return unpad(block_recompose(C_blocks),
+                         (A.shape[1], B.shape[1])).astype(dtype)
+
+        if kind == "concrete":
+
+            def fn(A, B, mask, W):
+                return run(A, B, mask, W.astype(dtype))
+
+            return fn
+
+        z_all = jnp.asarray(plan.z_points, dtype)
+
+        def fn(A, B, mask):
+            return run(A, B, mask, z_all)
+
+        return fn
+
+
+BACKENDS = {
+    "reference": ReferenceExecutor,
+    "staged": StagedKernelExecutor,
+    "fused": FusedKernelExecutor,
+    "mesh": MeshExecutor,
+}
+
+
+def resolve_executor(backend, *, mesh=None, axis: str = "model",
+                     use_kernels: bool = True, fused: bool = True) -> Executor:
+    """Executor instance from a backend name (or passthrough instance)."""
+    if not isinstance(backend, str):
+        if not isinstance(backend, Executor):
+            raise TypeError(f"not an Executor: {type(backend).__name__}")
+        return backend
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; options: {sorted(BACKENDS)}")
+    if backend == "mesh":
+        return MeshExecutor(mesh, axis=axis, use_kernels=use_kernels,
+                            fused=fused)
+    return BACKENDS[backend]()

@@ -1,0 +1,168 @@
+"""``CodedMatmul``: one executor-agnostic entry point for coded matmuls.
+
+The facade owns everything the three legacy entry points used to own
+separately:
+
+* the ``DecodePanelCache`` (host-LU decode weights per erasure pattern);
+* erasure normalisation (``erased=`` / ``survivors=`` / 0/1 ``mask``,
+  concrete or traced) into one ``ErasurePattern``;
+* batching: leading batch dimensions on A and/or B are lifted with vmap;
+* a jit-executable memo keyed by (backend, A.shape, B.shape, dtype,
+  erasure-kind), so repeated serving calls - including calls with NEW
+  erasure patterns of the same kind - reuse one compiled executable.
+
+Usage::
+
+    cm = CodedMatmul(plan)                      # fused Pallas backend
+    C  = cm(A, B, erased=[3])                   # or survivors=/mask=
+    C2 = cm.with_backend("reference")(A, B)     # same caches, new backend
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import CodedMatmulPlan
+from repro.runtime.erasure import ErasurePattern
+from repro.runtime.executors import Executor, resolve_executor
+
+__all__ = ["CodedMatmul"]
+
+
+class CodedMatmul:
+    """Coded C = A^T B with a pluggable execution backend.
+
+    A: (*batch, v, r), B: (*batch, v, t) -> C: (*batch, r, t).  Leading
+    batch dimensions must match on A and B, or be present on only one of
+    them.  The erasure pattern applies to the whole batch (one survivor
+    set per serving step).
+
+    Backends: "reference" | "staged" | "fused" (default) | "mesh" (pass
+    ``mesh=``, one worker per device along ``axis``).  All backends are
+    bit-identical for integer inputs within the plan's bounds.
+    """
+
+    def __init__(self, plan: CodedMatmulPlan, backend="fused", *,
+                 dtype=jnp.float64, mesh=None, axis: str = "model",
+                 use_kernels: bool = True, fused: bool = True,
+                 panel_ridge: float = 0.0, _shared=None):
+        self.plan = plan
+        self.dtype = jnp.dtype(dtype)
+        self._mesh = mesh
+        self._axis = axis
+        self._use_kernels = use_kernels
+        self._fused = fused
+        self._executor: Executor = resolve_executor(
+            backend, mesh=mesh, axis=axis, use_kernels=use_kernels,
+            fused=fused)
+        if _shared is not None:
+            self.panel_cache, self._executables, self._stats = _shared
+        else:
+            self.panel_cache = plan.make_panel_cache(panel_ridge)
+            self._executables = {}
+            self._stats = {"builds": 0, "hits": 0}
+
+    # -- backend plumbing ---------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return self._executor.name
+
+    def with_backend(self, backend, *, mesh=None, axis: Optional[str] = None,
+                     use_kernels: Optional[bool] = None,
+                     fused: Optional[bool] = None) -> "CodedMatmul":
+        """A sibling facade on another backend, SHARING panel + jit caches."""
+        return CodedMatmul(
+            self.plan, backend, dtype=self.dtype,
+            mesh=self._mesh if mesh is None else mesh,
+            axis=self._axis if axis is None else axis,
+            use_kernels=self._use_kernels if use_kernels is None else use_kernels,
+            fused=self._fused if fused is None else fused,
+            _shared=(self.panel_cache, self._executables, self._stats))
+
+    def cache_info(self) -> dict:
+        """Executable-memo and panel-cache counters (tests assert on these)."""
+        return {
+            "builds": self._stats["builds"],
+            "hits": self._stats["hits"],
+            "entries": len(self._executables),
+            "panel_builds": self.panel_cache.builds,
+        }
+
+    def executable_cache_size(self) -> int:
+        """Total jit-compiled specialisations across memoised executables."""
+        total = 0
+        for fn in self._executables.values():
+            size = getattr(fn, "_cache_size", None)
+            total += int(size()) if callable(size) else 1
+        return total
+
+    # -- the call -----------------------------------------------------------
+    def __call__(self, A, B, erasure: Any = None, *,
+                 erased: Optional[Sequence[int]] = None,
+                 survivors: Optional[Sequence[int]] = None,
+                 mask: Any = None) -> jnp.ndarray:
+        pattern = ErasurePattern.normalize(
+            self.plan.K, erasure, erased=erased, survivors=survivors,
+            mask=mask)
+        A = jnp.asarray(A)
+        B = jnp.asarray(B)
+        if A.ndim < 2 or B.ndim < 2:
+            raise ValueError(f"need >= 2-D operands, got {A.shape} / {B.shape}")
+        if A.shape[-2] != B.shape[-2]:
+            raise ValueError(f"contraction mismatch {A.shape} vs {B.shape}")
+        fn = self._get_executable(A, B, pattern.kind)
+        mask_arr = pattern.mask_array(self._mask_dtype())
+        if pattern.kind == "concrete":
+            if pattern.n_survivors < self.plan.tau:
+                raise ValueError(
+                    f"only {pattern.n_survivors} survivors < "
+                    f"tau={self.plan.tau}: undecodable")
+            panel = self.panel_cache.get(pattern.mask)
+            W = jnp.asarray(panel.W, self._decode_dtype())
+            return fn(A, B, mask_arr, W)
+        return fn(A, B, mask_arr)
+
+    # -- executable construction -------------------------------------------
+    def _get_executable(self, A, B, kind: str):
+        # the token folds in executor CONFIG (mesh/axis/kernel flags), so
+        # with_backend siblings that share a backend name but differ in
+        # config never alias each other's compiled executables.
+        key = (self._executor.cache_token(), A.shape, B.shape,
+               str(self.dtype), kind)
+        fn = self._executables.get(key)
+        if fn is not None:
+            self._stats["hits"] += 1
+            return fn
+        fn = self._build(A.ndim - 2, B.ndim - 2, kind)
+        self._executables[key] = fn
+        self._stats["builds"] += 1
+        return fn
+
+    def _build(self, a_batch: int, b_batch: int, kind: str):
+        base = self._executor.make_pipeline(self.plan, kind, self.dtype)
+        n_data = 2 if kind == "concrete" else 1  # (mask, W) or (mask,)
+        if (a_batch or b_batch) and not self._executor.supports_batching:
+            raise NotImplementedError(
+                f"backend {self.backend!r} does not support batched operands")
+        if a_batch and b_batch and a_batch != b_batch:
+            raise ValueError(
+                f"batch rank mismatch: A has {a_batch} leading dims, "
+                f"B has {b_batch}; batch one operand or both equally")
+        fn = base
+        for _ in range(max(a_batch, b_batch)):
+            in_axes = (0 if a_batch else None, 0 if b_batch else None,
+                       *([None] * n_data))
+            fn = jax.vmap(fn, in_axes=in_axes)
+        return jax.jit(fn)
+
+    # -- dtype policy -------------------------------------------------------
+    def _mask_dtype(self):
+        return jnp.float64 if self.dtype == jnp.float64 else jnp.float32
+
+    def _decode_dtype(self):
+        if self.plan.is_complex:
+            return (jnp.complex128 if self.dtype == jnp.float64
+                    else jnp.complex64)
+        return self.dtype

@@ -1,6 +1,4 @@
 """Tests for the precision/threshold tradeoff policy (paper Sec. III-D, IV)."""
-import numpy as np
-import pytest
 
 from repro.core import bounds
 from repro.core.schemes import make_scheme

@@ -1,10 +1,8 @@
 """Integration tests: HLO analyzer, roofline plumbing, examples smoke."""
-import json
 import subprocess
 import sys
 from pathlib import Path
 
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo

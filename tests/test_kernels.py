@@ -7,8 +7,6 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.block_matmul import matmul_t_pallas
-from repro.kernels.coded_decode import decode_pallas
-from repro.kernels.coded_encode import encode_pallas
 
 
 def _tol(dtype):

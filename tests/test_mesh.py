@@ -6,7 +6,6 @@ import subprocess
 import sys
 from pathlib import Path
 
-import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -135,7 +134,10 @@ rules = default_rules(mesh)
 p2, o2, m2 = jax.jit(make_train_step(cfg, ocfg, rules))(params, opt, batch)
 l1, l2 = float(m1["loss"]), float(m2["loss"])
 assert abs(l1 - l2) / abs(l1) < 1e-4, (l1, l2)
-d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+f32 = jnp.float32
+d = jax.tree.map(
+    lambda a, b: float(jnp.max(jnp.abs(a.astype(f32) - b.astype(f32)))),
+    p1, p2)
 mx = max(jax.tree.leaves(d))
 assert mx < 1e-2, mx
 print("OK", l1, l2, mx)

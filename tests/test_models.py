@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config, list_archs
 from repro.models import (
     decode_step,
-    init_cache,
     init_params,
     prefill,
     train_loss,

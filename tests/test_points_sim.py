@@ -1,6 +1,5 @@
 """Evaluation points, Vandermonde conditioning, and the straggler simulator."""
 import numpy as np
-import pytest
 
 import jax
 

@@ -1,0 +1,405 @@
+"""Unified runtime (ISSUE-2): CodedMatmul facade, executors, erasure, caching.
+
+Covers the acceptance bar:
+  * ErasurePattern normalisation: erased / survivors / mask (concrete and
+    traced-under-jit) produce IDENTICAL results across executors;
+  * bit-identical parity across reference / staged / fused in-process and
+    all four backends (incl. mesh) in a child interpreter;
+  * zero recompiles after warm-up: repeated serving calls with fresh
+    erasure patterns hit the executable memo (and the underlying jit cache
+    stays at one specialisation per key);
+  * batched leading dimensions via vmap;
+  * legacy shims delegate and warn;
+  * CodedLinearPlan quantisation guard + round-trip accuracy.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import make_plan, make_scheme, uncoded_matmul  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    BACKENDS,
+    CodedMatmul,
+    ErasurePattern,
+    FusedKernelExecutor,
+    ReferenceExecutor,
+    StagedKernelExecutor,
+)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+LOCAL_BACKENDS = ("reference", "staged", "fused")
+
+# (kind, p, m, n, p_prime) - one geometry per scheme family.
+SCHEMES = [
+    ("bec", 2, 2, 2, 1),
+    ("tradeoff", 4, 2, 1, 2),
+    ("polycode", 2, 2, 1, 1),
+]
+
+
+def _int_problem(rng, plan, v, r, t):
+    A = jnp.asarray(rng.integers(-3, 4, size=(v, r)), jnp.float64)
+    B = jnp.asarray(rng.integers(-3, 4, size=(v, t)), jnp.float64)
+    return A, B, np.asarray(uncoded_matmul(A, B))
+
+
+def _make(kind, p, m, n, pp, *, extra=2, v_mult=8, points="chebyshev"):
+    tau = make_scheme(kind, p, m, n, p_prime=pp).tau
+    v = v_mult * p
+    return make_plan(kind, p, m, n, K=tau + extra, L=v * 3 * 3 + 1,
+                     p_prime=pp, points=points), v
+
+
+class TestErasurePattern:
+    def test_equivalent_inputs_same_key(self):
+        K = 6
+        by_erased = ErasurePattern.normalize(K, erased=[1, 4])
+        by_survivors = ErasurePattern.normalize(K, survivors=[0, 2, 3, 5])
+        by_mask = ErasurePattern.normalize(K, mask=[1, 0, 1, 1, 0, 1])
+        positional = ErasurePattern.normalize(K, np.array([1, 0, 1, 1, 0, 1.0]))
+        assert (by_erased.key == by_survivors.key == by_mask.key
+                == positional.key)
+        assert by_erased.kind == "concrete"
+        assert by_erased.survivors == (0, 2, 3, 5)
+        assert by_erased.erased == (1, 4)
+        assert by_erased.n_survivors == 4
+
+    def test_positional_short_list_is_erased_ids(self):
+        pat = ErasurePattern.normalize(6, [1, 4])
+        assert pat.erased == (1, 4)
+
+    def test_default_is_all_alive(self):
+        pat = ErasurePattern.normalize(4)
+        assert pat.n_survivors == 4 and pat.kind == "concrete"
+
+    def test_rejects_multiple_specs(self):
+        with pytest.raises(ValueError, match="only one"):
+            ErasurePattern.normalize(4, erased=[0], survivors=[1, 2, 3])
+        with pytest.raises(ValueError, match="only one"):
+            ErasurePattern.normalize(4, [0], mask=[1, 1, 1, 0])
+
+    def test_rejects_bad_ids_and_shapes(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            ErasurePattern.normalize(4, erased=[1, 1])
+        with pytest.raises(ValueError, match="out of range"):
+            ErasurePattern.normalize(4, erased=[4])
+        with pytest.raises(ValueError, match="mask shape"):
+            ErasurePattern.normalize(4, mask=[1, 1, 1])
+
+    def test_traced_mask_detected_under_jit(self):
+        seen = {}
+
+        def probe(m):
+            seen["pat"] = ErasurePattern.normalize(4, mask=m)
+            return m
+
+        jax.jit(probe)(jnp.ones(4))
+        assert seen["pat"].kind == "traced"
+        assert seen["pat"].key == ("traced",)
+        with pytest.raises(ValueError, match="traced"):
+            _ = seen["pat"].survivors
+
+
+class TestExecutorParity:
+    """reference / staged / fused bit-identical, every erasure input form."""
+
+    @pytest.mark.parametrize("kind,p,m,n,pp", SCHEMES)
+    def test_backends_and_erasure_forms_identical(self, rng, kind, p, m, n, pp):
+        plan, v = _make(kind, p, m, n, pp)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan)
+        erased = [1, plan.K - 1]
+        surv = [k for k in range(plan.K) if k not in erased]
+        mask = np.ones(plan.K)
+        mask[erased] = 0
+        outs = []
+        for backend in LOCAL_BACKENDS:
+            b = cm.with_backend(backend)
+            for C in (b(A, B, erased=erased), b(A, B, survivors=surv),
+                      b(A, B, mask=mask), b(A, B, jnp.asarray(mask))):
+                np.testing.assert_array_equal(np.asarray(C), C0,
+                                              err_msg=backend)
+                outs.append(np.asarray(C))
+        for out in outs[1:]:  # bit-identical, not merely both-exact
+            np.testing.assert_array_equal(out, outs[0])
+
+    @pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+    def test_traced_mask_matches_concrete(self, rng, backend):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, backend)
+        mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+        C_traced = jax.jit(lambda a, b, m: cm(a, b, mask=m))(A, B, mask)
+        C_concrete = cm(A, B, mask=np.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(C_traced), C0)
+        np.testing.assert_array_equal(np.asarray(C_traced),
+                                      np.asarray(C_concrete))
+
+    def test_complex_plan_parity(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1, extra=6, points="unit_circle")
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        outs = [np.asarray(CodedMatmul(plan, b)(A, B, erased=[0, 2, 4]))
+                for b in LOCAL_BACKENDS]
+        for out in outs:
+            np.testing.assert_allclose(out, C0, atol=1e-9)
+        for out in outs[1:]:
+            np.testing.assert_array_equal(out, outs[0])
+
+    def test_undecodable_raises(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan)
+        with pytest.raises(ValueError, match="survivors"):
+            cm(A, B, erased=list(range(plan.K - plan.tau + 1)))
+
+    def test_unknown_backend_raises(self, rng):
+        plan, _ = _make("bec", 2, 2, 2, 1)
+        with pytest.raises(ValueError, match="unknown backend"):
+            CodedMatmul(plan, "warp-drive")
+        assert set(BACKENDS) == {"reference", "staged", "fused", "mesh"}
+
+
+class TestJitCompileCache:
+    def test_zero_recompiles_after_warmup(self, rng):
+        """Serving loop: fresh erasure patterns reuse ONE executable."""
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "fused")
+        cm(A, B)  # warm-up compile
+        info = cm.cache_info()
+        assert info["builds"] == 1
+        n_exec = cm.executable_cache_size()
+        assert n_exec == 1
+        for erased in ([0], [1], [3, 5], [2], [0, 4]):
+            np.testing.assert_array_equal(
+                np.asarray(cm(A, B, erased=erased)), C0)
+        info = cm.cache_info()
+        assert info["builds"] == 1, "new erasure patterns must not rebuild"
+        assert info["hits"] == 5
+        assert cm.executable_cache_size() == n_exec, "jit recompiled"
+
+    def test_cache_key_dimensions(self, rng):
+        """backend / shape / erasure-kind each get their own executable."""
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        cm(A, B)
+        assert cm.cache_info()["entries"] == 1
+        cm(A, B[:, :8])                                    # new shape
+        assert cm.cache_info()["entries"] == 2
+        jax.jit(lambda a, b, m: cm(a, b, mask=m))(
+            A, B, jnp.ones(plan.K))                        # new kind
+        assert cm.cache_info()["entries"] == 3
+        cm.with_backend("fused")(A, B)                     # new backend
+        assert cm.cache_info()["entries"] == 4
+        cm(A, B)
+        assert cm.cache_info()["entries"] == 4             # all warm
+
+    def test_cache_token_folds_in_executor_config(self):
+        """Same backend name, different config -> distinct memo keys."""
+        from repro.runtime import MeshExecutor
+
+        class FakeMesh:  # hashable stand-in; make_pipeline is never called
+            pass
+
+        m = FakeMesh()
+        base = MeshExecutor(m).cache_token()
+        assert MeshExecutor(m, use_kernels=False).cache_token() != base
+        assert MeshExecutor(m, fused=False).cache_token() != base
+        assert MeshExecutor(m, axis="data").cache_token() != base
+        assert MeshExecutor(FakeMesh()).cache_token() != base
+        assert MeshExecutor(m).cache_token() == base
+
+    def test_with_backend_shares_panel_cache(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        cm(A, B, erased=[1])
+        builds = cm.panel_cache.builds
+        other = cm.with_backend("fused")
+        assert other.panel_cache is cm.panel_cache
+        other(A, B, erased=[1])                            # same pattern
+        assert cm.panel_cache.builds == builds
+
+
+class TestBatching:
+    @pytest.mark.parametrize("backend", LOCAL_BACKENDS)
+    def test_batched_both(self, rng, backend):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        A2, B2, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, backend)
+        Cb = cm(jnp.stack([A, A2]), jnp.stack([B, B2]), erased=[1])
+        assert Cb.shape == (2, 12, 10)
+        np.testing.assert_array_equal(np.asarray(Cb[0]),
+                                      np.asarray(cm(A, B, erased=[1])))
+        np.testing.assert_array_equal(np.asarray(Cb[1]),
+                                      np.asarray(cm(A2, B2, erased=[1])))
+
+    def test_batched_one_side_broadcasts(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        A2, _, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Cb = cm(jnp.stack([A, A2]), B, erased=[0])
+        np.testing.assert_array_equal(np.asarray(Cb[1]),
+                                      np.asarray(cm(A2, B, erased=[0])))
+        Cb = cm(A, jnp.stack([B, B]), erased=[0])
+        assert Cb.shape == (2, 12, 10)
+
+    def test_two_leading_batch_dims(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        Ab = jnp.broadcast_to(A, (2, 3) + A.shape)
+        Bb = jnp.broadcast_to(B, (2, 3) + B.shape)
+        C = CodedMatmul(plan)(Ab, Bb)
+        assert C.shape == (2, 3, 12, 10)
+        np.testing.assert_array_equal(np.asarray(C[1, 2]),
+                                      np.asarray(CodedMatmul(plan)(A, B)))
+
+    def test_batch_rank_mismatch_raises(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan)
+        with pytest.raises(ValueError, match="batch rank"):
+            cm(jnp.broadcast_to(A, (2, 3) + A.shape),
+               jnp.broadcast_to(B, (3,) + B.shape))
+
+
+class TestLegacyShims:
+    def test_coded_matmul_warns_and_matches(self, rng):
+        from repro.core import coded_matmul
+
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        with pytest.warns(DeprecationWarning, match="CodedMatmul"):
+            C = coded_matmul(A, B, plan, erased=[1], fused=True)
+        np.testing.assert_array_equal(np.asarray(C), C0)
+        with pytest.raises(ValueError, match="only one"):
+            with pytest.warns(DeprecationWarning):
+                coded_matmul(A, B, plan, erased=[0], survivors=[1, 2, 3, 4])
+
+    def test_make_plan_validates_s(self):
+        with pytest.raises(ValueError, match="s=1.0"):
+            make_plan("bec", 2, 2, 2, K=6, L=100, s=1)
+        plan = make_plan("bec", 2, 2, 2, K=6, L=100, s=512.0)
+        assert isinstance(plan.s, float) and plan.s == 512.0
+
+
+class TestQuantScale:
+    def test_zero_and_tiny_inputs_guarded(self):
+        from repro.distributed.coded import _quant_scale
+
+        qmax = 7
+        assert float(_quant_scale(jnp.zeros((4, 4)), qmax)) == 1.0
+        # tiny but nonzero: the old +1e-9 epsilon would collapse the grid
+        x = jnp.full((4, 4), 1e-12)
+        s = float(_quant_scale(x, qmax))
+        assert float(jnp.round(x / s).max()) == qmax
+
+
+@pytest.mark.parametrize("scenario", ["parity", "serving", "quant"])
+def test_mesh_runtime_child(scenario):
+    """Mesh backend scenarios on 8 fake devices (child interpreter)."""
+    code = _MESH_CHILD_PROLOGUE + _MESH_CHILD[scenario]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "OK" in proc.stdout
+
+
+_MESH_CHILD_PROLOGUE = """
+import jax; jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np
+from repro.core import make_plan, uncoded_matmul
+from repro.runtime import CodedMatmul
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.integers(-4, 5, size=(64, 48)), jnp.float64)
+B = jnp.asarray(rng.integers(-4, 5, size=(64, 40)), jnp.float64)
+plan = make_plan("bec", 2, 2, 1, K=4, L=64*4*4+1, points="chebyshev")
+C0 = np.asarray(uncoded_matmul(A, B))
+cm = CodedMatmul(plan, "mesh", mesh=mesh)
+"""
+
+_MESH_CHILD = {
+    # all four executors bit-identical, every erasure input form, traced incl.
+    "parity": """
+for erased in ([], [1], [0, 3]):
+    mask = np.ones(4); mask[erased] = 0
+    outs = [np.asarray(cm.with_backend(b)(A, B, mask=mask))
+            for b in ("mesh", "reference", "staged", "fused")]
+    outs.append(np.asarray(cm(A, B, erased=erased)))
+    outs.append(np.asarray(cm(A, B, survivors=np.flatnonzero(mask))))
+    for out in outs:
+        np.testing.assert_array_equal(out, C0, err_msg=str(erased))
+mask = jnp.asarray([1., 0., 1., 1.])
+C_tr = jax.jit(lambda a, b, m: cm(a, b, mask=m))(A, B, mask)
+np.testing.assert_array_equal(np.asarray(C_tr), C0)
+jx = str(jax.make_jaxpr(lambda a, b: cm(a, b, mask=np.array([1., 1., 0., 1.])))(A, B))
+assert "triangular_solve" not in jx and " lu " not in jx
+jx_dyn = str(jax.make_jaxpr(lambda a, b, m: cm(a, b, mask=m))(A, B, mask))
+assert "triangular_solve" in jx_dyn or " lu " in jx_dyn
+print("OK")
+""",
+    # serving loop: one executable, zero recompiles across fresh patterns
+    "serving": """
+cm(A, B)
+assert cm.cache_info()["builds"] == 1
+n_exec = cm.executable_cache_size()
+for erased in ([0], [1], [2], [3], [1, 2]):
+    np.testing.assert_array_equal(np.asarray(cm(A, B, erased=erased)), C0)
+info = cm.cache_info()
+assert info["builds"] == 1 and info["hits"] == 5, info
+assert cm.executable_cache_size() == n_exec
+Cb = cm(jnp.stack([A, A + 1]), B, erased=[2])   # batched via vmap
+assert Cb.shape == (2, 48, 40)
+np.testing.assert_array_equal(np.asarray(Cb[0]), C0)
+print("OK")
+""",
+    # CodedLinearPlan: round-trip accuracy vs the float matmul + zero guard
+    "quant": """
+from repro.distributed.coded import CodedLinearPlan
+rng = np.random.default_rng(1)
+x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+W = jnp.asarray(rng.normal(size=(32, 24)), jnp.float32)
+plan_q = make_plan("bec", 2, 2, 1, K=4, L=32*129*129+1, points="chebyshev")
+lin = CodedLinearPlan(plan_q, mesh, quant_bits=8, dtype=jnp.float64)
+y = lin(x, W, mask=jnp.asarray([1., 0., 1., 1.]))
+y_float = x @ W
+# quantisation error bound: x = xi*sx + ex with |ex| <= sx/2 (likewise W),
+# so |y - y_float| <= d*(sx/2*max|W| + sw/2*max|x| + sx*sw/4) per entry.
+qmax = 127
+sx = float(jnp.max(jnp.abs(x))) / qmax
+sw = float(jnp.max(jnp.abs(W))) / qmax
+d = x.shape[1]
+bound = d * (sx / 2 * float(jnp.max(jnp.abs(W)))
+             + sw / 2 * float(jnp.max(jnp.abs(x))) + sx * sw / 4)
+err = float(jnp.max(jnp.abs(y - y_float)))
+assert err <= bound, (err, bound)
+rel = err / float(jnp.max(jnp.abs(y_float)))
+assert rel < 0.05, rel
+# all-zero activations: output must be exactly zero, not scale noise
+y0 = lin(jnp.zeros_like(x), W)
+assert float(jnp.max(jnp.abs(y0))) == 0.0
+# tiny activations: signal must survive (old epsilon collapsed it to zero)
+yt = lin(x * 1e-12, W)
+rel_tiny = float(jnp.max(jnp.abs(yt - y_float * 1e-12)) /
+                 jnp.max(jnp.abs(y_float * 1e-12)))
+assert rel_tiny < 0.05, rel_tiny
+print("OK")
+""",
+}

@@ -2,12 +2,11 @@
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import make_pipeline
-from repro.optim import OptConfig, adamw_init, adamw_update, cosine_lr, global_norm
+from repro.optim import OptConfig, adamw_init, adamw_update, cosine_lr
 
 
 class TestData:
