@@ -1,0 +1,32 @@
+"""Adaptive straggler control plane (the layer between runtime/ and launch/).
+
+Closes the loop from observed per-worker latencies to scheme selection over
+the paper's L <-> tau ladder:
+
+    WorkerHealthMonitor   EWMA latency/variance, straggler scores, erasure
+                          mask + fitted LatencyModel          (monitor.py)
+    ExpectedLatencyPolicy tau-th order-statistic completion model ranking
+                          bec <-> tradeoff(p') <-> polycode subject to L
+                                                              (policy.py)
+    PlanLadder            one CodedMatmul facade per rung over a shared
+                          CacheGroup; prewarm() makes switch() recompile-
+                          free                                (ladder.py)
+    AdaptiveServer        the serving loop wiring the three together, with
+                          CodedElasticPolicy handoff when the erasure
+                          budget is exhausted                 (driver.py)
+
+See DESIGN.md Sec. 7.
+"""
+from repro.control.driver import AdaptiveServer, StepReport
+from repro.control.ladder import PlanLadder
+from repro.control.monitor import WorkerHealthMonitor
+from repro.control.policy import ExpectedLatencyPolicy, RungEstimate
+
+__all__ = [
+    "AdaptiveServer",
+    "StepReport",
+    "PlanLadder",
+    "WorkerHealthMonitor",
+    "ExpectedLatencyPolicy",
+    "RungEstimate",
+]

@@ -1,0 +1,163 @@
+"""``AdaptiveServer``: the request loop that closes the control loop.
+
+Each step: record per-worker finish times (real, or drawn from an injected
+feed / ``LatencyModel`` for reproducible simulation) -> update the
+``WorkerHealthMonitor`` -> let the ``ExpectedLatencyPolicy`` re-rank the
+``PlanLadder`` and switch rungs -> emit the monitor's erasure mask (clamped
+to the active rung's budget) -> serve the coded matmul through the active
+facade with the mask as pure data.  ``CodedElasticPolicy`` consumes the
+same mask; when the flagged-straggler count exhausts every rung's budget
+the server records a respecialisation handoff (``plan_shrink`` target)
+instead of silently waiting on known-slow machines forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.api import uncoded_matmul
+from repro.core.simulator import LatencyModel, TimeFeed, WorkerTimes
+from repro.distributed.elastic import CodedElasticPolicy, plan_shrink
+from repro.control.ladder import PlanLadder
+from repro.control.monitor import WorkerHealthMonitor
+from repro.control.policy import ExpectedLatencyPolicy
+
+__all__ = ["StepReport", "AdaptiveServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepReport:
+    """What one adaptive serving step did and cost."""
+
+    step: int
+    rung: str
+    switched: bool
+    erased: Tuple[int, ...]        # workers the mask dropped this step
+    sim_latency_s: float           # modelled step completion (mask-aware)
+    wall_ms: float                 # measured facade-call wall time
+    slack: int                     # elastic slack AFTER applying the mask
+    respecialize: bool             # erasure budget exhausted ladder-wide
+    shrink_target: Optional[Tuple[int, int]]  # plan_shrink mesh on handoff
+    exact: Optional[bool]          # vs uncoded oracle (None = not checked)
+
+
+class AdaptiveServer:
+    """Monitor -> policy -> ladder, per request.
+
+    feed: injectable per-worker finish-time source; defaults to sampling
+        ``fallback_model`` with no stragglers (a healthy cluster).  Real
+        deployments pass measured per-worker step times instead.
+    reevaluate_every: policy cadence in steps (1 = every step).
+    check_exact: compare every decoded C against the uncoded oracle.
+    """
+
+    def __init__(self, ladder: PlanLadder, *,
+                 monitor: Optional[WorkerHealthMonitor] = None,
+                 policy: Optional[ExpectedLatencyPolicy] = None,
+                 feed: Optional[TimeFeed] = None,
+                 fallback_model: Optional[LatencyModel] = None,
+                 reevaluate_every: int = 1,
+                 score_threshold: float = 0.5,
+                 seed: int = 0,
+                 check_exact: bool = False):
+        self.ladder = ladder
+        self.monitor = monitor or WorkerHealthMonitor(ladder.K)
+        self.policy = policy or ExpectedLatencyPolicy(
+            ladder, score_threshold=score_threshold)
+        self.elastic = CodedElasticPolicy(
+            K=ladder.K, tau=ladder.tau(ladder.active))
+        self._feed = feed
+        self._fallback = fallback_model or LatencyModel(base=1.0, jitter=0.0)
+        self.reevaluate_every = max(1, reevaluate_every)
+        self.score_threshold = score_threshold
+        self.check_exact = check_exact
+        self.rng = np.random.default_rng(seed)
+        self.steps = 0
+        self.reports: List[StepReport] = []
+
+    # -- worker-time ingestion ----------------------------------------------
+    def _worker_times(self) -> np.ndarray:
+        if self._feed is not None:
+            t = np.asarray(self._feed(self.steps, self.rng), dtype=np.float64)
+            if t.shape != (self.ladder.K,):
+                raise ValueError(
+                    f"feed returned shape {t.shape}, need ({self.ladder.K},)")
+            return t
+        return self._fallback.sample(self.ladder.K, (), self.rng)
+
+    # -- one serving step ----------------------------------------------------
+    def step(self, A, B) -> Tuple[jax.Array, StepReport]:
+        times = self._worker_times()
+        self.monitor.record_step(times)
+        scores = self.monitor.straggler_scores()
+
+        switched = False
+        # a cold monitor ranks on noise: hold the initial rung until the
+        # EWMA estimates have min_history steps behind them (same gating
+        # the monitor applies to its erasure mask).
+        if (self.monitor.steps >= self.monitor.min_history
+                and self.steps % self.reevaluate_every == 0):
+            model = self.monitor.fitted_model()
+            best = self.policy.select(model, scores)
+            if best.rung != self.ladder.active:
+                self.ladder.switch(best.rung)
+                self.elastic = CodedElasticPolicy(
+                    K=self.ladder.K, tau=best.tau,
+                    healthy=self.elastic.healthy.copy())
+                switched = True
+
+        budget = self.ladder.budget(self.ladder.active)
+        mask = self.monitor.erasure_mask(budget, self.score_threshold)
+        self.elastic.observe_mask(mask)
+
+        # ladder-wide exhaustion: more persistent stragglers than even the
+        # widest-budget FEASIBLE rung can erase -> respecialisation handoff.
+        flagged = self.monitor.stragglers(self.score_threshold).size
+        max_budget = max((self.ladder.budget(r) for r in self.ladder.rungs
+                          if self.policy.feasible(r)), default=0)
+        respecialize = flagged > max_budget and self.elastic.must_respecialize
+        shrink_target = None
+        if respecialize:
+            healthy = self.ladder.K - flagged
+            try:
+                shrink_target = plan_shrink(healthy)
+            except ValueError:
+                shrink_target = None  # not even a 1x1 mesh left
+
+        t0 = time.perf_counter()
+        C = self.ladder(A, B, mask=mask)
+        jax.block_until_ready(C)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+
+        exact = None
+        if self.check_exact:
+            exact = bool(np.array_equal(np.asarray(C),
+                                        np.asarray(uncoded_matmul(A, B))))
+
+        report = StepReport(
+            step=self.steps,
+            rung=self.ladder.active,
+            switched=switched,
+            erased=tuple(int(i) for i in np.flatnonzero(mask == 0)),
+            sim_latency_s=WorkerTimes(times).completion_with_mask(mask),
+            wall_ms=wall_ms,
+            slack=self.elastic.slack,
+            respecialize=respecialize,
+            shrink_target=shrink_target,
+            exact=exact,
+        )
+        self.reports.append(report)
+        self.steps += 1
+        return C, report
+
+    def run(self, requests, make_request: Callable[[int], Tuple]) -> List[StepReport]:
+        """Serve ``requests`` steps of ``make_request(step) -> (A, B)``."""
+        start = len(self.reports)
+        for i in range(requests):
+            self.step(*make_request(i))
+        return self.reports[start:]

@@ -1,0 +1,162 @@
+"""``PlanLadder``: the paper's L <-> tau plan family as one switchable unit.
+
+One ladder freezes the shared geometry ``(p, m, n, K)`` and entry bound
+``L`` and instantiates every rung of the paper's tradeoff:
+
+    bec                    tau = m n                (Sec. III-B, deepest digits)
+    tradeoff(p' | p)       tau = m n p' + p' - 1    (Sec. IV, one per divisor)
+    polycode               tau = p m n + p - 1      (Yu et al., no digits)
+
+Every rung gets its own ``CodedMatmul`` facade, but all facades share ONE
+``runtime.CacheGroup``: decode panels persist per plan and the
+jit-executable memo spans the family (keys fold in the plan token), so
+after ``prewarm()`` compiles each rung once, ``switch()`` is recompile-free
+— the group's build counter staying flat across switches is asserted by
+tests and the control bench.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds as bounds_mod
+from repro.core.api import CodedMatmulPlan, make_plan
+from repro.core.schemes import make_scheme
+from repro.runtime import CacheGroup, CodedMatmul
+
+__all__ = ["PlanLadder"]
+
+
+def _divisors(p: int) -> Tuple[int, ...]:
+    return tuple(d for d in range(1, p + 1) if p % d == 0)
+
+
+class PlanLadder:
+    """The bec <-> tradeoff(p') <-> polycode family over shared (p, m, n, K).
+
+    Rungs whose recovery threshold exceeds ``K`` are dropped at
+    construction (they could never decode).  ``rungs`` lists the survivors
+    in ascending-tau order; ``active`` starts at the lowest threshold.
+    """
+
+    def __init__(self, p: int, m: int, n: int, K: int, L: int, *,
+                 backend: str = "reference", dtype=jnp.float64,
+                 points: str = "chebyshev", mesh=None,
+                 include: Optional[Sequence[str]] = None):
+        self.grid = (p, m, n)
+        self.K = K
+        self.L = L
+        self.dtype = jnp.dtype(dtype)
+        self.group = CacheGroup()
+        self.switch_count = 0
+        self.step_overhead_s: dict = {}
+
+        specs = [("bec", dict(kind="bec"))]
+        specs += [(f"tradeoff(p'={pp})", dict(kind="tradeoff", p_prime=pp))
+                  for pp in _divisors(p) if 1 < pp < p]
+        specs.append(("polycode", dict(kind="polycode")))
+
+        self._plans: dict = {}
+        self._facades: dict = {}
+        for name, spec in specs:
+            if include is not None and name not in include:
+                continue
+            if make_scheme(spec["kind"], p, m, n,
+                           p_prime=spec.get("p_prime", 1)).tau > K:
+                continue  # this rung can never decode with K workers
+            plan = make_plan(spec["kind"], p, m, n, K=K, L=L,
+                             p_prime=spec.get("p_prime", 1), points=points)
+            self._plans[name] = plan
+            self._facades[name] = CodedMatmul(
+                plan, backend, dtype=dtype, mesh=mesh, cache_group=self.group)
+        if not self._plans:
+            raise ValueError(
+                f"no rung of grid (p={p}, m={m}, n={n}) fits K={K} workers")
+        self._order = tuple(sorted(self._plans, key=lambda r: self.tau(r)))
+        # start on the lowest-threshold rung that can decode EXACTLY at this
+        # entry bound (an infeasible-only ladder still constructs; selection
+        # through ExpectedLatencyPolicy will refuse it).
+        self._active = next((r for r in self._order if self.feasible(r)),
+                            self._order[0])
+
+    # -- rung accessors -----------------------------------------------------
+    @property
+    def rungs(self) -> Tuple[str, ...]:
+        """Rung names in ascending-tau order."""
+        return self._order
+
+    def plan(self, rung: str) -> CodedMatmulPlan:
+        return self._plans[self._check(rung)]
+
+    def facade(self, rung: str) -> CodedMatmul:
+        return self._facades[self._check(rung)]
+
+    def tau(self, rung: str) -> int:
+        return self._plans[self._check(rung)].tau
+
+    def budget(self, rung: str) -> int:
+        """The rung's erasure budget K - tau."""
+        return self.K - self.tau(rung)
+
+    def feasible(self, rung: str) -> bool:
+        """Exact decode possible at the ladder's entry bound L: the rung's
+        digit stack must fit the dtype mantissa (paper Sec. III-D/IV)."""
+        plan = self._plans[self._check(rung)]
+        return bounds_mod.is_safe(self.L, plan.s, plan.scheme.digit_depth,
+                                  str(self.dtype), tau=plan.tau)
+
+    def _check(self, rung: str) -> str:
+        if rung not in self._plans:
+            raise KeyError(f"unknown rung {rung!r}; have {list(self._plans)}")
+        return rung
+
+    # -- the switchable facade ---------------------------------------------
+    @property
+    def active(self) -> str:
+        return self._active
+
+    def switch(self, rung: str) -> CodedMatmul:
+        """Make ``rung`` the active scheme (no recompile after prewarm)."""
+        rung = self._check(rung)
+        if rung != self._active:
+            self._active = rung
+            self.switch_count += 1
+        return self._facades[rung]
+
+    def __call__(self, A, B, **erasure) -> jnp.ndarray:
+        """Coded C = A^T B on the ACTIVE rung."""
+        return self._facades[self._active](A, B, **erasure)
+
+    # -- compilation --------------------------------------------------------
+    def prewarm(self, a_shape: Sequence[int], b_shape: Sequence[int],
+                reps: int = 1) -> dict:
+        """Compile every rung for one problem shape; measure warm step cost.
+
+        One call per rung with the full-survivor concrete pattern builds the
+        (plan, backend, shape, dtype, kind="concrete") executable; any later
+        concrete mask is pure data against it, so subsequent ``switch()``es
+        never recompile.  The timed warm repetition per rung is stored in
+        ``step_overhead_s`` — the measured per-rung decode/step cost the
+        expected-latency policy adds to its order-statistic estimate.
+        """
+        A = jnp.zeros(tuple(a_shape), self.dtype)
+        B = jnp.zeros(tuple(b_shape), self.dtype)
+        for rung in self._order:
+            cm = self._facades[rung]
+            jax.block_until_ready(cm(A, B, erased=[]))  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(cm(A, B, erased=[]))
+            self.step_overhead_s[rung] = (time.perf_counter() - t0) / reps
+        info = self.cache_info()
+        info["overhead_s"] = dict(self.step_overhead_s)
+        return info
+
+    def cache_info(self) -> dict:
+        """Group-wide cache counters (builds flat after prewarm = no recompiles)."""
+        info = self.group.cache_info()
+        info["switches"] = self.switch_count
+        return info

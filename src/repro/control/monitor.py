@@ -1,0 +1,129 @@
+"""Live worker-health monitoring: EWMA latency tracking + straggler scoring.
+
+``WorkerHealthMonitor`` turns per-step worker finish times into the two
+artefacts the rest of the control plane consumes:
+
+* an **erasure mask** for the next step — the highest-scoring stragglers,
+  never more than the active code's erasure budget, so the synchronous
+  mesh step stops waiting for machines the monitor has seen lag; and
+* a fitted ``LatencyModel`` — per-worker EWMA means plus a jitter estimate —
+  that the expected-latency policy samples to rank ladder rungs.
+
+Scoring is deliberately memoryful: a worker is flagged when its step time
+exceeds ``straggler_factor`` x the step's fast-quartile time, and the flag feeds an
+exponentially-decayed score, so one noisy step neither erases a healthy
+worker nor instantly forgives a persistent straggler.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import LatencyModel
+
+__all__ = ["WorkerHealthMonitor"]
+
+
+class WorkerHealthMonitor:
+    """Per-worker EWMA latency/variance + decayed straggler scores.
+
+    alpha:            EWMA gain for the mean/variance estimates.
+    score_decay:      per-step decay of the straggler score (score is a
+                      convex blend: decay * old + (1 - decay) * flagged).
+    straggler_factor: a worker is flagged when its step time exceeds this
+                      multiple of the step's fast (25th-percentile) time.
+    min_history:      steps to observe before the monitor will erase anyone
+                      (a cold monitor emits the all-ones mask).
+    """
+
+    def __init__(self, K: int, *, alpha: float = 0.3, score_decay: float = 0.5,
+                 straggler_factor: float = 1.5, min_history: int = 2):
+        if K < 1:
+            raise ValueError(f"need K >= 1 workers, got {K}")
+        if not 0 < alpha <= 1:
+            raise ValueError(f"alpha={alpha} outside (0, 1]")
+        if not 0 <= score_decay < 1:
+            raise ValueError(f"score_decay={score_decay} outside [0, 1)")
+        if straggler_factor <= 1:
+            raise ValueError(f"straggler_factor={straggler_factor} must be > 1")
+        self.K = K
+        self.alpha = alpha
+        self.score_decay = score_decay
+        self.straggler_factor = straggler_factor
+        self.min_history = min_history
+        self.steps = 0
+        self._mean = np.zeros(K, dtype=np.float64)
+        self._var = np.zeros(K, dtype=np.float64)
+        self._score = np.zeros(K, dtype=np.float64)
+
+    # -- ingest -------------------------------------------------------------
+    def record_step(self, finish_times) -> None:
+        """Fold one step's (K,) per-worker finish times into the estimates."""
+        t = np.asarray(finish_times, dtype=np.float64)
+        if t.shape != (self.K,):
+            raise ValueError(f"finish times shape {t.shape} != ({self.K},)")
+        if not np.all(np.isfinite(t)) or np.any(t < 0):
+            raise ValueError("finish times must be finite and non-negative")
+        if self.steps == 0:
+            self._mean = t.copy()
+        else:
+            d = t - self._mean
+            self._mean = self._mean + self.alpha * d
+            self._var = (1 - self.alpha) * (self._var + self.alpha * d * d)
+        # flag relative to the fast quartile, not the median: stays correct
+        # while up to ~3/4 of the cluster straggles simultaneously
+        flagged = t > self.straggler_factor * np.quantile(t, 0.25)
+        self._score = (self.score_decay * self._score
+                       + (1 - self.score_decay) * flagged)
+        self.steps += 1
+
+    # -- estimates ----------------------------------------------------------
+    @property
+    def mean(self) -> np.ndarray:
+        """(K,) EWMA per-worker step latency."""
+        return self._mean.copy()
+
+    @property
+    def std(self) -> np.ndarray:
+        """(K,) EWMA per-worker latency standard deviation."""
+        return np.sqrt(self._var)
+
+    def straggler_scores(self) -> np.ndarray:
+        """(K,) decayed scores in [0, 1]; ~1 = persistently slow."""
+        return self._score.copy()
+
+    def stragglers(self, threshold: float = 0.5) -> np.ndarray:
+        """Worker ids scoring above ``threshold``, worst first."""
+        ids = np.flatnonzero(self._score > threshold)
+        return ids[np.argsort(-self._score[ids], kind="stable")]
+
+    # -- control-plane outputs ----------------------------------------------
+    def erasure_mask(self, budget: int, threshold: float = 0.5) -> np.ndarray:
+        """0/1 mask for the NEXT step: erase up to ``budget`` stragglers.
+
+        Only workers scoring above ``threshold`` are erased, worst first,
+        and never more than ``budget`` (the active rung's K - tau), so the
+        emitted mask always leaves a decodable survivor set.  A monitor
+        with fewer than ``min_history`` steps emits the all-ones mask.
+        """
+        if budget < 0:
+            raise ValueError(f"erasure budget must be >= 0, got {budget}")
+        mask = np.ones(self.K, dtype=np.float64)
+        if self.steps < self.min_history:
+            return mask
+        victims = self.stragglers(threshold)[:budget]
+        mask[victims] = 0.0
+        return mask
+
+    def fitted_model(self, fallback_base: float = 1.0) -> LatencyModel:
+        """Per-worker ``LatencyModel`` from the EWMA estimates.
+
+        The fitted means already carry each worker's observed slowness, so
+        ``straggler_slowdown`` is 1 (callers sample with ``stragglers=()``).
+        Jitter is the median coefficient of variation across workers.
+        """
+        if self.steps == 0:
+            return LatencyModel(base=fallback_base, straggler_slowdown=1.0)
+        mean = np.maximum(self._mean, 1e-12)
+        jitter = float(np.median(self.std / mean))
+        return LatencyModel(base=self._mean.copy(), straggler_slowdown=1.0,
+                            jitter=jitter)

@@ -1,0 +1,134 @@
+"""Expected-completion-time plan selection over the L <-> tau ladder.
+
+The paper's Sec. IV tradeoff, run online: tighter entry bounds buy a lower
+recovery threshold tau, and a lower tau buys a bigger erasure budget
+``K - tau`` — more stragglers the next synchronous step can refuse to wait
+for.  ``ExpectedLatencyPolicy`` ranks the ladder's rungs by the expected
+completion time of the next step under the monitor's fitted per-worker
+``LatencyModel``:
+
+    E[ max over kept workers of T_i ] + measured per-rung step cost
+
+where "kept" erases the monitor's flagged stragglers, worst first, up to
+the rung's budget.  When a rung's budget covers every flagged straggler
+and the budget is saturated this is exactly the tau-th order statistic of
+the fitted finish times — the paper's latency model with the order
+statistic now a *decision* (which mask to emit) instead of a passive
+property of an async master.
+
+Feasibility is gated by the entry bound: a rung whose digit stack
+``(2L)^{p/p'}`` overflows the dtype mantissa (``core.bounds.is_safe``)
+cannot decode exactly at this L and is never selected.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import LatencyModel, WorkerTimes
+from repro.control.ladder import PlanLadder
+
+__all__ = ["RungEstimate", "ExpectedLatencyPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RungEstimate:
+    """One rung's ranking entry."""
+
+    rung: str
+    tau: int
+    budget: int                 # erasure budget K - tau
+    feasible: bool              # digit stack fits the dtype mantissa at L
+    expected_latency_s: float   # E[step completion] + per-rung overhead
+    erased: Tuple[int, ...]     # stragglers the mask would erase on this rung
+    unmasked_stragglers: int    # flagged stragglers the budget could NOT cover
+
+
+class ExpectedLatencyPolicy:
+    """Ranks a ``PlanLadder``'s rungs by expected next-step completion.
+
+    overhead_s: per-rung additive step cost (seconds) — typically the
+        ladder's ``step_overhead_s`` measured at prewarm (decode dominates
+        the spread between rungs).  Missing rungs cost 0.
+    trials/seed: Monte-Carlo sampling of the fitted model.  With zero
+        fitted jitter one sample is exact and the loop short-circuits.
+    score_threshold: monitor score above which a worker counts as a
+        straggler for masking purposes.
+    """
+
+    def __init__(self, ladder: PlanLadder, *,
+                 overhead_s: Optional[Mapping[str, float]] = None,
+                 trials: int = 64, seed: int = 0,
+                 score_threshold: float = 0.5):
+        self.ladder = ladder
+        self.overhead_s = dict(overhead_s) if overhead_s is not None else None
+        self.trials = trials
+        self.seed = seed
+        self.score_threshold = score_threshold
+
+    # -- feasibility (the L gate) -------------------------------------------
+    def feasible(self, rung: str) -> bool:
+        """Exact decode possible at the ladder's entry bound L?"""
+        return self.ladder.feasible(rung)
+
+    # -- expected completion --------------------------------------------------
+    def _overhead(self, rung: str) -> float:
+        src = (self.overhead_s if self.overhead_s is not None
+               else self.ladder.step_overhead_s)
+        return float(src.get(rung, 0.0))
+
+    def _victims(self, rung: str, scores: Optional[np.ndarray]) -> Tuple[np.ndarray, int]:
+        """(workers the rung's mask would erase, flagged-but-unmasked count)."""
+        if scores is None:
+            return np.empty(0, dtype=np.int64), 0
+        scores = np.asarray(scores, dtype=np.float64)
+        flagged = np.flatnonzero(scores > self.score_threshold)
+        flagged = flagged[np.argsort(-scores[flagged], kind="stable")]
+        budget = self.ladder.budget(rung)
+        return flagged[:budget], max(0, flagged.size - budget)
+
+    def estimate(self, rung: str, model: LatencyModel,
+                 scores: Optional[np.ndarray] = None) -> RungEstimate:
+        """Expected completion of the next step served on ``rung``."""
+        K = self.ladder.K
+        victims, unmasked = self._victims(rung, scores)
+        mask = np.ones(K, dtype=np.float64)
+        mask[victims] = 0.0
+        rng = np.random.default_rng(self.seed)
+        trials = self.trials if model.jitter > 0 else 1
+        lat = np.empty(trials)
+        for t in range(trials):
+            times = WorkerTimes(model.sample(K, (), rng))
+            lat[t] = times.completion_with_mask(mask)
+        return RungEstimate(
+            rung=rung,
+            tau=self.ladder.tau(rung),
+            budget=self.ladder.budget(rung),
+            feasible=self.feasible(rung),
+            expected_latency_s=float(lat.mean()) + self._overhead(rung),
+            erased=tuple(int(w) for w in victims),
+            unmasked_stragglers=unmasked,
+        )
+
+    # -- ranking --------------------------------------------------------------
+    def rank(self, model: LatencyModel,
+             scores: Optional[np.ndarray] = None) -> Sequence[RungEstimate]:
+        """All rungs, best first: feasible before infeasible, then expected
+        latency, then tau (prefer the lower threshold on a latency tie —
+        it keeps the bigger erasure budget in reserve)."""
+        ests = [self.estimate(r, model, scores) for r in self.ladder.rungs]
+        return sorted(ests, key=lambda e: (not e.feasible,
+                                           round(e.expected_latency_s, 9),
+                                           e.tau))
+
+    def select(self, model: LatencyModel,
+               scores: Optional[np.ndarray] = None) -> RungEstimate:
+        """The best feasible rung; raises if the entry bound admits none."""
+        best = self.rank(model, scores)[0]
+        if not best.feasible:
+            raise ValueError(
+                f"no rung of ladder {self.ladder.rungs} decodes exactly at "
+                f"L={self.ladder.L} in {self.ladder.dtype}")
+        return best

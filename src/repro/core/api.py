@@ -211,5 +211,5 @@ def coded_matmul(
 
 
 def uncoded_matmul(A: jnp.ndarray, B: jnp.ndarray, dtype=jnp.float64) -> jnp.ndarray:
-    """Direct C = A^T B reference."""
-    return (A.astype(dtype).T @ B.astype(dtype))
+    """Direct C = A^T B reference; leading batch dims broadcast on either side."""
+    return jnp.einsum("...vr,...vt->...rt", A.astype(dtype), B.astype(dtype))

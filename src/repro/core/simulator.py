@@ -6,23 +6,52 @@ a scheme with threshold tau is the tau-th smallest worker finish time plus
 the decode time.  We reproduce this as a discrete-event model fed with real
 measured per-worker compute times (the worker matmul run on this host) so the
 comparison between schemes is apples-to-apples.
+
+Two completion conventions coexist:
+
+* **async master** (the paper's Fig. 1): the master decodes as soon as ANY
+  tau workers finish — ``WorkerTimes.completion_for_threshold``.
+* **synchronous step** (this repo's mesh runtime, DESIGN Sec. 3): a
+  shard_map step waits for EVERY worker that is not declared erased; the
+  0/1 mask is the only way to not wait for a straggler —
+  ``WorkerTimes.completion_with_mask``.  The control plane
+  (``repro.control``) exists to close that gap: an accurate mask makes the
+  synchronous step complete at the tau-th order statistic.
+
+``simulate_completion`` accepts an injectable per-worker time ``feed`` so
+recorded traces (or a health monitor's fitted model) can replace the
+parametric ``LatencyModel``; ``completion_cdf``/``completion_quantile``
+summarise trial latencies for the control plane's expected-latency policy.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
-__all__ = ["WorkerTimes", "simulate_completion", "measure_worker_time", "LatencyModel"]
+__all__ = [
+    "WorkerTimes",
+    "simulate_completion",
+    "measure_worker_time",
+    "LatencyModel",
+    "TimeFeed",
+    "completion_cdf",
+    "completion_quantile",
+]
+
+#: Injectable per-worker finish-time source: (trial_index, rng) -> (K,) seconds.
+TimeFeed = Callable[[int, np.random.Generator], np.ndarray]
 
 
 @dataclasses.dataclass(frozen=True)
 class LatencyModel:
     """Per-worker finish-time model.
 
-    base: seconds of useful compute per worker (measured or supplied).
+    base: seconds of useful compute — a scalar (homogeneous cluster) or a
+    (K,)-vector of per-worker means (e.g. fitted by
+    ``control.WorkerHealthMonitor`` from live EWMA latencies).
     straggler_slowdown: multiplicative factor for stragglers (paper: 2.0 -
     the straggler computes twice).
     jitter: optional exponential jitter scale (fraction of base) applied to
@@ -30,15 +59,24 @@ class LatencyModel:
     deterministic duplication model.
     """
 
-    base: float
+    base: Union[float, np.ndarray]
     straggler_slowdown: float = 2.0
     jitter: float = 0.0
 
+    def base_vector(self, K: int) -> np.ndarray:
+        """The (K,) per-worker mean compute times."""
+        b = np.asarray(self.base, dtype=np.float64)
+        if b.ndim == 0:
+            return np.full(K, float(b), dtype=np.float64)
+        if b.shape != (K,):
+            raise ValueError(f"per-worker base has shape {b.shape}, need ({K},)")
+        return b.copy()
+
     def sample(self, K: int, stragglers: Sequence[int], rng: np.random.Generator) -> np.ndarray:
-        t = np.full(K, self.base, dtype=np.float64)
+        t = self.base_vector(K)
         t[list(stragglers)] *= self.straggler_slowdown
         if self.jitter > 0:
-            t = t + rng.exponential(self.jitter * self.base, size=K)
+            t = t + rng.exponential(self.jitter * t)
         return t
 
 
@@ -47,22 +85,38 @@ class WorkerTimes:
     finish: np.ndarray  # (K,) seconds
 
     def completion_for_threshold(self, tau: int) -> float:
-        """Latency until ANY tau workers have finished."""
+        """Latency until ANY tau workers have finished (async master)."""
         return float(np.sort(self.finish)[tau - 1])
 
     def survivors_at_threshold(self, tau: int) -> np.ndarray:
         """Worker ids of the first tau finishers (the decode survivor set)."""
         return np.argsort(self.finish, kind="stable")[:tau]
 
+    def completion_with_mask(self, mask) -> float:
+        """Latency of one SYNCHRONOUS step under a 0/1 survivor mask.
+
+        The step waits for every non-erased worker (this repo's shard_map
+        runtime has no partial barrier); erased workers are never waited
+        on.  With a mask that erases exactly the K - tau slowest workers
+        this equals ``completion_for_threshold(tau)``.
+        """
+        keep = np.asarray(mask).astype(bool)
+        if keep.shape != self.finish.shape:
+            raise ValueError(f"mask shape {keep.shape} != {self.finish.shape}")
+        if not keep.any():
+            raise ValueError("mask erases every worker: nothing to wait for")
+        return float(self.finish[keep].max())
+
 
 def simulate_completion(
     K: int,
     tau: int,
     num_stragglers: int,
-    model: LatencyModel,
+    model: Optional[LatencyModel],
     decode_time: float = 0.0,
     trials: int = 100,
     seed: int = 0,
+    feed: Optional[TimeFeed] = None,
 ) -> np.ndarray:
     """Return per-trial completion latencies (paper Fig. 1 protocol).
 
@@ -70,14 +124,37 @@ def simulate_completion(
     stragglers.  If fewer than tau workers can ever finish (impossible here -
     stragglers still finish, just late) the job still completes; the latency
     jump at num_stragglers > K - tau is the interesting regime.
+
+    ``feed`` overrides the parametric model with an injectable per-worker
+    time source ``(trial, rng) -> (K,) seconds`` — recorded traces or a
+    monitor-fitted model replay through the same protocol.
     """
+    if model is None and feed is None:
+        raise ValueError("need a LatencyModel or a time feed")
     rng = np.random.default_rng(seed)
     out = np.empty(trials)
     for t in range(trials):
-        stragglers = rng.choice(K, size=num_stragglers, replace=False)
-        wt = WorkerTimes(model.sample(K, stragglers, rng))
-        out[t] = wt.completion_for_threshold(tau) + decode_time
+        if feed is not None:
+            finish = np.asarray(feed(t, rng), dtype=np.float64)
+            if finish.shape != (K,):
+                raise ValueError(f"feed returned shape {finish.shape}, need ({K},)")
+        else:
+            stragglers = rng.choice(K, size=num_stragglers, replace=False)
+            finish = model.sample(K, stragglers, rng)
+        out[t] = WorkerTimes(finish).completion_for_threshold(tau) + decode_time
     return out
+
+
+def completion_cdf(latencies: np.ndarray, ts: np.ndarray) -> np.ndarray:
+    """Empirical completion CDF: P[T <= t] for each t in ``ts``."""
+    lat = np.sort(np.asarray(latencies, dtype=np.float64))
+    return np.searchsorted(lat, np.asarray(ts, dtype=np.float64),
+                           side="right") / max(lat.size, 1)
+
+
+def completion_quantile(latencies: np.ndarray, q) -> np.ndarray:
+    """Completion-latency quantile(s) (e.g. q=0.99 for a tail SLO)."""
+    return np.quantile(np.asarray(latencies, dtype=np.float64), q)
 
 
 def measure_worker_time(fn: Callable[[], object], repeats: int = 3) -> float:

@@ -44,6 +44,18 @@ class CodedElasticPolicy:
     def mark_recovered(self, worker: int) -> None:
         self.healthy[worker] = True
 
+    def observe_mask(self, mask) -> None:
+        """Adopt a health monitor's 0/1 survivor mask as the healthy set.
+
+        Control-plane integration point: ``WorkerHealthMonitor.erasure_mask``
+        feeds here each step, so ``slack``/``must_respecialize`` track the
+        LIVE straggler picture instead of only explicit failure events.
+        """
+        m = np.asarray(mask)
+        if m.shape != (self.K,):
+            raise ValueError(f"mask shape {m.shape} != ({self.K},)")
+        self.healthy = (m != 0).copy()
+
     def mask(self) -> np.ndarray:
         return self.healthy.astype(np.float64)
 

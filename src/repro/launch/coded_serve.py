@@ -7,9 +7,17 @@ executable memo keeps per-request latency at the warm-call floor.  Single
 host by default; ``--backend mesh`` runs one worker per device (spawn with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 off-TPU).
 
+``--adaptive`` swaps the single fixed plan for the control plane
+(``repro.control``): a ``PlanLadder`` over the paper's bec <-> tradeoff <->
+polycode family, a ``WorkerHealthMonitor`` fed with (simulated) per-worker
+step times, and an ``ExpectedLatencyPolicy`` that switches rungs and emits
+the erasure mask — recompile-free after ``prewarm()``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.coded_serve --backend fused \
       --requests 12 --size 256 --fail-rate 0.3
+  PYTHONPATH=src python -m repro.launch.coded_serve --adaptive \
+      --requests 16 --size 64 --fail-rate 0.25
 """
 from __future__ import annotations
 
@@ -21,21 +29,37 @@ import numpy as np
 import jax
 
 
+def _oracle(A, B) -> np.ndarray:
+    """Uncoded C = A^T B, batched or not (exact for integer inputs)."""
+    from repro.core import uncoded_matmul
+
+    return np.asarray(uncoded_matmul(A, B))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="fused",
                     choices=["reference", "staged", "fused", "mesh"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="serve through the control plane (PlanLadder + "
+                         "monitor + expected-latency policy)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--size", type=int, default=256,
                     help="contraction dim v (r = t = v/2)")
     ap.add_argument("--batch", type=int, default=0,
                     help="leading batch dim per request (0 = unbatched)")
     ap.add_argument("--fail-rate", type=float, default=0.25,
-                    help="per-request probability a worker is erased")
+                    help="per-request probability a worker is erased "
+                         "(adaptive: fraction of persistently slow workers)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.adaptive:
+        return run_adaptive(args)
+    return run_static(args)
 
-    from repro.core import make_plan, uncoded_matmul
+
+def run_static(args):
+    from repro.core import make_plan
     from repro.core.numerics import enable_x64
     from repro.runtime import CodedMatmul
 
@@ -77,9 +101,7 @@ def main(argv=None):
             jax.block_until_ready(C)
             ms = (time.perf_counter() - t0) * 1e3
             lat.append(ms)
-            exact = bool(np.array_equal(
-                np.asarray(C),
-                np.asarray(uncoded_matmul(A, B))) if not args.batch else True)
+            exact = bool(np.array_equal(np.asarray(C), _oracle(A, B)))
             print(f"req {i:02d}: erased={str(erased) if erased else '[]':<8} "
                   f"{ms:8.1f} ms  {'exact' if exact else 'CHECK FAILED'}")
         info = cm.cache_info()
@@ -88,6 +110,69 @@ def main(argv=None):
               f"{info['panel_builds']} decode panels, "
               f"{cm.executable_cache_size()} jit specialisations")
         return lat
+
+
+def run_adaptive(args):
+    from repro.control import AdaptiveServer, PlanLadder
+    from repro.core import conservative_L
+    from repro.core.numerics import enable_x64
+    from repro.core.simulator import LatencyModel
+
+    with enable_x64():
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(args.seed)
+        p, m, n, K = 4, 2, 1, 12
+        v = max(args.size - args.size % p, p)
+        r, t = (v // 2) - (v // 2) % m, (v // 2) - (v // 2) % n
+        backend = args.backend
+        if backend == "mesh":
+            # ladder facades are single-host for now (ROADMAP: real-mesh
+            # telemetry); say so instead of silently reporting host numbers
+            print("--adaptive does not drive the mesh backend yet; "
+                  "falling back to the reference executor")
+            backend = "reference"
+        ladder = PlanLadder(p, m, n, K=K, L=conservative_L(v, 4, 4),
+                            backend=backend)
+        info = ladder.prewarm((v, r), (v, t))
+        builds_at_prewarm = info["builds"]
+        print(f"adaptive ladder rungs={ladder.rungs} "
+              f"taus={[ladder.tau(x) for x in ladder.rungs]} K={K} "
+              f"v={v} r={r} t={t}; prewarm: {builds_at_prewarm} executables, "
+              f"overheads "
+              f"{ {k: round(1e3 * s, 2) for k, s in info['overhead_s'].items()} } ms")
+
+        # persistent straggler set (resampled every 6 requests), 2x slowdown
+        n_slow = int(round(args.fail_rate * K))
+        state = {"slow": rng.choice(K, size=n_slow, replace=False)}
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0, jitter=0.02)
+
+        def feed(step, feed_rng):
+            if step and step % 6 == 0:
+                state["slow"] = feed_rng.choice(K, size=n_slow, replace=False)
+            return model.sample(K, state["slow"], feed_rng)
+
+        def make_request(i):
+            A = jnp.asarray(rng.integers(-4, 5, size=(v, r)), jnp.float64)
+            B = jnp.asarray(rng.integers(-4, 5, size=(v, t)), jnp.float64)
+            return A, B
+
+        server = AdaptiveServer(ladder, feed=feed, seed=args.seed,
+                                check_exact=True)
+        for rep in server.run(args.requests, make_request):
+            flag = " SWITCH" if rep.switched else ""
+            print(f"req {rep.step:02d}: rung={rep.rung:<15} "
+                  f"erased={str(list(rep.erased)):<12} "
+                  f"sim {rep.sim_latency_s:6.3f} s  wall {rep.wall_ms:7.1f} ms"
+                  f"  slack={rep.slack}  "
+                  f"{'exact' if rep.exact else 'CHECK FAILED'}{flag}")
+        info = ladder.cache_info()
+        assert info["builds"] == builds_at_prewarm, (
+            f"recompile after prewarm: {info}")
+        print(f"{info['builds']} executables (unchanged since prewarm), "
+              f"{info['hits']} cache hits, {info['panel_builds']} decode "
+              f"panels, {info['switches']} rung switches")
+        return server.reports
 
 
 if __name__ == "__main__":

@@ -16,10 +16,12 @@ from repro.runtime.executors import (
     StagedKernelExecutor,
     resolve_executor,
 )
-from repro.runtime.facade import CodedMatmul
+from repro.runtime.facade import CacheGroup, CodedMatmul, plan_token
 
 __all__ = [
     "CodedMatmul",
+    "CacheGroup",
+    "plan_token",
     "ErasurePattern",
     "Executor",
     "LocalExecutor",

@@ -24,11 +24,66 @@ from typing import Any, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.api import CodedMatmulPlan
 from repro.runtime.erasure import ErasurePattern
 from repro.runtime.executors import Executor, resolve_executor
 
-__all__ = ["CodedMatmul"]
+__all__ = ["CodedMatmul", "CacheGroup", "plan_token"]
+
+
+def plan_token(plan: CodedMatmulPlan):
+    """Hashable identity of a plan's static configuration.
+
+    Folds in everything a compiled executable or decode panel depends on:
+    the scheme (frozen geometry dataclass), worker count, digit base, and
+    evaluation points.  Equal-valued plans share a token even when they are
+    distinct objects.
+    """
+    return (plan.scheme, plan.K, plan.s,
+            tuple(np.asarray(plan.z_points).ravel().tolist()))
+
+
+class CacheGroup:
+    """Cross-facade shared caches for a FAMILY of plans.
+
+    ``CodedMatmul.with_backend`` already shares caches between sibling
+    facades of ONE plan; a ``CacheGroup`` extends that to many plans (the
+    control plane's ``PlanLadder`` holds one per ladder).  Executable keys
+    fold in each facade's plan token, so distinct rungs never alias a
+    compiled program, while the build/hit counters span the whole group —
+    ``stats["builds"]`` staying flat across rung switches is the proof that
+    switching is recompile-free.  Decode-panel caches remain per-plan
+    (panels depend on the scheme and evaluation points) but live here so
+    every facade of the same plan shares one.
+    """
+
+    def __init__(self):
+        self.executables: dict = {}
+        self.stats = {"builds": 0, "hits": 0}
+        self._panel_caches: dict = {}
+
+    def panel_cache_for(self, plan: CodedMatmulPlan, ridge: float = 0.0):
+        key = (plan_token(plan), ridge)
+        pc = self._panel_caches.get(key)
+        if pc is None:
+            pc = plan.make_panel_cache(ridge)
+            self._panel_caches[key] = pc
+        return pc
+
+    @property
+    def panel_builds(self) -> int:
+        return sum(pc.builds for pc in self._panel_caches.values())
+
+    def cache_info(self) -> dict:
+        return {
+            "builds": self.stats["builds"],
+            "hits": self.stats["hits"],
+            "entries": len(self.executables),
+            "panel_builds": self.panel_builds,
+            "plans": len(self._panel_caches),
+        }
 
 
 class CodedMatmul:
@@ -47,17 +102,27 @@ class CodedMatmul:
     def __init__(self, plan: CodedMatmulPlan, backend="fused", *,
                  dtype=jnp.float64, mesh=None, axis: str = "model",
                  use_kernels: bool = True, fused: bool = True,
-                 panel_ridge: float = 0.0, _shared=None):
+                 panel_ridge: float = 0.0, cache_group: "CacheGroup" = None,
+                 _shared=None):
         self.plan = plan
         self.dtype = jnp.dtype(dtype)
         self._mesh = mesh
         self._axis = axis
         self._use_kernels = use_kernels
         self._fused = fused
+        self._plan_token = plan_token(plan)
         self._executor: Executor = resolve_executor(
             backend, mesh=mesh, axis=axis, use_kernels=use_kernels,
             fused=fused)
-        if _shared is not None:
+        if cache_group is not None and _shared is not None:
+            raise ValueError("pass cache_group or _shared, not both")
+        if cache_group is not None:
+            # cross-facade sharing hook: many plans, one executable memo
+            # (keys fold in the plan token) + one stats block.
+            self.panel_cache = cache_group.panel_cache_for(plan, panel_ridge)
+            self._executables = cache_group.executables
+            self._stats = cache_group.stats
+        elif _shared is not None:
             self.panel_cache, self._executables, self._stats = _shared
         else:
             self.panel_cache = plan.make_panel_cache(panel_ridge)
@@ -126,11 +191,12 @@ class CodedMatmul:
 
     # -- executable construction -------------------------------------------
     def _get_executable(self, A, B, kind: str):
-        # the token folds in executor CONFIG (mesh/axis/kernel flags), so
-        # with_backend siblings that share a backend name but differ in
-        # config never alias each other's compiled executables.
-        key = (self._executor.cache_token(), A.shape, B.shape,
-               str(self.dtype), kind)
+        # the token folds in executor CONFIG (mesh/axis/kernel flags) and
+        # the PLAN identity, so with_backend siblings that share a backend
+        # name but differ in config — and CacheGroup members on different
+        # plans — never alias each other's compiled executables.
+        key = (self._plan_token, self._executor.cache_token(), A.shape,
+               B.shape, str(self.dtype), kind)
         fn = self._executables.get(key)
         if fn is not None:
             self._stats["hits"] += 1

@@ -1,0 +1,315 @@
+"""Adaptive straggler control plane: monitor, policy, ladder, driver."""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.control import (  # noqa: E402
+    AdaptiveServer,
+    ExpectedLatencyPolicy,
+    PlanLadder,
+    WorkerHealthMonitor,
+)
+from repro.core.simulator import LatencyModel  # noqa: E402
+from repro.runtime import CacheGroup, CodedMatmul, plan_token  # noqa: E402
+from repro.core import make_plan  # noqa: E402
+
+K = 12
+GRID = (4, 2, 1)  # p, m, n -> rungs bec(tau=2), tradeoff p'=2 (5), polycode(11)
+L_ALL_FEASIBLE = 257
+L_BEC_INFEASIBLE = 1 << 14
+SHAPES = ((16, 8), (16, 4))  # (v, r), (v, t)
+
+
+def _ladder(L=L_ALL_FEASIBLE, **kw):
+    return PlanLadder(*GRID, K=K, L=L, backend="reference", **kw)
+
+
+def _steady_times(slow=(), base=1.0, slowdown=2.0):
+    t = np.full(K, base)
+    t[list(slow)] *= slowdown
+    return t
+
+
+class TestMonitor:
+    def test_ewma_tracks_means(self):
+        mon = WorkerHealthMonitor(K, alpha=0.5)
+        for _ in range(30):
+            mon.record_step(_steady_times(slow=[3]))
+        np.testing.assert_allclose(mon.mean, _steady_times(slow=[3]))
+        assert mon.std.max() < 1e-6
+
+    def test_scores_rise_and_decay(self):
+        mon = WorkerHealthMonitor(K, score_decay=0.5)
+        for _ in range(4):
+            mon.record_step(_steady_times(slow=[7]))
+        assert mon.straggler_scores()[7] > 0.9
+        assert list(mon.stragglers()) == [7]
+        for _ in range(4):
+            mon.record_step(_steady_times())  # worker 7 recovers
+        assert mon.straggler_scores()[7] < 0.1
+        assert mon.stragglers().size == 0
+
+    def test_erasure_mask_respects_budget_and_history(self):
+        mon = WorkerHealthMonitor(K, min_history=2)
+        mon.record_step(_steady_times(slow=[0, 1, 2]))
+        # one step < min_history: cold monitor never erases
+        np.testing.assert_array_equal(mon.erasure_mask(K), np.ones(K))
+        for _ in range(3):
+            mon.record_step(_steady_times(slow=[0, 1, 2]))
+        mask = mon.erasure_mask(budget=2)
+        assert mask.sum() == K - 2  # clamped at the budget
+        assert set(np.flatnonzero(mask == 0)) <= {0, 1, 2}
+        full = mon.erasure_mask(budget=6)
+        assert set(np.flatnonzero(full == 0)) == {0, 1, 2}
+
+    def test_majority_stragglers_still_flagged(self):
+        """Quartile-relative flagging survives >K/2 simultaneous stragglers."""
+        mon = WorkerHealthMonitor(K)
+        slow = list(range(7))
+        for _ in range(3):
+            mon.record_step(_steady_times(slow=slow))
+        assert set(mon.stragglers()) == set(slow)
+
+    def test_fitted_model_per_worker(self):
+        mon = WorkerHealthMonitor(K)
+        for _ in range(10):
+            mon.record_step(_steady_times(slow=[4], slowdown=3.0))
+        model = mon.fitted_model()
+        base = model.base_vector(K)
+        assert base[4] == pytest.approx(3.0, rel=1e-3)
+        assert base[0] == pytest.approx(1.0, rel=1e-3)
+        # fitted means already include slowness: no extra slowdown factor
+        assert model.straggler_slowdown == 1.0
+        t = model.sample(K, (), np.random.default_rng(0))
+        assert t.shape == (K,)
+
+    def test_input_validation(self):
+        mon = WorkerHealthMonitor(K)
+        with pytest.raises(ValueError):
+            mon.record_step(np.ones(K - 1))
+        with pytest.raises(ValueError):
+            mon.record_step(np.full(K, np.nan))
+        with pytest.raises(ValueError):
+            mon.erasure_mask(budget=-1)
+        with pytest.raises(ValueError):
+            WorkerHealthMonitor(K, alpha=0.0)
+
+
+class TestLadder:
+    def test_rungs_ascend_in_tau(self):
+        lad = _ladder()
+        assert lad.rungs == ("bec", "tradeoff(p'=2)", "polycode")
+        taus = [lad.tau(r) for r in lad.rungs]
+        assert taus == sorted(taus) == [2, 5, 11]
+        assert [lad.budget(r) for r in lad.rungs] == [10, 7, 1]
+
+    def test_rungs_beyond_K_dropped(self):
+        lad = PlanLadder(4, 2, 1, K=6, L=L_ALL_FEASIBLE, backend="reference")
+        assert lad.rungs == ("bec", "tradeoff(p'=2)")  # polycode tau=11 > 6
+
+    def test_initial_rung_respects_entry_bound(self):
+        assert _ladder().active == "bec"
+        lad = _ladder(L=L_BEC_INFEASIBLE)
+        assert not lad.feasible("bec")
+        assert lad.active == "tradeoff(p'=2)"
+
+    def test_every_rung_exact(self):
+        lad = _ladder()
+        rng = np.random.default_rng(0)
+        A = jnp.asarray(rng.integers(-4, 5, size=SHAPES[0]), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        oracle = np.asarray(A).T @ np.asarray(B)
+        for rung in lad.rungs:
+            lad.switch(rung)
+            erased = list(range(lad.budget(rung)))
+            np.testing.assert_array_equal(
+                np.asarray(lad(A, B, erased=erased)), oracle)
+
+    def test_prewarm_makes_switch_recompile_free(self):
+        lad = _ladder()
+        info = lad.prewarm(*SHAPES)
+        assert info["builds"] == len(lad.rungs)
+        assert set(info["overhead_s"]) == set(lad.rungs)
+        builds = lad.cache_info()["builds"]
+        A = jnp.zeros(SHAPES[0], jnp.float64)
+        B = jnp.zeros(SHAPES[1], jnp.float64)
+        for step in range(6):  # rotate rungs AND erasure patterns
+            rung = lad.rungs[step % len(lad.rungs)]
+            lad.switch(rung)
+            lad(A, B, erased=[step % (lad.budget(rung) + 1)])
+        info = lad.cache_info()
+        assert info["builds"] == builds, "rung switch recompiled"
+        assert info["switches"] >= 5
+
+    def test_unknown_rung_raises(self):
+        with pytest.raises(KeyError):
+            _ladder().switch("raptor")
+
+
+class TestCacheGroup:
+    def test_plans_do_not_alias_executables(self):
+        """Same backend/shape/dtype/kind, different plans: the group memo
+        must key them apart (and both stay exact)."""
+        group = CacheGroup()
+        p1 = make_plan("bec", 4, 2, 1, K=K, L=L_ALL_FEASIBLE,
+                       points="chebyshev")
+        p2 = make_plan("polycode", 4, 2, 1, K=K, L=L_ALL_FEASIBLE,
+                       points="chebyshev")
+        cm1 = CodedMatmul(p1, "reference", cache_group=group)
+        cm2 = CodedMatmul(p2, "reference", cache_group=group)
+        rng = np.random.default_rng(1)
+        A = jnp.asarray(rng.integers(-4, 5, size=SHAPES[0]), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        oracle = np.asarray(A).T @ np.asarray(B)
+        np.testing.assert_array_equal(np.asarray(cm1(A, B, erased=[0])), oracle)
+        np.testing.assert_array_equal(np.asarray(cm2(A, B, erased=[0])), oracle)
+        assert group.stats["builds"] == 2  # one executable per plan
+        assert plan_token(p1) != plan_token(p2)
+
+    def test_equal_plans_share_everything(self):
+        group = CacheGroup()
+        mk = lambda: make_plan("bec", 2, 2, 1, K=4, L=257)  # noqa: E731
+        cm1 = CodedMatmul(mk(), "reference", cache_group=group)
+        cm2 = CodedMatmul(mk(), "reference", cache_group=group)
+        assert cm1.panel_cache is cm2.panel_cache
+        A = jnp.ones((8, 4), jnp.float64)
+        B = jnp.ones((8, 4), jnp.float64)
+        cm1(A, B, erased=[0])
+        cm2(A, B, erased=[0])
+        assert group.stats["builds"] == 1 and group.stats["hits"] == 1
+
+    def test_group_and_shared_are_exclusive(self):
+        plan = make_plan("bec", 2, 2, 1, K=4, L=257)
+        cm = CodedMatmul(plan, "reference")
+        with pytest.raises(ValueError):
+            CodedMatmul(plan, "reference", cache_group=CacheGroup(),
+                        _shared=(cm.panel_cache, {}, {"builds": 0, "hits": 0}))
+
+
+class TestPolicy:
+    def _fitted(self, slow=(), slowdown=2.0):
+        mon = WorkerHealthMonitor(K)
+        for _ in range(5):
+            mon.record_step(_steady_times(slow=slow, slowdown=slowdown))
+        return mon.fitted_model(), mon.straggler_scores()
+
+    def test_zero_stragglers_prefers_lowest_tau(self):
+        lad = _ladder()
+        pol = ExpectedLatencyPolicy(lad,
+                                    overhead_s={r: 0.0 for r in lad.rungs})
+        model, scores = self._fitted()
+        assert pol.select(model, scores).rung == "bec"
+
+    def test_expected_latency_reflects_masking_budget(self):
+        lad = _ladder()
+        pol = ExpectedLatencyPolicy(lad,
+                                    overhead_s={r: 0.0 for r in lad.rungs})
+        model, scores = self._fitted(slow=[0, 1, 2])
+        est = {e.rung: e for e in pol.rank(model, scores)}
+        # bec/tradeoff budgets cover all 3 stragglers -> completion ~ base;
+        # polycode (budget 1) must wait for 2 unmasked stragglers
+        assert est["bec"].expected_latency_s == pytest.approx(1.0)
+        assert est["tradeoff(p'=2)"].expected_latency_s == pytest.approx(1.0)
+        assert est["polycode"].expected_latency_s == pytest.approx(2.0)
+        assert est["polycode"].unmasked_stragglers == 2
+        assert pol.select(model, scores).rung == "bec"
+
+    def test_entry_bound_gates_bec(self):
+        lad = _ladder(L=L_BEC_INFEASIBLE)
+        pol = ExpectedLatencyPolicy(lad,
+                                    overhead_s={r: 0.0 for r in lad.rungs})
+        model, scores = self._fitted(slow=[3])
+        est = pol.select(model, scores)
+        assert est.rung == "tradeoff(p'=2)" and est.feasible
+        assert not pol.feasible("bec")
+
+    def test_overhead_breaks_ties(self):
+        lad = _ladder()
+        pol = ExpectedLatencyPolicy(
+            lad, overhead_s={"bec": 0.5, "tradeoff(p'=2)": 0.0,
+                             "polycode": 0.0})
+        model, scores = self._fitted()
+        assert pol.select(model, scores).rung == "tradeoff(p'=2)"
+
+    def test_no_feasible_rung_raises(self):
+        lad = _ladder(L=1 << 40, include=["bec"])  # digit stack >> f64
+        pol = ExpectedLatencyPolicy(lad)
+        model, scores = self._fitted()
+        with pytest.raises(ValueError):
+            pol.select(model, scores)
+
+
+class TestAdaptiveServer:
+    def _request(self, seed=0):
+        rng = np.random.default_rng(seed)
+        A = jnp.asarray(rng.integers(-4, 5, size=SHAPES[0]), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        return A, B
+
+    def test_learns_and_masks_persistent_stragglers(self):
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        builds = lad.cache_info()["builds"]
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0)
+        feed = lambda step, rng: model.sample(K, [2, 9], rng)  # noqa: E731
+        srv = AdaptiveServer(lad, feed=feed, check_exact=True)
+        A, B = self._request()
+        reports = srv.run(8, lambda i: (A, B))
+        assert all(r.exact for r in reports)
+        # after min_history warmup the mask drops exactly the slow pair
+        for rep in reports[3:]:
+            assert rep.erased == (2, 9)
+            assert rep.sim_latency_s == pytest.approx(1.0)
+        assert reports[0].sim_latency_s == pytest.approx(2.0)  # cold monitor
+        assert lad.cache_info()["builds"] == builds
+
+    def test_respecialize_handoff_when_budget_exhausted(self):
+        lad = _ladder(include=["polycode"])  # budget 1
+        lad.prewarm(*SHAPES)
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0)
+        feed = lambda step, rng: model.sample(K, [0, 1, 2], rng)  # noqa: E731
+        srv = AdaptiveServer(lad, feed=feed, check_exact=True)
+        A, B = self._request(1)
+        reports = srv.run(6, lambda i: (A, B))
+        late = reports[-1]
+        assert late.respecialize
+        assert late.shrink_target == (2, 4)  # plan_shrink(12 - 3)
+        assert late.slack == 0 and srv.elastic.must_respecialize
+        assert late.exact  # still serving correctly while flagging handoff
+
+    def test_switches_rungs_when_entry_bound_changes_ranking(self):
+        lad = _ladder(L=L_BEC_INFEASIBLE)
+        lad.prewarm(*SHAPES)
+        builds = lad.cache_info()["builds"]
+        # zero measured overheads: latency ties resolve by tau, so the
+        # selection is deterministic (prewarm timings carry wall noise)
+        pol = ExpectedLatencyPolicy(lad,
+                                    overhead_s={r: 0.0 for r in lad.rungs})
+        srv = AdaptiveServer(lad, policy=pol,
+                             feed=lambda s, r: _steady_times(slow=[5]),
+                             check_exact=True)
+        A, B = self._request(2)
+        reports = srv.run(6, lambda i: (A, B))
+        assert {r.rung for r in reports} == {"tradeoff(p'=2)"}
+        assert all(r.exact for r in reports)
+        assert lad.cache_info()["builds"] == builds
+
+    def test_elastic_policy_consumes_monitor_mask(self):
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        srv = AdaptiveServer(lad, feed=lambda s, r: _steady_times(slow=[4]))
+        A, B = self._request(3)
+        srv.run(4, lambda i: (A, B))
+        assert not srv.elastic.healthy[4]
+        assert srv.elastic.slack == K - 1 - lad.tau(lad.active)
+
+    def test_feed_shape_validated(self):
+        lad = _ladder()
+        srv = AdaptiveServer(lad, feed=lambda s, r: np.ones(3))
+        with pytest.raises(ValueError):
+            srv.step(*self._request())

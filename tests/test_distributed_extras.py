@@ -64,6 +64,36 @@ class TestElastic:
         pol.mark_recovered(0)
         assert not pol.must_respecialize
 
+    def test_mark_transitions_idempotent(self):
+        pol = CodedElasticPolicy(K=6, tau=3)
+        pol.mark_failed(2)
+        pol.mark_failed(2)  # double-fail is not double-counted
+        assert pol.slack == 2
+        pol.mark_recovered(2)
+        pol.mark_recovered(2)
+        assert pol.slack == 3
+        np.testing.assert_array_equal(pol.mask(), np.ones(6))
+        assert pol.mask().dtype == np.float64
+
+    def test_must_respecialize_boundary_is_exact(self):
+        """Flips precisely when healthy == tau, not one failure later."""
+        pol = CodedElasticPolicy(K=5, tau=3)
+        pol.mark_failed(0)
+        assert pol.slack == 1 and not pol.must_respecialize
+        pol.mark_failed(1)
+        assert pol.slack == 0 and pol.must_respecialize
+
+    def test_observe_mask_adopts_monitor_view(self):
+        pol = CodedElasticPolicy(K=4, tau=2)
+        pol.observe_mask([1.0, 0.0, 1.0, 0.0])
+        np.testing.assert_array_equal(pol.healthy,
+                                      [True, False, True, False])
+        assert pol.slack == 0 and pol.must_respecialize
+        pol.observe_mask(np.ones(4))  # next step's mask fully replaces it
+        assert pol.slack == 2
+        with pytest.raises(ValueError):
+            pol.observe_mask([1.0, 0.0])
+
     def test_plan_shrink_prefers_model_preserving(self):
         assert plan_shrink(256) == (16, 16)
         assert plan_shrink(255) == (8, 16)

@@ -1,5 +1,6 @@
 """Evaluation points, Vandermonde conditioning, and the straggler simulator."""
 import numpy as np
+import pytest
 
 import jax
 
@@ -81,3 +82,80 @@ class TestSimulator:
         from repro.core import WorkerTimes
         wt = WorkerTimes(np.array([5.0, 1.0, 3.0, 2.0]))
         assert wt.survivors_at_threshold(2).tolist() == [1, 3]
+
+
+class TestSimulatorProperties:
+    """Order-statistic invariants of the straggler model (control-plane
+    contract: the expected-latency policy builds on exactly these)."""
+
+    def _times(self, K=10, seed=0):
+        from repro.core import WorkerTimes
+        return WorkerTimes(np.random.default_rng(seed).exponential(1.0, K))
+
+    def test_completion_monotone_in_tau(self):
+        for seed in range(5):
+            wt = self._times(seed=seed)
+            lats = [wt.completion_for_threshold(tau) for tau in range(1, 11)]
+            assert all(a <= b for a, b in zip(lats, lats[1:]))
+
+    def test_survivors_consistent_with_finish_order(self):
+        """The tau survivors are the tau smallest finish times, and the
+        slowest of them IS the completion latency."""
+        for seed in range(5):
+            wt = self._times(seed=seed)
+            for tau in (1, 4, 10):
+                surv = wt.survivors_at_threshold(tau)
+                assert len(set(surv.tolist())) == tau
+                cutoff = wt.completion_for_threshold(tau)
+                assert wt.finish[surv].max() == cutoff
+                others = np.setdiff1d(np.arange(10), surv)
+                if others.size:
+                    assert wt.finish[others].min() >= cutoff
+
+    def test_jitter_path_deterministic_under_seed(self):
+        model = LatencyModel(base=1.0, straggler_slowdown=2.0, jitter=0.3)
+        a = simulate_completion(10, 4, 3, model, trials=40, seed=7)
+        b = simulate_completion(10, 4, 3, model, trials=40, seed=7)
+        np.testing.assert_array_equal(a, b)
+        c = simulate_completion(10, 4, 3, model, trials=40, seed=8)
+        assert not np.array_equal(a, c)
+
+    def test_per_worker_base_and_validation(self):
+        base = np.linspace(1.0, 2.0, 10)
+        model = LatencyModel(base=base, straggler_slowdown=3.0)
+        t = model.sample(10, [0], np.random.default_rng(0))
+        np.testing.assert_allclose(t[1:], base[1:])
+        assert t[0] == 3.0
+        with pytest.raises(ValueError):
+            model.sample(8, [], np.random.default_rng(0))
+
+    def test_injectable_feed_overrides_model(self):
+        fed = np.arange(1.0, 11.0)
+        lat = simulate_completion(10, 4, 0, None, decode_time=0.5, trials=3,
+                                  feed=lambda trial, rng: fed)
+        np.testing.assert_allclose(lat, 4.5)  # 4th smallest + decode
+        with pytest.raises(ValueError):
+            simulate_completion(10, 4, 0, None)  # neither model nor feed
+
+    def test_masked_completion_bridges_sync_and_async(self):
+        """Erasing the K - tau slowest makes the synchronous step complete
+        exactly at the tau-th order statistic (the control-plane identity)."""
+        from repro.core import WorkerTimes
+        wt = self._times(seed=3)
+        tau = 4
+        mask = np.ones(10)
+        mask[np.argsort(wt.finish)[tau:]] = 0.0
+        assert wt.completion_with_mask(mask) == wt.completion_for_threshold(tau)
+        # a sloppier mask can only wait longer
+        assert wt.completion_with_mask(np.ones(10)) >= \
+            wt.completion_for_threshold(tau)
+        with pytest.raises(ValueError):
+            wt.completion_with_mask(np.zeros(10))
+
+    def test_completion_cdf_and_quantile(self):
+        from repro.core.simulator import completion_cdf, completion_quantile
+        lat = np.array([1.0, 2.0, 3.0, 4.0])
+        np.testing.assert_allclose(
+            completion_cdf(lat, np.array([0.5, 1.0, 2.5, 4.0])),
+            [0.0, 0.25, 0.5, 1.0])
+        assert completion_quantile(lat, 0.5) == 2.5
