@@ -16,10 +16,25 @@ traces.  Every adaptive step also executes a real coded matmul through the
 the ladder's shared ``CacheGroup`` counters prove rung switches after
 ``prewarm()`` compile nothing.
 
+The p50-vs-p99 POLICY sweep plays the same game at the tail: under a
+heavy-tailed straggler mix (2x slowdown plus a fat exponential tail on the
+slow machines) the MEAN ranking and the QUANTILE ranking genuinely
+disagree — the per-rung step costs (synthetic, in units of one worker
+step: the depth-p digit stack makes the low-tau rungs the expensive ones,
+exactly the paper's L <-> tau price) outweigh the mean cost of leaving a
+straggler unmasked, but not its p99 cost.  The mean policy therefore
+serves the cheap narrow-budget rung and eats the tail; the
+``QuantileLatencyPolicy`` pays the digit tax for tail protection — worse
+p50, strictly better p99.  Both sides serve vmap-BATCHED requests of
+varying size through prewarmed leading-dim buckets, and the zero-recompile
+contract is asserted across every batched rung switch.
+
 Rows land in BENCH_control.json.  ``--check`` asserts the acceptance
 criteria (CI smoke): adaptive matches the best static rung at zero
 stragglers, beats every static rung in at least one nonzero regime, zero
-recompiles after prewarm, and the budget-exhaustion scenario hands off to
+recompiles after prewarm (batched sweeps included), the quantile policy
+strictly beats the mean policy on p99 under the heavy-tailed mix while
+matching it at S=0, and the budget-exhaustion scenario hands off to
 ``CodedElasticPolicy``/``plan_shrink``.
 """
 from __future__ import annotations
@@ -40,6 +55,19 @@ JITTER = 0.02
 L_SMALL = V * 4 * 4 + 1     # conservative_L(V, 4, 4): every rung feasible
 L_LARGE = 1 << 14           # bec's depth-3 digit stack overflows f64 here
 STRAGGLER_COUNTS = (0, 1, 3, 5)
+
+# -- p50-vs-p99 policy sweep ------------------------------------------------
+Q_STEPS = 48
+Q_WARMUP = 6                # cold-monitor steps excluded from the stats
+Q_SLO = 0.99
+HEAVY_JITTER = 1.5          # stragglers: 2x slowdown + Exp(1.5 x base) tail
+HEALTHY_JITTER = 0.05
+# synthetic per-rung step cost (units of BASE_S): the depth-p digit stack
+# prices the low-tau rungs, the paper's L <-> tau tradeoff as overhead
+Q_OVERHEAD = {"bec": 10.0, "tradeoff(p'=2)": 9.0, "polycode": 0.5}
+Q_STRAGGLERS = (0, 3, 5)
+Q_BATCHES = (5, 3, 8, 2)    # per-request batch sizes, cycled
+Q_BUCKETS = (4, 8)          # prewarmed leading-dim buckets (round-up pad)
 
 
 def _traces(S: int, seed: int) -> np.ndarray:
@@ -104,6 +132,81 @@ def _run_regime(L: int, S: int, seed: int) -> dict:
     }
 
 
+def _heavy_traces(S: int, steps: int, seed: int) -> np.ndarray:
+    """(steps, K) finish times under the heavy-tailed straggler mix: a FIXED
+    set of S machines at 2x slowdown with an Exp(HEAVY_JITTER x base) tail,
+    everyone else near-deterministic."""
+    from repro.core.simulator import LatencyModel
+
+    rng = np.random.default_rng(seed)
+    slow = rng.choice(K, size=S, replace=False)
+    jitter = np.full(K, HEALTHY_JITTER)
+    jitter[slow] = HEAVY_JITTER
+    model = LatencyModel(base=BASE_S, straggler_slowdown=SLOWDOWN,
+                         jitter=jitter)
+    return np.stack([model.sample(K, slow, rng) for _ in range(steps)])
+
+
+def _run_policy(policy_name: str, traces: np.ndarray, seed: int) -> dict:
+    """One policy serving batched requests over ``traces``; realized step
+    latency = masked completion + the rung's synthetic overhead."""
+    import jax.numpy as jnp
+
+    from repro.control import (
+        AdaptiveServer,
+        ExpectedLatencyPolicy,
+        PlanLadder,
+        QuantileLatencyPolicy,
+    )
+
+    ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
+    prewarm = ladder.prewarm((V, R), (V, T), batch_sizes=Q_BUCKETS)
+    builds_prewarm = prewarm["builds"]
+    if policy_name == "mean":
+        policy = ExpectedLatencyPolicy(ladder, overhead_s=Q_OVERHEAD)
+    else:
+        policy = QuantileLatencyPolicy(ladder, q=Q_SLO, overhead_s=Q_OVERHEAD)
+    server = AdaptiveServer(ladder, policy=policy,
+                            feed=lambda step, rng: traces[step],
+                            seed=seed, check_exact=True)
+
+    rng = np.random.default_rng(seed + 1)
+    A_pool = jnp.asarray(rng.integers(-4, 5, size=(max(Q_BATCHES), V, R)),
+                         jnp.float64)
+    B = jnp.asarray(rng.integers(-4, 5, size=(V, T)), jnp.float64)
+    reports = server.run(Q_STEPS,
+                         lambda i: (A_pool[: Q_BATCHES[i % len(Q_BATCHES)]], B))
+
+    realized = np.array([rep.sim_latency_s + Q_OVERHEAD[rep.rung]
+                         for rep in reports])[Q_WARMUP:]
+    rung_counts: dict = {}
+    for rep in reports[Q_WARMUP:]:
+        rung_counts[rep.rung] = rung_counts.get(rep.rung, 0) + 1
+    info = ladder.cache_info()
+    return {
+        "policy": policy_name,
+        "p50_s": float(np.quantile(realized, 0.5)),
+        "p99_s": float(np.quantile(realized, Q_SLO)),
+        "rungs": rung_counts,
+        "switches": info["switches"],
+        "builds_prewarm": builds_prewarm,
+        "builds_final": info["builds"],
+        "all_exact": all(rep.exact for rep in reports),
+    }
+
+
+def _run_quantile_sweep() -> list:
+    """Mean vs quantile policy over identical heavy-tailed batched traces."""
+    rows = []
+    for S in Q_STRAGGLERS:
+        traces = _heavy_traces(S, Q_STEPS, seed=101 + S)
+        for policy_name in ("mean", "quantile"):
+            row = _run_policy(policy_name, traces, seed=101 + S)
+            row["stragglers"] = S
+            rows.append(row)
+    return rows
+
+
 def _run_exhausted(seed: int) -> dict:
     """Budget-exhaustion handoff: a polycode-only ladder (budget 1) facing 3
     persistent stragglers must flag a respecialisation (plan_shrink)."""
@@ -140,6 +243,7 @@ def run() -> dict:
         regimes = [_run_regime(L, S, seed=17 + S)
                    for L in (L_SMALL, L_LARGE)
                    for S in STRAGGLER_COUNTS]
+        quantile_sweep = _run_quantile_sweep()
         exhausted = _run_exhausted(seed=29)
     return {
         "config": {
@@ -147,8 +251,15 @@ def run() -> dict:
             "resample_every": RESAMPLE_EVERY, "base_s": BASE_S,
             "slowdown": SLOWDOWN, "jitter": JITTER,
             "L": {"small": L_SMALL, "large": L_LARGE},
+            "quantile_sweep": {
+                "steps": Q_STEPS, "warmup": Q_WARMUP, "slo_quantile": Q_SLO,
+                "heavy_jitter": HEAVY_JITTER, "healthy_jitter": HEALTHY_JITTER,
+                "overhead_s": Q_OVERHEAD, "batches": list(Q_BATCHES),
+                "buckets": list(Q_BUCKETS),
+            },
         },
         "regimes": regimes,
+        "quantile_sweep": quantile_sweep,
         "exhausted": exhausted,
     }
 
@@ -172,6 +283,21 @@ def check(result: dict) -> None:
     large = [row for row in result["regimes"] if row["L"] == L_LARGE]
     assert all("bec" not in row["adaptive_rungs"] for row in large), (
         "policy served bec past its entry-bound feasibility")
+    by_s: dict = {}
+    for row in result["quantile_sweep"]:
+        assert row["all_exact"], f"inexact batched decode: {row}"
+        assert row["builds_final"] == row["builds_prewarm"], (
+            f"recompile across batched rung switches: {row}")
+        by_s.setdefault(row["stragglers"], {})[row["policy"]] = row
+    for S, pair in by_s.items():
+        mean, quant = pair["mean"], pair["quantile"]
+        if S == 0:
+            assert abs(quant["p99_s"] - mean["p99_s"]) <= 0.05 * mean["p99_s"], (
+                f"policies diverge with no stragglers (S=0): {pair}")
+        else:
+            assert quant["p99_s"] < 0.95 * mean["p99_s"], (
+                f"quantile policy did not beat mean policy on p99 at "
+                f"S={S}: {pair}")
     ex = result["exhausted"]
     assert ex["respecializations"] > 0 and ex["shrink_target"], (
         f"no respecialisation handoff under exhausted budget: {ex}")
@@ -195,6 +321,11 @@ def main(argv=None, save: str = "BENCH_control.json"):
               f"static {static} vs adaptive {row['adaptive_s']:.3f} s "
               f"(rungs {row['adaptive_rungs']}, switches {row['switches']}, "
               f"builds {row['builds_prewarm']}->{row['builds_final']})")
+    for row in result["quantile_sweep"]:
+        print(f"S={row['stragglers']} policy={row['policy']:<8} "
+              f"p50 {row['p50_s']:6.2f} s  p99 {row['p99_s']:6.2f} s "
+              f"(rungs {row['rungs']}, builds "
+              f"{row['builds_prewarm']}->{row['builds_final']})")
     ex = result["exhausted"]
     print(f"exhausted-budget handoff: {ex['respecializations']} "
           f"respecialisations -> shrink {ex['shrink_target']}")

@@ -1,0 +1,56 @@
+"""Execute every fenced ``python`` block in the repo's markdown docs.
+
+CI runs this so README/docs snippets can never rot: each file's blocks run
+top-to-bottom in ONE shared namespace (so a later snippet can use objects
+an earlier one built, exactly as a reader would).  Shell blocks are not
+executed.  Keep snippets small — this is a smoke check, not a benchmark.
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DEFAULT_FILES = ("README.md", "docs/architecture.md", "docs/api.md")
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def extract_blocks(text: str) -> list:
+    """The contents of every ```python fenced block, in order."""
+    return [m.group(1) for m in FENCE.finditer(text)]
+
+
+def run_file(path: Path) -> int:
+    """Run one markdown file's python blocks; return the block count.
+
+    Raises:
+        SystemExit: with a pointer to the failing block on any exception.
+    """
+    blocks = extract_blocks(path.read_text())
+    namespace: dict = {"__name__": f"docsnippet:{path.name}"}
+    for i, block in enumerate(blocks, 1):
+        try:
+            exec(compile(block, f"{path}:block{i}", "exec"), namespace)
+        except Exception as e:  # noqa: BLE001 - report and fail the build
+            sys.stderr.write(f"FAIL {path} block {i}: {e!r}\n{block}\n")
+            raise SystemExit(1)
+    return len(blocks)
+
+
+def main(argv: list) -> None:
+    """Check the given markdown files (default: README + docs/)."""
+    root = Path(__file__).resolve().parents[1]
+    files = [Path(a) for a in argv] or [root / f for f in DEFAULT_FILES]
+    total = 0
+    for path in files:
+        n = run_file(path)
+        print(f"{path}: {n} python block(s) OK")
+        total += n
+    if total == 0:
+        raise SystemExit("no python blocks found — check the fence regex")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

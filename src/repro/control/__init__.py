@@ -5,28 +5,38 @@ the paper's L <-> tau ladder:
 
     WorkerHealthMonitor   EWMA latency/variance, straggler scores, erasure
                           mask + fitted LatencyModel          (monitor.py)
-    ExpectedLatencyPolicy tau-th order-statistic completion model ranking
-                          bec <-> tradeoff(p') <-> polycode subject to L
-                                                              (policy.py)
+    Policy protocol       tau-th order-statistic completion model ranking
+      ExpectedLatencyPolicy   by MEAN completion              (policy.py)
+      QuantileLatencyPolicy   by q-QUANTILE completion (tail SLOs)
+                          over bec <-> tradeoff(p') <-> polycode, gated by L
     PlanLadder            one CodedMatmul facade per rung over a shared
                           CacheGroup; prewarm() makes switch() recompile-
-                          free                                (ladder.py)
+                          free, incl. batched leading-dim buckets
+                                                              (ladder.py)
     AdaptiveServer        the serving loop wiring the three together, with
+                          an SLO-violation fallback switch and a
                           CodedElasticPolicy handoff when the erasure
                           budget is exhausted                 (driver.py)
 
-See DESIGN.md Sec. 7.
+See DESIGN.md Sec. 7-8 and docs/architecture.md.
 """
 from repro.control.driver import AdaptiveServer, StepReport
 from repro.control.ladder import PlanLadder
 from repro.control.monitor import WorkerHealthMonitor
-from repro.control.policy import ExpectedLatencyPolicy, RungEstimate
+from repro.control.policy import (
+    ExpectedLatencyPolicy,
+    Policy,
+    QuantileLatencyPolicy,
+    RungEstimate,
+)
 
 __all__ = [
     "AdaptiveServer",
     "StepReport",
     "PlanLadder",
     "WorkerHealthMonitor",
+    "Policy",
     "ExpectedLatencyPolicy",
+    "QuantileLatencyPolicy",
     "RungEstimate",
 ]

@@ -2,13 +2,19 @@
 
 Each step: record per-worker finish times (real, or drawn from an injected
 feed / ``LatencyModel`` for reproducible simulation) -> update the
-``WorkerHealthMonitor`` -> let the ``ExpectedLatencyPolicy`` re-rank the
-``PlanLadder`` and switch rungs -> emit the monitor's erasure mask (clamped
-to the active rung's budget) -> serve the coded matmul through the active
-facade with the mask as pure data.  ``CodedElasticPolicy`` consumes the
-same mask; when the flagged-straggler count exhausts every rung's budget
-the server records a respecialisation handoff (``plan_shrink`` target)
-instead of silently waiting on known-slow machines forever.
+``WorkerHealthMonitor`` -> let the policy re-rank the ``PlanLadder`` and
+switch rungs -> emit the monitor's erasure mask (clamped to the active
+rung's budget) -> serve the coded matmul through the active facade with the
+mask as pure data.  ``CodedElasticPolicy`` consumes the same mask; when the
+flagged-straggler count exhausts every rung's budget the server records a
+respecialisation handoff (``plan_shrink`` target) instead of silently
+waiting on known-slow machines forever.
+
+SLO enforcement rides on top of whichever primary policy is installed:
+with ``slo_quantile``/``slo_s`` set, every warm step also evaluates the
+ACTIVE rung's modelled q-quantile completion, and a predicted violation
+forces a switch to the tail-optimal rung immediately — off the re-rank
+cadence, and even when the mean ranking disagrees.
 """
 from __future__ import annotations
 
@@ -25,7 +31,11 @@ from repro.core.simulator import LatencyModel, TimeFeed, WorkerTimes
 from repro.distributed.elastic import CodedElasticPolicy, plan_shrink
 from repro.control.ladder import PlanLadder
 from repro.control.monitor import WorkerHealthMonitor
-from repro.control.policy import ExpectedLatencyPolicy
+from repro.control.policy import (
+    ExpectedLatencyPolicy,
+    Policy,
+    QuantileLatencyPolicy,
+)
 
 __all__ = ["StepReport", "AdaptiveServer"]
 
@@ -44,31 +54,68 @@ class StepReport:
     respecialize: bool             # erasure budget exhausted ladder-wide
     shrink_target: Optional[Tuple[int, int]]  # plan_shrink mesh on handoff
     exact: Optional[bool]          # vs uncoded oracle (None = not checked)
+    slo_violation: bool = False    # predicted q-quantile exceeded the SLO
+    predicted_tail_s: Optional[float] = None  # SERVED rung's modelled q-quantile
 
 
 class AdaptiveServer:
     """Monitor -> policy -> ladder, per request.
 
-    feed: injectable per-worker finish-time source; defaults to sampling
-        ``fallback_model`` with no stragglers (a healthy cluster).  Real
-        deployments pass measured per-worker step times instead.
-    reevaluate_every: policy cadence in steps (1 = every step).
-    check_exact: compare every decoded C against the uncoded oracle.
+    Args:
+        ladder: the prewarmed ``PlanLadder`` to serve through.
+        monitor: worker-health state; a fresh ``WorkerHealthMonitor`` of the
+            ladder's K by default.
+        policy: primary rung-selection ``Policy``.  Defaults to
+            ``ExpectedLatencyPolicy``, or ``QuantileLatencyPolicy`` when
+            ``slo_quantile`` is given and no policy is passed explicitly.
+        feed: injectable per-worker finish-time source; defaults to sampling
+            ``fallback_model`` with no stragglers (a healthy cluster).  Real
+            deployments pass measured per-worker step times instead.
+        fallback_model: the healthy-cluster model backing the default feed.
+        reevaluate_every: policy cadence in steps (1 = every step).
+        score_threshold: monitor score above which a worker counts as a
+            straggler.
+        seed: rng seed for the default feed.
+        check_exact: compare every decoded C against the uncoded oracle.
+        slo_quantile: tail quantile the SLO is stated at (e.g. 0.99); turns
+            on per-step tail prediction.
+        slo_s: the SLO bound in seconds.  When the active rung's predicted
+            ``slo_quantile``-completion exceeds it, the server immediately
+            switches to the tail-optimal feasible rung (bypassing the
+            cadence and the primary ranking).
+
+    Raises:
+        ValueError: if ``slo_s`` is given without ``slo_quantile``.
     """
 
     def __init__(self, ladder: PlanLadder, *,
                  monitor: Optional[WorkerHealthMonitor] = None,
-                 policy: Optional[ExpectedLatencyPolicy] = None,
+                 policy: Optional[Policy] = None,
                  feed: Optional[TimeFeed] = None,
                  fallback_model: Optional[LatencyModel] = None,
                  reevaluate_every: int = 1,
                  score_threshold: float = 0.5,
                  seed: int = 0,
-                 check_exact: bool = False):
+                 check_exact: bool = False,
+                 slo_quantile: Optional[float] = None,
+                 slo_s: Optional[float] = None):
+        if slo_s is not None and slo_quantile is None:
+            raise ValueError("slo_s needs slo_quantile (the quantile the "
+                             "SLO is stated at)")
         self.ladder = ladder
         self.monitor = monitor or WorkerHealthMonitor(ladder.K)
-        self.policy = policy or ExpectedLatencyPolicy(
-            ladder, score_threshold=score_threshold)
+        self.slo_policy: Optional[QuantileLatencyPolicy] = None
+        if slo_quantile is not None:
+            # inherit the primary policy's overhead override (if any) so the
+            # SLO fallback and the primary ranking price rungs identically.
+            self.slo_policy = QuantileLatencyPolicy(
+                ladder, q=slo_quantile, score_threshold=score_threshold,
+                overhead_s=getattr(policy, "overhead_s", None))
+        if policy is None:
+            policy = self.slo_policy or ExpectedLatencyPolicy(
+                ladder, score_threshold=score_threshold)
+        self.policy = policy
+        self.slo_s = slo_s
         self.elastic = CodedElasticPolicy(
             K=ladder.K, tau=ladder.tau(ladder.active))
         self._feed = feed
@@ -90,26 +137,66 @@ class AdaptiveServer:
             return t
         return self._fallback.sample(self.ladder.K, (), self.rng)
 
+    def _switch_to(self, rung: str) -> bool:
+        """Activate ``rung`` (carrying elastic state); True if it changed."""
+        if rung == self.ladder.active:
+            return False
+        self.ladder.switch(rung)
+        self.elastic = CodedElasticPolicy(
+            K=self.ladder.K, tau=self.ladder.tau(rung),
+            healthy=self.elastic.healthy.copy())
+        return True
+
     # -- one serving step ----------------------------------------------------
     def step(self, A, B) -> Tuple[jax.Array, StepReport]:
+        """Serve one coded matmul request through the control loop.
+
+        Args:
+            A: (v, r) or batch-leading (b, v, r) left operand.
+            B: (v, t) right operand (shared across a batch).
+
+        Returns:
+            ``(C, StepReport)`` — the decoded product and what the loop did.
+        """
         times = self._worker_times()
         self.monitor.record_step(times)
         scores = self.monitor.straggler_scores()
 
         switched = False
+        slo_violation = False
+        predicted_tail = None
         # a cold monitor ranks on noise: hold the initial rung until the
         # EWMA estimates have min_history steps behind them (same gating
         # the monitor applies to its erasure mask).
-        if (self.monitor.steps >= self.monitor.min_history
-                and self.steps % self.reevaluate_every == 0):
+        if self.monitor.steps >= self.monitor.min_history:
             model = self.monitor.fitted_model()
-            best = self.policy.select(model, scores)
-            if best.rung != self.ladder.active:
-                self.ladder.switch(best.rung)
-                self.elastic = CodedElasticPolicy(
-                    K=self.ladder.K, tau=best.tau,
-                    healthy=self.elastic.healthy.copy())
-                switched = True
+            best = None
+            if self.steps % self.reevaluate_every == 0:
+                best = self.policy.select(model, scores)
+                switched = self._switch_to(best.rung)
+            if self.slo_policy is not None:
+                # when the quantile policy IS the primary and just ranked,
+                # its winning estimate already describes the active rung —
+                # reuse it instead of re-running the closed-form estimate.
+                primary_is_slo = (self.policy is self.slo_policy
+                                  and best is not None
+                                  and best.rung == self.ladder.active)
+                if primary_is_slo:
+                    predicted_tail = best.quantile_latency_s
+                else:
+                    predicted_tail = self.slo_policy.estimate(
+                        self.ladder.active, model, scores).quantile_latency_s
+                if self.slo_s is not None and predicted_tail > self.slo_s:
+                    # SLO fallback: the ACTIVE rung is predicted to blow the
+                    # tail budget — switch to the tail-optimal rung NOW,
+                    # regardless of cadence or the primary (mean) ranking.
+                    slo_violation = True
+                    fallback = (best if primary_is_slo
+                                else self.slo_policy.select(model, scores))
+                    if self._switch_to(fallback.rung):
+                        switched = True
+                        # report the tail of the rung that will SERVE
+                        predicted_tail = fallback.quantile_latency_s
 
         budget = self.ladder.budget(self.ladder.active)
         mask = self.monitor.erasure_mask(budget, self.score_threshold)
@@ -150,6 +237,8 @@ class AdaptiveServer:
             respecialize=respecialize,
             shrink_target=shrink_target,
             exact=exact,
+            slo_violation=slo_violation,
+            predicted_tail_s=predicted_tail,
         )
         self.reports.append(report)
         self.steps += 1

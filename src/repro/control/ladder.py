@@ -13,6 +13,13 @@ jit-executable memo spans the family (keys fold in the plan token), so
 after ``prewarm()`` compiles each rung once, ``switch()`` is recompile-free
 — the group's build counter staying flat across switches is asserted by
 tests and the control bench.
+
+``prewarm(..., batch_sizes=...)`` extends the same contract to vmap-batched
+serving: each listed size becomes a leading-dim BUCKET compiled per rung,
+and a batched call is rounded UP to the smallest covering bucket (zero
+rows padded onto A, sliced back off the result), so variable per-request
+batch sizes hit the fixed set of prewarmed executables instead of
+compiling one program per distinct batch dimension.
 """
 from __future__ import annotations
 
@@ -53,6 +60,7 @@ class PlanLadder:
         self.group = CacheGroup()
         self.switch_count = 0
         self.step_overhead_s: dict = {}
+        self._buckets: Tuple[int, ...] = ()
 
         specs = [("bec", dict(kind="bec"))]
         specs += [(f"tradeoff(p'={pp})", dict(kind="tradeoff", p_prime=pp))
@@ -89,12 +97,15 @@ class PlanLadder:
         return self._order
 
     def plan(self, rung: str) -> CodedMatmulPlan:
+        """The frozen ``CodedMatmulPlan`` backing ``rung``."""
         return self._plans[self._check(rung)]
 
     def facade(self, rung: str) -> CodedMatmul:
+        """The rung's ``CodedMatmul`` facade (shares the ladder's caches)."""
         return self._facades[self._check(rung)]
 
     def tau(self, rung: str) -> int:
+        """The rung's recovery threshold."""
         return self._plans[self._check(rung)].tau
 
     def budget(self, rung: str) -> int:
@@ -116,6 +127,7 @@ class PlanLadder:
     # -- the switchable facade ---------------------------------------------
     @property
     def active(self) -> str:
+        """Name of the rung currently serving calls."""
         return self._active
 
     def switch(self, rung: str) -> CodedMatmul:
@@ -127,12 +139,53 @@ class PlanLadder:
         return self._facades[rung]
 
     def __call__(self, A, B, **erasure) -> jnp.ndarray:
-        """Coded C = A^T B on the ACTIVE rung."""
-        return self._facades[self._active](A, B, **erasure)
+        """Coded C = A^T B on the ACTIVE rung.
+
+        A single leading batch dimension on A is served through the
+        prewarmed batch buckets when any were compiled: the batch is
+        zero-padded up to the smallest covering bucket and the pad rows are
+        sliced off the result, so the call hits an existing executable.
+        Batches with no covering bucket — and batched-B calls, which the
+        buckets do not compile for — run at their true size (compiling a
+        new executable on first use).
+        """
+        A = jnp.asarray(A)
+        B = jnp.asarray(B)
+        padded = self._bucketed_batch(A, B)
+        if padded is None:
+            return self._facades[self._active](A, B, **erasure)
+        n, bucket = padded
+        pad = jnp.zeros((bucket - n,) + A.shape[1:], A.dtype)
+        C = self._facades[self._active](
+            jnp.concatenate([A, pad], axis=0), B, **erasure)
+        return C[:n]
+
+    def _bucketed_batch(self, A, B) -> Optional[Tuple[int, int]]:
+        """(batch size, covering bucket) when padding applies, else None.
+
+        Padding applies only to the prewarmed shape family: batched A with
+        UNBATCHED B (buckets compile exactly that), and only when the batch
+        is not already a bucket size.
+        """
+        if not self._buckets or A.ndim != 3 or B.ndim != 2:
+            return None
+        n = int(A.shape[0])
+        bucket = self.bucket_for(n)
+        return (n, bucket) if bucket is not None and bucket != n else None
+
+    def bucket_for(self, batch: int) -> Optional[int]:
+        """Smallest prewarmed batch bucket covering ``batch`` (None if none)."""
+        covering = [b for b in self._buckets if b >= batch]
+        return min(covering) if covering else None
+
+    @property
+    def batch_buckets(self) -> Tuple[int, ...]:
+        """Prewarmed leading-dim bucket sizes, ascending."""
+        return self._buckets
 
     # -- compilation --------------------------------------------------------
     def prewarm(self, a_shape: Sequence[int], b_shape: Sequence[int],
-                reps: int = 1) -> dict:
+                reps: int = 1, batch_sizes: Sequence[int] = ()) -> dict:
         """Compile every rung for one problem shape; measure warm step cost.
 
         One call per rung with the full-survivor concrete pattern builds the
@@ -140,8 +193,25 @@ class PlanLadder:
         concrete mask is pure data against it, so subsequent ``switch()``es
         never recompile.  The timed warm repetition per rung is stored in
         ``step_overhead_s`` — the measured per-rung decode/step cost the
-        expected-latency policy adds to its order-statistic estimate.
+        latency policies add to their order-statistic estimates.
+
+        Args:
+            a_shape/b_shape: unbatched operand shapes ``(v, r)`` / ``(v, t)``.
+            reps: warm repetitions per rung for the overhead measurement.
+            batch_sizes: leading-dim BUCKETS to additionally compile per
+                rung (batched A, shared B).  Later batched calls round up
+                to the smallest covering bucket, so serving stays
+                recompile-free across batch sizes up to the largest bucket.
+
+        Returns:
+            ``cache_info()`` plus the measured ``overhead_s`` per rung.
+
+        Raises:
+            ValueError: if any batch bucket is < 1.
         """
+        if any(b < 1 for b in batch_sizes):
+            raise ValueError(f"batch buckets must be >= 1, got {batch_sizes}")
+        self._buckets = tuple(sorted(set(int(b) for b in batch_sizes)))
         A = jnp.zeros(tuple(a_shape), self.dtype)
         B = jnp.zeros(tuple(b_shape), self.dtype)
         for rung in self._order:
@@ -151,8 +221,12 @@ class PlanLadder:
             for _ in range(reps):
                 jax.block_until_ready(cm(A, B, erased=[]))
             self.step_overhead_s[rung] = (time.perf_counter() - t0) / reps
+            for bucket in self._buckets:
+                Ab = jnp.zeros((bucket,) + tuple(a_shape), self.dtype)
+                jax.block_until_ready(cm(Ab, B, erased=[]))
         info = self.cache_info()
         info["overhead_s"] = dict(self.step_overhead_s)
+        info["batch_buckets"] = self._buckets
         return info
 
     def cache_info(self) -> dict:

@@ -117,13 +117,30 @@ class WorkerHealthMonitor:
     def fitted_model(self, fallback_base: float = 1.0) -> LatencyModel:
         """Per-worker ``LatencyModel`` from the EWMA estimates.
 
-        The fitted means already carry each worker's observed slowness, so
-        ``straggler_slowdown`` is 1 (callers sample with ``stragglers=()``).
-        Jitter is the median coefficient of variation across workers.
+        Method-of-moments fit of the shifted-exponential straggler model
+        ``T_i = base_i + Exp(scale_i)`` (mean = base + scale, std = scale):
+        per-worker ``base_i = mean_i - std_i`` and per-worker jitter
+        ``scale_i / base_i``, so a heavy-tailed worker keeps its own tail
+        instead of being averaged into a cluster-wide jitter.  A shifted
+        exponential cannot have std > mean, so the scale is capped at the
+        mean (a transient spike can push the EWMA std past the EWMA mean;
+        the cap preserves the observed mean instead of collapsing the
+        base to zero).  The fitted bases already carry each worker's
+        observed slowness, so ``straggler_slowdown`` is 1 (callers sample
+        with ``stragglers=()``).
+
+        Args:
+            fallback_base: homogeneous base used before any step was
+                recorded (a cold monitor has no estimates).
+
+        Returns:
+            A ``LatencyModel`` whose quantiles/CDF the latency policies can
+            evaluate in closed form (``core.simulator``).
         """
         if self.steps == 0:
             return LatencyModel(base=fallback_base, straggler_slowdown=1.0)
         mean = np.maximum(self._mean, 1e-12)
-        jitter = float(np.median(self.std / mean))
-        return LatencyModel(base=self._mean.copy(), straggler_slowdown=1.0,
-                            jitter=jitter)
+        scale = np.minimum(self.std, mean)
+        base = np.maximum(mean - scale, 1e-12)
+        return LatencyModel(base=base, straggler_slowdown=1.0,
+                            jitter=scale / base)

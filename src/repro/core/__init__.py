@@ -27,7 +27,15 @@ from repro.core.schemes import (
     TradeoffScheme,
     make_scheme,
 )
-from repro.core.simulator import LatencyModel, WorkerTimes, simulate_completion
+from repro.core.simulator import (
+    LatencyModel,
+    WorkerTimes,
+    completion_quantile,
+    masked_completion_cdf,
+    masked_completion_mean,
+    masked_completion_quantile,
+    simulate_completion,
+)
 
 __all__ = [
     "CodedMatmulPlan", "coded_matmul", "encode_blocks", "make_plan",
@@ -41,4 +49,6 @@ __all__ = [
     "EntangledBoundedScheme", "PolynomialCodeYu", "Scheme", "TradeoffScheme",
     "make_scheme",
     "LatencyModel", "WorkerTimes", "simulate_completion",
+    "completion_quantile", "masked_completion_cdf",
+    "masked_completion_mean", "masked_completion_quantile",
 ]

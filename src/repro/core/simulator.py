@@ -21,7 +21,10 @@ Two completion conventions coexist:
 ``simulate_completion`` accepts an injectable per-worker time ``feed`` so
 recorded traces (or a health monitor's fitted model) can replace the
 parametric ``LatencyModel``; ``completion_cdf``/``completion_quantile``
-summarise trial latencies for the control plane's expected-latency policy.
+summarise trial latencies, and ``masked_completion_quantile``/
+``masked_completion_cdf`` give the per-rung step-completion distribution
+under a fitted model in closed form — the tail statistics the control
+plane's SLO-aware ``QuantileLatencyPolicy`` ranks rungs by.
 """
 from __future__ import annotations
 
@@ -39,6 +42,9 @@ __all__ = [
     "TimeFeed",
     "completion_cdf",
     "completion_quantile",
+    "masked_completion_cdf",
+    "masked_completion_mean",
+    "masked_completion_quantile",
 ]
 
 #: Injectable per-worker finish-time source: (trial_index, rng) -> (K,) seconds.
@@ -49,6 +55,13 @@ TimeFeed = Callable[[int, np.random.Generator], np.ndarray]
 class LatencyModel:
     """Per-worker finish-time model.
 
+    Each worker's finish time is a shifted exponential
+
+        T_i = base_i * slowdown_i + Exp(jitter_i * base_i * slowdown_i)
+
+    (slowdown applies only to the trial's straggler set), the standard
+    cloud straggler model the related polynomial-code analyses use.
+
     base: seconds of useful compute — a scalar (homogeneous cluster) or a
     (K,)-vector of per-worker means (e.g. fitted by
     ``control.WorkerHealthMonitor`` from live EWMA latencies).
@@ -56,27 +69,42 @@ class LatencyModel:
     the straggler computes twice).
     jitter: optional exponential jitter scale (fraction of base) applied to
     every worker - models cloud variance; 0 reproduces the paper's
-    deterministic duplication model.
+    deterministic duplication model.  A (K,)-vector gives per-worker
+    scales (heavy-tailed straggler mixes; the monitor's moment fit).
     """
 
     base: Union[float, np.ndarray]
     straggler_slowdown: float = 2.0
-    jitter: float = 0.0
+    jitter: Union[float, np.ndarray] = 0.0
 
     def base_vector(self, K: int) -> np.ndarray:
         """The (K,) per-worker mean compute times."""
-        b = np.asarray(self.base, dtype=np.float64)
-        if b.ndim == 0:
-            return np.full(K, float(b), dtype=np.float64)
-        if b.shape != (K,):
-            raise ValueError(f"per-worker base has shape {b.shape}, need ({K},)")
-        return b.copy()
+        return self._vector(self.base, K, "base")
+
+    def jitter_vector(self, K: int) -> np.ndarray:
+        """The (K,) per-worker exponential jitter scales (fractions of base)."""
+        return self._vector(self.jitter, K, "jitter")
+
+    @property
+    def has_jitter(self) -> bool:
+        """True when any worker's finish time is stochastic."""
+        return bool(np.any(np.asarray(self.jitter) > 0))
+
+    @staticmethod
+    def _vector(x, K: int, what: str) -> np.ndarray:
+        v = np.asarray(x, dtype=np.float64)
+        if v.ndim == 0:
+            return np.full(K, float(v), dtype=np.float64)
+        if v.shape != (K,):
+            raise ValueError(f"per-worker {what} has shape {v.shape}, need ({K},)")
+        return v.copy()
 
     def sample(self, K: int, stragglers: Sequence[int], rng: np.random.Generator) -> np.ndarray:
+        """One trial's (K,) finish times with ``stragglers`` slowed down."""
         t = self.base_vector(K)
         t[list(stragglers)] *= self.straggler_slowdown
-        if self.jitter > 0:
-            t = t + rng.exponential(self.jitter * t)
+        if self.has_jitter:
+            t = t + rng.exponential(self.jitter_vector(K) * t)
         return t
 
 
@@ -155,6 +183,108 @@ def completion_cdf(latencies: np.ndarray, ts: np.ndarray) -> np.ndarray:
 def completion_quantile(latencies: np.ndarray, q) -> np.ndarray:
     """Completion-latency quantile(s) (e.g. q=0.99 for a tail SLO)."""
     return np.quantile(np.asarray(latencies, dtype=np.float64), q)
+
+
+def _masked_shifted_exp(model: LatencyModel, mask) -> tuple:
+    """(kept per-worker shifts, kept per-worker Exp scales) under a 0/1 mask."""
+    keep = np.asarray(mask).astype(bool)
+    K = keep.shape[0] if keep.ndim == 1 else 0
+    if keep.ndim != 1 or K == 0:
+        raise ValueError(f"mask must be a (K,) 0/1 vector, got shape {np.shape(mask)}")
+    if not keep.any():
+        raise ValueError("mask erases every worker: nothing to wait for")
+    base = model.base_vector(K)
+    scale = model.jitter_vector(K) * base
+    return base[keep], scale[keep]
+
+
+def _product_cdf(base: np.ndarray, scale: np.ndarray, ts) -> np.ndarray:
+    """P[max_i (base_i + Exp(scale_i)) <= t] for each t (vectorised)."""
+    t = np.asarray(ts, dtype=np.float64)
+    tt = np.atleast_1d(t)[:, None]                       # (T, 1) vs (kept,)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        expo = np.where(scale > 0, (tt - base) / np.where(scale > 0, scale, 1.0),
+                        np.inf)
+    F = np.where(tt >= base, 1.0 - np.exp(-np.where(tt >= base, expo, 0.0)), 0.0)
+    # zero-scale workers: unit step at base
+    F = np.where(scale > 0, F, (tt >= base).astype(np.float64))
+    out = F.prod(axis=1)
+    return out if t.ndim else float(out[0])
+
+
+def _quantile_from_cdf(base: np.ndarray, scale: np.ndarray, q: float) -> float:
+    """Invert the product CDF by bisection (base/scale precomputed)."""
+    lo = float(base.max())
+    if q == 0.0 or not np.any(scale > 0):
+        return lo
+    if q == 1.0:
+        return float(np.inf)
+    # upper bracket: union bound — at t with every per-worker tail mass
+    # <= (1-q)/n the product CDF is >= q.
+    n = base.size
+    tail = (1.0 - q) / n
+    with np.errstate(divide="ignore"):
+        hi = float(np.max(base + scale * (-np.log(tail))))
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if _product_cdf(base, scale, mid) < q:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def masked_completion_cdf(model: LatencyModel, mask, ts) -> np.ndarray:
+    """Exact step-completion CDF under ``model`` with a 0/1 survivor mask.
+
+    The synchronous step waits for every kept worker, whose finish times are
+    independent shifted exponentials ``base_i + Exp(scale_i)``, so
+
+        P[T <= t] = prod over kept i of F_i(t),
+        F_i(t)    = 1 - exp(-(t - base_i) / scale_i)   for t >= base_i
+
+    (a unit step at ``base_i`` when ``scale_i == 0``).  This is the
+    tau-th-order-statistic law of the paper's latency model, specialised to
+    the mask that erases the ``K - tau`` flagged stragglers.
+    """
+    base, scale = _masked_shifted_exp(model, mask)
+    return _product_cdf(base, scale, ts)
+
+
+def masked_completion_quantile(model: LatencyModel, mask, q: float) -> float:
+    """Closed-form q-quantile of masked step completion under ``model``.
+
+    Inverts ``masked_completion_cdf`` by bisection (the CDF is a product of
+    shifted-exponential factors — monotone, no closed inverse for
+    heterogeneous workers).  Edge cases: ``q == 0`` returns the essential
+    minimum ``max(kept base)``; ``q == 1`` returns ``inf`` whenever any kept
+    worker has jitter (the shifted exponential is unbounded), else
+    ``max(kept base)``.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q={q} outside [0, 1]")
+    base, scale = _masked_shifted_exp(model, mask)
+    return _quantile_from_cdf(base, scale, q)
+
+
+def masked_completion_mean(model: LatencyModel, mask) -> float:
+    """Closed-form mean of masked step completion under ``model``.
+
+    ``E[max] = lo + integral over (lo, hi) of (1 - F(t)) dt`` with ``lo``
+    the essential minimum and ``hi`` the 1-1e-6 quantile (the truncated
+    exponential tail beyond it contributes O(scale * 1e-6)); the integral
+    is a trapezoid over the vectorised product CDF.
+    """
+    base, scale = _masked_shifted_exp(model, mask)
+    lo = float(base.max())
+    if not np.any(scale > 0):
+        return lo
+    hi = _quantile_from_cdf(base, scale, 1.0 - 1e-6)
+    ts = np.linspace(lo, hi, 513)
+    survival = 1.0 - _product_cdf(base, scale, ts)
+    # np.trapz was renamed np.trapezoid in numpy 2.0; support both
+    trapezoid = getattr(np, "trapezoid", None) or np.trapz
+    return lo + float(trapezoid(survival, ts))
 
 
 def measure_worker_time(fn: Callable[[], object], repeats: int = 3) -> float:

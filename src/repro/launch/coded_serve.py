@@ -10,14 +10,20 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 off-TPU).
 ``--adaptive`` swaps the single fixed plan for the control plane
 (``repro.control``): a ``PlanLadder`` over the paper's bec <-> tradeoff <->
 polycode family, a ``WorkerHealthMonitor`` fed with (simulated) per-worker
-step times, and an ``ExpectedLatencyPolicy`` that switches rungs and emits
-the erasure mask — recompile-free after ``prewarm()``.
+step times, and a latency policy that switches rungs and emits the erasure
+mask — recompile-free after ``prewarm()``.  ``--policy quantile`` (or
+``--slo-quantile``) ranks rungs by tail completion instead of the mean;
+``--slo-ms`` adds the violation fallback that forces a switch to the
+tail-optimal rung whenever the active rung's predicted quantile blows the
+bound.  ``--batch`` serves vmap-batched requests of VARYING size through
+prewarmed leading-dim buckets (round-up padding, zero recompiles).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.coded_serve --backend fused \
       --requests 12 --size 256 --fail-rate 0.3
   PYTHONPATH=src python -m repro.launch.coded_serve --adaptive \
-      --requests 16 --size 64 --fail-rate 0.25
+      --requests 16 --size 64 --fail-rate 0.25 --batch 8 \
+      --slo-quantile 0.99 --slo-ms 1800
 """
 from __future__ import annotations
 
@@ -51,6 +57,17 @@ def main(argv=None):
     ap.add_argument("--fail-rate", type=float, default=0.25,
                     help="per-request probability a worker is erased "
                          "(adaptive: fraction of persistently slow workers)")
+    ap.add_argument("--policy", default=None, choices=["mean", "quantile"],
+                    help="adaptive rung ranking: mean completion or the "
+                         "--slo-quantile tail (default mean)")
+    ap.add_argument("--slo-quantile", type=float, default=None,
+                    help="tail quantile the SLO is stated at, e.g. 0.99; "
+                         "implies --policy quantile unless --policy mean "
+                         "is explicit")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="SLO bound on modelled step completion (ms); a "
+                         "predicted violation forces a switch to the "
+                         "tail-optimal rung")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.adaptive:
@@ -113,7 +130,7 @@ def run_static(args):
 
 
 def run_adaptive(args):
-    from repro.control import AdaptiveServer, PlanLadder
+    from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
     from repro.core import conservative_L
     from repro.core.numerics import enable_x64
     from repro.core.simulator import LatencyModel
@@ -134,37 +151,70 @@ def run_adaptive(args):
             backend = "reference"
         ladder = PlanLadder(p, m, n, K=K, L=conservative_L(v, 4, 4),
                             backend=backend)
-        info = ladder.prewarm((v, r), (v, t))
+        # batched requests vary in size: prewarm power-of-two buckets so
+        # round-up padding keeps every size recompile-free.
+        buckets = ()
+        if args.batch:
+            top = 1 << (args.batch - 1).bit_length()
+            buckets = tuple(1 << i for i in range(top.bit_length()))
+        info = ladder.prewarm((v, r), (v, t), batch_sizes=buckets)
         builds_at_prewarm = info["builds"]
         print(f"adaptive ladder rungs={ladder.rungs} "
               f"taus={[ladder.tau(x) for x in ladder.rungs]} K={K} "
-              f"v={v} r={r} t={t}; prewarm: {builds_at_prewarm} executables, "
-              f"overheads "
+              f"v={v} r={r} t={t} buckets={buckets or 'none'}; "
+              f"prewarm: {builds_at_prewarm} executables, overheads "
               f"{ {k: round(1e3 * s, 2) for k, s in info['overhead_s'].items()} } ms")
 
-        # persistent straggler set (resampled every 6 requests), 2x slowdown
+        # persistent straggler set (resampled every 6 requests): 2x slowdown
+        # plus a heavy exponential tail on the slow machines
         n_slow = int(round(args.fail_rate * K))
         state = {"slow": rng.choice(K, size=n_slow, replace=False)}
-        model = LatencyModel(base=1.0, straggler_slowdown=2.0, jitter=0.02)
+        base = np.ones(K)
+        jitter = np.full(K, 0.02)
 
         def feed(step, feed_rng):
             if step and step % 6 == 0:
                 state["slow"] = feed_rng.choice(K, size=n_slow, replace=False)
+            jit = jitter.copy()
+            jit[state["slow"]] = 0.5
+            model = LatencyModel(base=base, straggler_slowdown=2.0, jitter=jit)
             return model.sample(K, state["slow"], feed_rng)
 
         def make_request(i):
-            A = jnp.asarray(rng.integers(-4, 5, size=(v, r)), jnp.float64)
+            shape = ()
+            if args.batch:
+                shape = (int(rng.integers(1, args.batch + 1)),)
+            A = jnp.asarray(rng.integers(-4, 5, size=shape + (v, r)),
+                            jnp.float64)
             B = jnp.asarray(rng.integers(-4, 5, size=(v, t)), jnp.float64)
             return A, B
 
-        server = AdaptiveServer(ladder, feed=feed, seed=args.seed,
-                                check_exact=True)
+        policy_name = args.policy or (
+            "quantile" if args.slo_quantile is not None else "mean")
+        slo_quantile = args.slo_quantile
+        if slo_quantile is None and (policy_name == "quantile"
+                                     or args.slo_ms is not None):
+            slo_quantile = 0.99
+        policy = None
+        if policy_name == "mean":
+            policy = ExpectedLatencyPolicy(ladder)
+        slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
+        print(f"policy={policy_name}"
+              + (f" slo: q{slo_quantile} <= {args.slo_ms} ms"
+                 if slo_s is not None else ""))
+        server = AdaptiveServer(ladder, policy=policy, feed=feed,
+                                seed=args.seed, check_exact=True,
+                                slo_quantile=slo_quantile, slo_s=slo_s)
         for rep in server.run(args.requests, make_request):
             flag = " SWITCH" if rep.switched else ""
+            if rep.slo_violation:
+                flag += " SLO-FALLBACK"
+            tail = (f"  q-tail {rep.predicted_tail_s:6.3f} s"
+                    if rep.predicted_tail_s is not None else "")
             print(f"req {rep.step:02d}: rung={rep.rung:<15} "
                   f"erased={str(list(rep.erased)):<12} "
                   f"sim {rep.sim_latency_s:6.3f} s  wall {rep.wall_ms:7.1f} ms"
-                  f"  slack={rep.slack}  "
+                  f"{tail}  slack={rep.slack}  "
                   f"{'exact' if rep.exact else 'CHECK FAILED'}{flag}")
         info = ladder.cache_info()
         assert info["builds"] == builds_at_prewarm, (

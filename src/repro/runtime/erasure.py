@@ -48,10 +48,16 @@ class ErasurePattern:
     # -- constructors -------------------------------------------------------
     @classmethod
     def all_alive(cls, K: int) -> "ErasurePattern":
+        """The no-failure pattern: every one of the K workers survives."""
         return cls(K=K, kind="concrete", mask=np.ones(K, dtype=np.float64))
 
     @classmethod
     def from_erased(cls, K: int, erased: Sequence[int]) -> "ErasurePattern":
+        """Concrete pattern from a list of ERASED worker ids.
+
+        Raises:
+            ValueError: on duplicate or out-of-range ids.
+        """
         ids = cls._check_ids(K, erased, "erased")
         mask = np.ones(K, dtype=np.float64)
         mask[list(ids)] = 0.0
@@ -59,6 +65,11 @@ class ErasurePattern:
 
     @classmethod
     def from_survivors(cls, K: int, survivors: Sequence[int]) -> "ErasurePattern":
+        """Concrete pattern from a list of SURVIVING worker ids.
+
+        Raises:
+            ValueError: on duplicate or out-of-range ids.
+        """
         ids = cls._check_ids(K, survivors, "survivors")
         mask = np.zeros(K, dtype=np.float64)
         mask[list(ids)] = 1.0
@@ -66,6 +77,11 @@ class ErasurePattern:
 
     @classmethod
     def from_mask(cls, K: int, mask: Any) -> "ErasurePattern":
+        """Pattern from a (K,) 0/1 mask — concrete array or jax tracer.
+
+        Raises:
+            ValueError: if the mask's shape is not (K,).
+        """
         if _is_traced(mask):
             if getattr(mask, "shape", None) != (K,):
                 raise ValueError(
@@ -117,20 +133,24 @@ class ErasurePattern:
     # -- views --------------------------------------------------------------
     @property
     def is_concrete(self) -> bool:
+        """True when the survivor set is host-known (not a jax tracer)."""
         return self.kind == "concrete"
 
     @property
     def survivors(self) -> tuple:
+        """Surviving worker ids, ascending (concrete patterns only)."""
         self._require_concrete("survivors")
         return tuple(int(i) for i in np.flatnonzero(self.mask))
 
     @property
     def erased(self) -> tuple:
+        """Erased worker ids, ascending (concrete patterns only)."""
         self._require_concrete("erased")
         return tuple(int(i) for i in np.flatnonzero(self.mask == 0))
 
     @property
     def n_survivors(self) -> int:
+        """Number of surviving workers (concrete patterns only)."""
         self._require_concrete("n_survivors")
         return int(np.sum(self.mask != 0))
 

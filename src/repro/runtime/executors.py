@@ -63,6 +63,7 @@ class Executor(Protocol):
     def make_pipeline(
         self, plan: CodedMatmulPlan, kind: str, dtype
     ) -> Callable:  # pragma: no cover - protocol
+        """A pure (A, B, mask[, W]) -> C pipeline for one erasure kind."""
         ...
 
     def cache_token(self):  # pragma: no cover - protocol
@@ -78,6 +79,7 @@ class LocalExecutor:
     supports_batching = True
 
     def cache_token(self):
+        """Executable-memo identity (the name: local executors are config-free)."""
         return self.name
 
     def worker_products(
@@ -87,6 +89,7 @@ class LocalExecutor:
         raise NotImplementedError
 
     def make_pipeline(self, plan: CodedMatmulPlan, kind: str, dtype) -> Callable:
+        """The single-host 4-stage pipeline for one erasure ``kind``."""
         g = plan.scheme.grid
 
         def stages(A, B, mask):
@@ -127,6 +130,7 @@ class ReferenceExecutor(LocalExecutor):
     name = "reference"
 
     def worker_products(self, plan, a_blocks, b_blocks):
+        """Encode + per-worker products as plain einsums (the oracle path)."""
         a_tilde, b_tilde = encode_blocks(plan, a_blocks, b_blocks)
         return worker_products(a_tilde, b_tilde)
 
@@ -137,6 +141,7 @@ class StagedKernelExecutor(LocalExecutor):
     name = "staged"
 
     def worker_products(self, plan, a_blocks, b_blocks):
+        """Pallas encode into HBM, then one Pallas block matmul per worker."""
         p, m, bv, br = a_blocks.shape
         _, n, _, bt = b_blocks.shape
         ca = jnp.asarray(plan.coeff_a.reshape(plan.K, p * m),
@@ -157,6 +162,7 @@ class FusedKernelExecutor(LocalExecutor):
     name = "fused"
 
     def worker_products(self, plan, a_blocks, b_blocks):
+        """One fused encode+product megakernel call for all K workers."""
         return fused_worker_products(plan, a_blocks, b_blocks)
 
 
@@ -241,9 +247,16 @@ class MeshExecutor:
         self.fused = fused
 
     def cache_token(self):
+        """Executable-memo identity: name + mesh + axis + kernel flags."""
         return (self.name, self.mesh, self.axis, self.use_kernels, self.fused)
 
     def make_pipeline(self, plan: CodedMatmulPlan, kind: str, dtype) -> Callable:
+        """The shard_map pipeline (one device per worker) for ``kind``.
+
+        Raises:
+            ValueError: if the mesh axis size differs from the plan's K, or
+                the plan uses complex (unit-circle) evaluation points.
+        """
         K = self.mesh.shape[self.axis]
         if K != plan.K:
             raise ValueError(

@@ -65,6 +65,8 @@ class CacheGroup:
         self._panel_caches: dict = {}
 
     def panel_cache_for(self, plan: CodedMatmulPlan, ridge: float = 0.0):
+        """The group's shared ``DecodePanelCache`` for ``plan`` (built once
+        per distinct plan token + ridge)."""
         key = (plan_token(plan), ridge)
         pc = self._panel_caches.get(key)
         if pc is None:
@@ -74,9 +76,11 @@ class CacheGroup:
 
     @property
     def panel_builds(self) -> int:
+        """Total decode panels built across every member plan."""
         return sum(pc.builds for pc in self._panel_caches.values())
 
     def cache_info(self) -> dict:
+        """Group-wide executable and decode-panel cache counters."""
         return {
             "builds": self.stats["builds"],
             "hits": self.stats["hits"],
@@ -132,6 +136,7 @@ class CodedMatmul:
     # -- backend plumbing ---------------------------------------------------
     @property
     def backend(self) -> str:
+        """Name of the executor serving this facade's calls."""
         return self._executor.name
 
     def with_backend(self, backend, *, mesh=None, axis: Optional[str] = None,
@@ -168,6 +173,22 @@ class CodedMatmul:
                  erased: Optional[Sequence[int]] = None,
                  survivors: Optional[Sequence[int]] = None,
                  mask: Any = None) -> jnp.ndarray:
+        """Coded C = A^T B under at most one erasure spec (none = all alive).
+
+        Args:
+            A: (*batch, v, r) left operand.
+            B: (*batch, v, t) right operand.
+            erasure: positional spec — an ``ErasurePattern``, a (K,) 0/1
+                mask, or a list of erased worker ids.
+            erased / survivors / mask: keyword alternatives.
+
+        Returns:
+            (*batch, r, t) decoded product.
+
+        Raises:
+            ValueError: on conflicting erasure specs, rank-<2 operands,
+                contraction mismatch, or fewer than tau survivors.
+        """
         pattern = ErasurePattern.normalize(
             self.plan.K, erasure, erased=erased, survivors=survivors,
             mask=mask)

@@ -12,6 +12,7 @@ from repro.control import (  # noqa: E402
     AdaptiveServer,
     ExpectedLatencyPolicy,
     PlanLadder,
+    QuantileLatencyPolicy,
     WorkerHealthMonitor,
 )
 from repro.core.simulator import LatencyModel  # noqa: E402
@@ -87,6 +88,23 @@ class TestMonitor:
         assert model.straggler_slowdown == 1.0
         t = model.sample(K, (), np.random.default_rng(0))
         assert t.shape == (K,)
+
+    def test_fitted_model_survives_transient_spike(self):
+        """One huge outlier can push the EWMA std past the EWMA mean; the
+        shifted-exp fit must cap the scale at the mean (preserving the
+        observed mean latency) instead of collapsing the base to ~0."""
+        mon = WorkerHealthMonitor(K, alpha=0.3)
+        for _ in range(5):
+            mon.record_step(_steady_times())
+        spike = _steady_times()
+        spike[3] = 20.0
+        mon.record_step(spike)
+        assert mon.std[3] > mon.mean[3]  # the degenerate regime
+        model = mon.fitted_model()
+        fitted_mean = model.base_vector(K) + \
+            model.jitter_vector(K) * model.base_vector(K)
+        assert fitted_mean[3] == pytest.approx(mon.mean[3], rel=1e-6)
+        assert np.all(model.base_vector(K) > 0)
 
     def test_input_validation(self):
         mon = WorkerHealthMonitor(K)
@@ -313,3 +331,210 @@ class TestAdaptiveServer:
         srv = AdaptiveServer(lad, feed=lambda s, r: np.ones(3))
         with pytest.raises(ValueError):
             srv.step(*self._request())
+
+
+class TestQuantilePolicy:
+    def _heavy_fit(self, slow=(0, 1, 2)):
+        """Monitor fitted on a heavy-tailed mix: slow workers 2x + fat tail."""
+        from repro.core.simulator import LatencyModel
+
+        base = np.ones(K)
+        jitter = np.full(K, 0.05)
+        base[list(slow)] = 2.0
+        jitter[list(slow)] = 1.5
+        model = LatencyModel(base=base, straggler_slowdown=1.0, jitter=jitter)
+        mon = WorkerHealthMonitor(K)
+        rng = np.random.default_rng(0)
+        for _ in range(12):
+            mon.record_step(model.sample(K, (), rng))
+        return mon.fitted_model(), mon.straggler_scores()
+
+    def test_policy_protocol(self):
+        from repro.control import Policy
+
+        lad = _ladder()
+        assert isinstance(ExpectedLatencyPolicy(lad), Policy)
+        assert isinstance(QuantileLatencyPolicy(lad), Policy)
+
+    def test_invalid_q_raises(self):
+        with pytest.raises(ValueError):
+            QuantileLatencyPolicy(_ladder(), q=1.5)
+
+    def test_tail_ranking_disagrees_with_mean_under_heavy_tails(self):
+        """The tentpole scenario: per-rung digit-stack overheads outweigh the
+        MEAN cost of an unmasked heavy-tailed straggler but not its p99 cost,
+        so the two policies pick different rungs."""
+        lad = _ladder()
+        overhead = {"bec": 10.0, "tradeoff(p'=2)": 9.0, "polycode": 0.5}
+        model, scores = self._heavy_fit()
+        mean_pick = ExpectedLatencyPolicy(
+            lad, overhead_s=overhead).select(model, scores)
+        tail_pick = QuantileLatencyPolicy(
+            lad, q=0.99, overhead_s=overhead).select(model, scores)
+        assert mean_pick.rung == "polycode"      # cheap, eats the tail
+        assert tail_pick.rung == "tradeoff(p'=2)"  # pays the digit tax
+        assert tail_pick.quantile == 0.99
+        assert tail_pick.quantile_latency_s > tail_pick.expected_latency_s
+
+    def test_analytic_matches_sampled(self):
+        lad = _ladder()
+        model, scores = self._heavy_fit()
+        zero = {r: 0.0 for r in lad.rungs}
+        a = QuantileLatencyPolicy(lad, q=0.9, overhead_s=zero,
+                                  analytic=True).estimate("bec", model, scores)
+        s = QuantileLatencyPolicy(lad, q=0.9, overhead_s=zero, analytic=False,
+                                  trials=4000).estimate("bec", model, scores)
+        assert a.quantile_latency_s == pytest.approx(
+            s.quantile_latency_s, rel=0.1)
+
+    def test_entry_bound_still_gates(self):
+        lad = _ladder(L=L_BEC_INFEASIBLE)
+        model, scores = self._heavy_fit()
+        pol = QuantileLatencyPolicy(lad,
+                                    overhead_s={r: 0.0 for r in lad.rungs})
+        est = pol.select(model, scores)
+        assert est.feasible and est.rung != "bec"
+
+    def test_median_ranking_coincides_with_mean_for_iid_workers(self):
+        """Property: for i.i.d. exponential-jitter workers, ranking by the
+        q=0.5 quantile orders rungs exactly like ranking by the mean.  The
+        kept sets are nested (victims are cut worst-first from one flagged
+        list), so on shared sample paths max-over-kept is pointwise
+        monotone and every summary statistic agrees on the order."""
+        from repro.core.simulator import LatencyModel
+
+        lad = _ladder()
+        zero = {r: 0.0 for r in lad.rungs}
+        for seed in range(8):
+            rng = np.random.default_rng(seed)
+            model = LatencyModel(base=float(rng.uniform(0.5, 2.0)),
+                                 straggler_slowdown=1.0,
+                                 jitter=float(rng.uniform(0.1, 1.0)))
+            scores = rng.uniform(0, 1, size=K)
+            mean_rank = [e.rung for e in ExpectedLatencyPolicy(
+                lad, overhead_s=zero, seed=seed).rank(model, scores)]
+            med_rank = [e.rung for e in QuantileLatencyPolicy(
+                lad, q=0.5, overhead_s=zero, analytic=False,
+                seed=seed).rank(model, scores)]
+            assert mean_rank == med_rank
+
+
+class TestBatchedLadder:
+    def test_bucket_roundup_serves_exactly(self):
+        """Batch sizes without their own executable round up to a bucket;
+        the padded rows are sliced off and the result stays exact."""
+        lad = _ladder()
+        info = lad.prewarm(*SHAPES, batch_sizes=(4, 8))
+        assert info["batch_buckets"] == (4, 8)
+        # 3 rungs x (unbatched + 2 buckets)
+        assert info["builds"] == 3 * 3
+        builds = lad.cache_info()["builds"]
+        rng = np.random.default_rng(0)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        for step, n in enumerate([3, 5, 8, 1, 4, 7]):
+            rung = lad.rungs[step % len(lad.rungs)]
+            lad.switch(rung)
+            A = jnp.asarray(rng.integers(-4, 5, size=(n,) + SHAPES[0]),
+                            jnp.float64)
+            C = lad(A, B, erased=[0])
+            assert C.shape[0] == n
+            oracle = np.einsum("bvr,vt->brt", np.asarray(A), np.asarray(B))
+            np.testing.assert_array_equal(np.asarray(C), oracle)
+        assert lad.cache_info()["builds"] == builds, (
+            "batched rung switch recompiled")
+
+    def test_bucket_for(self):
+        lad = _ladder()
+        lad.prewarm(*SHAPES, batch_sizes=(4, 8))
+        assert lad.bucket_for(1) == 4
+        assert lad.bucket_for(4) == 4
+        assert lad.bucket_for(5) == 8
+        assert lad.bucket_for(9) is None
+        assert lad.batch_buckets == (4, 8)
+
+    def test_batched_B_bypasses_buckets(self):
+        """Buckets compile batched-A-only executables; a batched-B call must
+        serve at its true size (never pad A against an unpadded B)."""
+        lad = _ladder(include=["bec"])
+        lad.prewarm(*SHAPES, batch_sizes=(4,))
+        rng = np.random.default_rng(2)
+        A = jnp.asarray(rng.integers(-4, 5, size=(3,) + SHAPES[0]),
+                        jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=(3,) + SHAPES[1]),
+                        jnp.float64)
+        C = lad(A, B, erased=[0])
+        oracle = np.einsum("bvr,bvt->brt", np.asarray(A), np.asarray(B))
+        np.testing.assert_array_equal(np.asarray(C), oracle)
+
+    def test_batch_beyond_buckets_compiles_fresh(self):
+        lad = _ladder(include=["bec"])
+        lad.prewarm(*SHAPES, batch_sizes=(2,))
+        builds = lad.cache_info()["builds"]
+        A = jnp.zeros((5,) + SHAPES[0], jnp.float64)
+        B = jnp.zeros(SHAPES[1], jnp.float64)
+        assert lad(A, B, erased=[]).shape[0] == 5
+        assert lad.cache_info()["builds"] == builds + 1
+
+    def test_invalid_bucket_raises(self):
+        with pytest.raises(ValueError):
+            _ladder().prewarm(*SHAPES, batch_sizes=(0,))
+
+
+class TestSLOFallback:
+    def _heavy_feed(self, slow=(0, 1, 2)):
+        from repro.core.simulator import LatencyModel
+
+        base = np.ones(K)
+        jitter = np.full(K, 0.05)
+        base[list(slow)] = 2.0
+        jitter[list(slow)] = 1.5
+        model = LatencyModel(base=base, straggler_slowdown=1.0, jitter=jitter)
+        return lambda step, rng: model.sample(K, (), rng)
+
+    def test_slo_s_requires_quantile(self):
+        with pytest.raises(ValueError):
+            AdaptiveServer(_ladder(), slo_s=1.0)
+
+    def test_slo_quantile_becomes_primary_policy(self):
+        srv = AdaptiveServer(_ladder(), slo_quantile=0.95)
+        assert isinstance(srv.policy, QuantileLatencyPolicy)
+        assert srv.policy is srv.slo_policy
+        assert srv.policy.q == 0.95
+
+    def test_violation_forces_switch_against_mean_ranking(self):
+        """With the mean policy primary, a predicted tail-SLO violation on
+        its pick forces the quantile policy's rung instead — the fallback
+        overrides the mean ranking every step it disagrees."""
+        overhead = {"bec": 10.0, "tradeoff(p'=2)": 9.0, "polycode": 0.5}
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        builds = lad.cache_info()["builds"]
+        srv = AdaptiveServer(
+            lad, policy=ExpectedLatencyPolicy(lad, overhead_s=overhead),
+            feed=self._heavy_feed(), check_exact=True,
+            slo_quantile=0.99, slo_s=12.0)
+        assert srv.slo_policy.overhead_s == overhead  # inherited pricing
+        A, B = jnp.zeros(SHAPES[0], jnp.float64), jnp.zeros(SHAPES[1],
+                                                            jnp.float64)
+        reports = srv.run(10, lambda i: (A, B))
+        warm = reports[4:]
+        assert any(r.slo_violation for r in warm)
+        for r in warm:
+            if r.slo_violation:
+                # mean ranking wants polycode; the fallback forbids it,
+                # and the report carries the SERVED rung's tail (within SLO)
+                assert r.rung == "tradeoff(p'=2)"
+                assert r.predicted_tail_s < 12.0
+        assert all(r.exact for r in reports)
+        assert lad.cache_info()["builds"] == builds
+
+    def test_no_violation_below_slo(self):
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        srv = AdaptiveServer(lad, feed=lambda s, r: _steady_times(slow=[5]),
+                             slo_quantile=0.99, slo_s=50.0)
+        A, B = jnp.zeros(SHAPES[0], jnp.float64), jnp.zeros(SHAPES[1],
+                                                            jnp.float64)
+        reports = srv.run(5, lambda i: (A, B))
+        assert not any(r.slo_violation for r in reports)
+        assert all(r.predicted_tail_s is not None for r in reports[2:])

@@ -159,3 +159,108 @@ class TestSimulatorProperties:
             completion_cdf(lat, np.array([0.5, 1.0, 2.5, 4.0])),
             [0.0, 0.25, 0.5, 1.0])
         assert completion_quantile(lat, 0.5) == 2.5
+
+
+class TestMaskedCompletionDistribution:
+    """Closed-form masked completion CDF/quantile under a LatencyModel."""
+
+    def _model(self, K=6):
+        base = np.linspace(1.0, 2.0, K)
+        jitter = np.full(K, 0.3)
+        return LatencyModel(base=base, straggler_slowdown=1.0, jitter=jitter)
+
+    def test_matches_empirical(self):
+        from repro.core.simulator import masked_completion_quantile
+        model = self._model()
+        mask = np.array([1, 1, 0, 1, 1, 0], dtype=float)
+        rng = np.random.default_rng(0)
+        keep = mask.astype(bool)
+        samples = np.array([model.sample(6, (), rng)[keep].max()
+                            for _ in range(40000)])
+        for q in (0.1, 0.5, 0.9, 0.99):
+            analytic = masked_completion_quantile(model, mask, q)
+            empirical = float(np.quantile(samples, q))
+            assert abs(analytic - empirical) < 0.05 * max(empirical, 1.0)
+
+    def test_analytic_mean_matches_empirical(self):
+        from repro.core.simulator import masked_completion_mean
+        model = self._model()
+        mask = np.array([1, 0, 1, 1, 0, 1], dtype=float)
+        rng = np.random.default_rng(1)
+        keep = mask.astype(bool)
+        samples = np.array([model.sample(6, (), rng)[keep].max()
+                            for _ in range(40000)])
+        assert masked_completion_mean(model, mask) == pytest.approx(
+            samples.mean(), rel=0.02)
+        det = LatencyModel(base=np.linspace(1.0, 2.0, 6),
+                           straggler_slowdown=1.0, jitter=0.0)
+        assert masked_completion_mean(det, np.ones(6)) == 2.0
+
+    def test_q_zero_is_essential_min(self):
+        from repro.core.simulator import masked_completion_quantile
+        model = self._model()
+        # q=0: nothing has finished before the slowest kept worker's base
+        assert masked_completion_quantile(model, np.ones(6), 0.0) == 2.0
+        mask = np.array([1, 1, 1, 0, 0, 0], dtype=float)
+        assert masked_completion_quantile(model, mask, 0.0) == pytest.approx(1.4)
+
+    def test_q_one_unbounded_iff_jitter(self):
+        from repro.core.simulator import masked_completion_quantile
+        assert masked_completion_quantile(self._model(), np.ones(6), 1.0) == np.inf
+        det = LatencyModel(base=np.linspace(1.0, 2.0, 6),
+                           straggler_slowdown=1.0, jitter=0.0)
+        # deterministic: every quantile collapses to the kept max base
+        for q in (0.0, 0.5, 1.0):
+            assert masked_completion_quantile(det, np.ones(6), q) == 2.0
+
+    def test_single_worker(self):
+        from repro.core.simulator import (
+            masked_completion_cdf,
+            masked_completion_quantile,
+        )
+        model = LatencyModel(base=2.0, straggler_slowdown=1.0, jitter=0.5)
+        mask = np.ones(1)
+        # exact shifted-exponential quantile: base + scale * (-ln(1-q))
+        q = 0.9
+        expect = 2.0 + 1.0 * (-np.log(1 - q))
+        assert masked_completion_quantile(model, mask, q) == pytest.approx(expect)
+        assert masked_completion_cdf(model, mask, expect) == pytest.approx(q)
+        assert masked_completion_cdf(model, mask, 1.9) == 0.0
+
+    def test_saturated_budget_mask(self):
+        """Erasing all but one worker: the distribution IS that worker's."""
+        from repro.core.simulator import masked_completion_quantile
+        model = self._model()
+        mask = np.zeros(6)
+        mask[0] = 1.0  # base 1.0, scale 0.3
+        q = 0.5
+        expect = 1.0 + 0.3 * (-np.log(1 - q))
+        assert masked_completion_quantile(model, mask, q) == pytest.approx(
+            expect, rel=1e-6)
+
+    def test_all_erased_and_bad_q_raise(self):
+        from repro.core.simulator import masked_completion_quantile
+        with pytest.raises(ValueError):
+            masked_completion_quantile(self._model(), np.zeros(6), 0.5)
+        with pytest.raises(ValueError):
+            masked_completion_quantile(self._model(), np.ones(6), 1.5)
+
+    def test_cdf_vectorised_and_monotone(self):
+        from repro.core.simulator import masked_completion_cdf
+        model = self._model()
+        ts = np.linspace(0.0, 10.0, 50)
+        F = masked_completion_cdf(model, np.ones(6), ts)
+        assert F.shape == ts.shape
+        assert np.all(np.diff(F) >= 0)
+        assert F[0] == 0.0 and F[-1] > 0.99
+
+    def test_per_worker_jitter_sampling(self):
+        """A (K,)-jitter vector perturbs exactly the jittered workers."""
+        jitter = np.array([0.0, 0.0, 1.0])
+        model = LatencyModel(base=1.0, straggler_slowdown=1.0, jitter=jitter)
+        t = model.sample(3, (), np.random.default_rng(0))
+        np.testing.assert_allclose(t[:2], 1.0)
+        assert t[2] > 1.0
+        assert model.has_jitter
+        with pytest.raises(ValueError):
+            model.jitter_vector(5)
