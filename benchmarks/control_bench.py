@@ -29,13 +29,29 @@ p50, strictly better p99.  Both sides serve vmap-BATCHED requests of
 varying size through prewarmed leading-dim buckets, and the zero-recompile
 contract is asserted across every batched rung switch.
 
+The SCENARIO sweep replays every regime registered in ``repro.chaos``
+(iid, heavy/Pareto tails, bursts, flapping, rack failure, pool resize) —
+each in its stressed form AND its ``calm()`` control — through the same
+static-vs-adaptive comparison, so a control-plane regression against any
+archetype fails CI, not just the one hand-rolled mix the earlier benches
+used.  The FEEDBACK sweep compares the static-q SLO fallback against the
+observed-violation feedback controller (``control.feedback``) under the
+heavy-tailed mix with a deliberately understated base quantile: the
+static policy's predictions look safe, the cheap narrow-budget rung
+serves, and realized p99 misses pile up; feedback tightens q off the
+misses and pins the wide-budget rung while its window remembers.
+
 Rows land in BENCH_control.json.  ``--check`` asserts the acceptance
 criteria (CI smoke): adaptive matches the best static rung at zero
 stragglers, beats every static rung in at least one nonzero regime, zero
 recompiles after prewarm (batched sweeps included), the quantile policy
 strictly beats the mean policy on p99 under the heavy-tailed mix while
-matching it at S=0, and the budget-exhaustion scenario hands off to
-``CodedElasticPolicy``/``plan_shrink``.
+matching it at S=0, the budget-exhaustion scenario hands off to
+``CodedElasticPolicy``/``plan_shrink``, every registered scenario's calm
+control shows zero spurious erasures (forcing adaptive == static exactly
+— the S=0 gate stated so it can fail) while its stressed regime shows
+adaptive beating static by a real margin, and the feedback controller
+strictly reduces realized SLO violations vs. the static-q policy.
 """
 from __future__ import annotations
 
@@ -207,6 +223,117 @@ def _run_quantile_sweep() -> list:
     return rows
 
 
+# -- registered-scenario sweep ------------------------------------------------
+SC_STEPS = 24
+SC_SEED = 5
+
+# -- observed-violation feedback sweep ---------------------------------------
+FB_STEPS = 96
+FB_WARMUP = 8
+FB_Q_BASE = 0.8             # deliberately understated: predictions look safe
+FB_SLO_S = 12.0
+FB_SEEDS = (37, 51)
+FB_CONFIG = dict(gain=8.0, window=32, force_after=2, target_rate=0.01)
+
+
+def _run_scenario(name: str, seed: int) -> dict:
+    """Static vs adaptive under one registered chaos scenario.
+
+    Both the stressed regime and its ``calm()`` control replay the SAME
+    deterministic trace matrix on both sides; the static side has no
+    monitor, so its step completion is the max over all workers.
+    """
+    import jax.numpy as jnp
+
+    from repro.chaos import make_scenario, trace_matrix
+    from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
+
+    row: dict = {"scenario": name, "seed": seed}
+    for variant in ("stressed", "calm"):
+        scenario = make_scenario(name)
+        if variant == "calm":
+            scenario = scenario.calm()
+        traces = trace_matrix(scenario, K, SC_STEPS, seed=seed)
+        ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
+        prewarm = ladder.prewarm((V, R), (V, T))
+        policy = ExpectedLatencyPolicy(
+            ladder, overhead_s={r: 0.0 for r in ladder.rungs})
+        server = AdaptiveServer(ladder, policy=policy,
+                                feed=lambda step, rng: traces[step],
+                                seed=seed, check_exact=True)
+        rng = np.random.default_rng(seed + 1)
+        A = jnp.asarray(rng.integers(-4, 5, size=(V, R)), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=(V, T)), jnp.float64)
+        reports = server.run(SC_STEPS, lambda i: (A, B))
+        info = ladder.cache_info()
+        row[variant] = {
+            "static_s": float(traces.max(axis=1).mean()),
+            "adaptive_s": float(np.mean([r.sim_latency_s for r in reports])),
+            "erasures": int(sum(len(r.erased) for r in reports)),
+            "respecializations": int(sum(r.respecialize for r in reports)),
+            "builds_prewarm": prewarm["builds"],
+            "builds_final": info["builds"],
+            "all_exact": all(r.exact for r in reports),
+        }
+    return row
+
+
+def _run_scenario_sweep() -> list:
+    """Every registered scenario, stressed + calm control."""
+    from repro.chaos import scenario_names
+
+    return [_run_scenario(name, seed=SC_SEED) for name in scenario_names()]
+
+
+def _run_feedback(enabled: bool, seed: int) -> dict:
+    """Static-q SLO fallback vs observed-violation feedback (heavy tails).
+
+    Realized step latency = masked completion + the served rung's priced
+    overhead — exactly what the feedback window judges against the SLO.
+    """
+    import jax.numpy as jnp
+
+    from repro.chaos import make_scenario
+    from repro.control import (
+        AdaptiveServer,
+        ExpectedLatencyPolicy,
+        FeedbackConfig,
+        PlanLadder,
+    )
+
+    feed = make_scenario("heavy_tail").compile(K, seed=seed)
+    ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
+    ladder.prewarm((V, R), (V, T))
+    policy = ExpectedLatencyPolicy(ladder, overhead_s=Q_OVERHEAD)
+    server = AdaptiveServer(
+        ladder, policy=policy, feed=feed, seed=seed,
+        slo_quantile=FB_Q_BASE, slo_s=FB_SLO_S,
+        feedback=FeedbackConfig(**FB_CONFIG) if enabled else None)
+    A = jnp.zeros((V, R), jnp.float64)
+    B = jnp.zeros((V, T), jnp.float64)
+    reports = server.run(FB_STEPS, lambda i: (A, B))[FB_WARMUP:]
+    realized = np.array([r.sim_latency_s + Q_OVERHEAD[r.rung]
+                         for r in reports])
+    rung_counts: dict = {}
+    for r in reports:
+        rung_counts[r.rung] = rung_counts.get(r.rung, 0) + 1
+    return {
+        "policy": "feedback" if enabled else "static_q",
+        "seed": seed,
+        "violations": int((realized > FB_SLO_S).sum()),
+        "steps": len(reports),
+        "p50_s": float(np.quantile(realized, 0.5)),
+        "p99_s": float(np.quantile(realized, 0.99)),
+        "rungs": rung_counts,
+    }
+
+
+def _run_feedback_sweep() -> list:
+    """static-q vs feedback over identical heavy-tailed feeds per seed."""
+    return [_run_feedback(enabled, seed)
+            for seed in FB_SEEDS for enabled in (False, True)]
+
+
 def _run_exhausted(seed: int) -> dict:
     """Budget-exhaustion handoff: a polycode-only ladder (budget 1) facing 3
     persistent stragglers must flag a respecialisation (plan_shrink)."""
@@ -244,6 +371,8 @@ def run() -> dict:
                    for L in (L_SMALL, L_LARGE)
                    for S in STRAGGLER_COUNTS]
         quantile_sweep = _run_quantile_sweep()
+        scenario_sweep = _run_scenario_sweep()
+        feedback_sweep = _run_feedback_sweep()
         exhausted = _run_exhausted(seed=29)
     return {
         "config": {
@@ -257,9 +386,18 @@ def run() -> dict:
                 "overhead_s": Q_OVERHEAD, "batches": list(Q_BATCHES),
                 "buckets": list(Q_BUCKETS),
             },
+            "scenario_sweep": {"steps": SC_STEPS, "seed": SC_SEED},
+            "feedback_sweep": {
+                "steps": FB_STEPS, "warmup": FB_WARMUP,
+                "q_base": FB_Q_BASE, "slo_s": FB_SLO_S,
+                "seeds": list(FB_SEEDS), "scenario": "heavy_tail",
+                "overhead_s": Q_OVERHEAD, "config": FB_CONFIG,
+            },
         },
         "regimes": regimes,
         "quantile_sweep": quantile_sweep,
+        "scenario_sweep": scenario_sweep,
+        "feedback_sweep": feedback_sweep,
         "exhausted": exhausted,
     }
 
@@ -301,6 +439,47 @@ def check(result: dict) -> None:
     ex = result["exhausted"]
     assert ex["respecializations"] > 0 and ex["shrink_target"], (
         f"no respecialisation handoff under exhausted budget: {ex}")
+    for row in result["scenario_sweep"]:
+        for variant in ("stressed", "calm"):
+            v = row[variant]
+            assert v["all_exact"], f"inexact decode ({variant}): {row}"
+            assert v["builds_final"] == v["builds_prewarm"], (
+                f"recompile after prewarm ({variant}): {row}")
+        # the S=0 criterion, stated so it CAN fail (a masked mean is <= the
+        # all-worker max by construction, so a one-sided bound is vacuous):
+        # at the calm control the monitor must erase NOBODY and never flag a
+        # respecialisation, which forces adaptive_s == static_s exactly.
+        calm = row["calm"]
+        assert calm["erasures"] == 0, (
+            f"monitor erased healthy workers at calm "
+            f"{row['scenario']}: {calm}")
+        assert calm["respecializations"] == 0, (
+            f"spurious respecialisation at calm {row['scenario']}: {calm}")
+        assert calm["adaptive_s"] == calm["static_s"], (
+            f"adaptive diverged from best static at calm "
+            f"{row['scenario']}: {calm}")
+        # under stress the masks must actually shed waits: a real margin,
+        # not the by-construction <= bound.
+        stressed = row["stressed"]
+        assert stressed["adaptive_s"] <= stressed["static_s"] * 0.9, (
+            f"adaptive failed to beat static under stressed "
+            f"{row['scenario']}: {stressed}")
+        assert stressed["erasures"] > 0, (
+            f"no erasures under stressed {row['scenario']}: {stressed}")
+    by_seed: dict = {}
+    for row in result["feedback_sweep"]:
+        by_seed.setdefault(row["seed"], {})[row["policy"]] = row
+    reduced = 0
+    for seed, pair in by_seed.items():
+        static, fb = pair["static_q"], pair["feedback"]
+        assert fb["violations"] <= static["violations"], (
+            f"feedback INCREASED realized violations at seed {seed}: {pair}")
+        assert fb["p99_s"] <= static["p99_s"] * 1.02, (
+            f"feedback worsened realized p99 at seed {seed}: {pair}")
+        reduced += fb["violations"] < static["violations"]
+    assert reduced > 0, (
+        "feedback never strictly reduced realized SLO violations vs the "
+        f"static-q policy: {result['feedback_sweep']}")
 
 
 def main(argv=None, save: str = "BENCH_control.json"):
@@ -326,6 +505,16 @@ def main(argv=None, save: str = "BENCH_control.json"):
               f"p50 {row['p50_s']:6.2f} s  p99 {row['p99_s']:6.2f} s "
               f"(rungs {row['rungs']}, builds "
               f"{row['builds_prewarm']}->{row['builds_final']})")
+    for row in result["scenario_sweep"]:
+        s, c = row["stressed"], row["calm"]
+        print(f"scenario {row['scenario']:<12} stressed: static {s['static_s']:6.2f} "
+              f"vs adaptive {s['adaptive_s']:6.2f} s | calm: static "
+              f"{c['static_s']:5.2f} vs adaptive {c['adaptive_s']:5.2f} s")
+    for row in result["feedback_sweep"]:
+        print(f"feedback seed={row['seed']} policy={row['policy']:<9} "
+              f"violations {row['violations']:2d}/{row['steps']} "
+              f"p50 {row['p50_s']:5.2f} s  p99 {row['p99_s']:5.2f} s "
+              f"(rungs {row['rungs']})")
     ex = result["exhausted"]
     print(f"exhausted-budget handoff: {ex['respecializations']} "
           f"respecialisations -> shrink {ex['shrink_target']}")

@@ -1,0 +1,38 @@
+"""Regenerate the golden control-plane traces under ``tests/golden/``.
+
+Run after an INTENDED behaviour change in the control plane or the chaos
+scenarios; the resulting git diff documents exactly which decisions moved.
+CI's ``chaos`` job also runs this (into a scratch directory) when the
+golden-trace tests fail, and uploads the regenerated traces as an
+artifact so the drift can be inspected without a local checkout.
+
+Usage:  PYTHONPATH=src python scripts/regen_golden_traces.py [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+
+def main(argv=None) -> None:
+    """Write one golden JSONL trace per catalog entry into ``--out``."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: tests/golden/)")
+    args = ap.parse_args(argv)
+
+    from repro.chaos.golden import golden_names, golden_trace
+    from repro.core.numerics import enable_x64
+
+    root = Path(__file__).resolve().parents[1]
+    out = Path(args.out) if args.out else root / "tests" / "golden"
+    with enable_x64():
+        for name in golden_names():
+            trace = golden_trace(name)
+            path = trace.save(out / f"{name}.jsonl")
+            rungs = sorted({s.rung for s in trace.steps})
+            print(f"{path}: {len(trace.steps)} steps, rungs {rungs}")
+
+
+if __name__ == "__main__":
+    main()

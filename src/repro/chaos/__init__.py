@@ -1,0 +1,58 @@
+"""Scenario-driven fault injection, trace record/replay, golden runs.
+
+The behavioural test substrate of the control plane (DESIGN Sec. 9):
+
+    scenarios.py   declarative ``Scenario`` DSL + registry — straggler
+                   regimes (iid, heavy/Pareto tails, bursts, flapping,
+                   rack failure, pool resize) compiled into deterministic
+                   seeded ``TimeFeed``s
+    trace.py       ``TraceRecorder``/``Trace`` — capture per-step worker
+                   times + ``StepReport`` streams as JSONL and replay them
+                   bit-deterministically
+    golden.py      the canonical recipe behind ``tests/golden/*.jsonl``
+
+Scenario and trace handling are host-side numpy (no jax arrays touched),
+though importing the package does pull jax in transitively — scenarios
+build on ``repro.core.simulator`` and ``repro.core``'s package init loads
+the jax-backed plan API.  Nothing COMPILES until a golden run actually
+serves through a ladder.
+"""
+from repro.chaos.scenarios import (
+    BurstySlowdown,
+    CorrelatedRackFailure,
+    FlappingWorkers,
+    HeavyTailMixture,
+    IIDShiftedExponential,
+    ParetoTail,
+    PoolResize,
+    Scenario,
+    make_scenario,
+    register,
+    scenario_names,
+    trace_matrix,
+)
+from repro.chaos.trace import (
+    Trace,
+    TraceRecorder,
+    TraceStep,
+    verify_replay,
+)
+
+__all__ = [
+    "Scenario",
+    "IIDShiftedExponential",
+    "HeavyTailMixture",
+    "ParetoTail",
+    "BurstySlowdown",
+    "FlappingWorkers",
+    "CorrelatedRackFailure",
+    "PoolResize",
+    "register",
+    "make_scenario",
+    "scenario_names",
+    "trace_matrix",
+    "Trace",
+    "TraceRecorder",
+    "TraceStep",
+    "verify_replay",
+]

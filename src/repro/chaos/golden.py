@@ -1,0 +1,111 @@
+"""The canonical deterministic runs behind ``tests/golden/*.jsonl``.
+
+One fixed recipe — ladder geometry, shapes, request operands, policy
+seeds, CONSTANT per-rung overheads (prewarm's MEASURED overheads carry
+wall-clock noise, so golden runs must not rank by them) — applied to each
+catalog entry.  ``tests/test_chaos.py`` re-runs the recipe and asserts the
+recorded trace matches the checked-in golden file bit-for-bit;
+``scripts/regen_golden_traces.py`` rewrites the files after an INTENDED
+control-plane behaviour change (the diff then documents exactly what
+changed).
+
+Catalog: every registered scenario under its own name, plus
+``pareto_feedback`` — the Pareto-tail regime served WITH observed-
+violation feedback, so the feedback control law itself is pinned by a
+golden trace too.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.chaos.scenarios import make_scenario, scenario_names
+from repro.chaos.trace import Trace, TraceRecorder
+
+__all__ = ["GOLDEN_GRID", "GOLDEN_K", "GOLDEN_L", "GOLDEN_SHAPES",
+           "GOLDEN_STEPS", "GOLDEN_SEED", "GOLDEN_OVERHEAD_S",
+           "golden_names", "golden_trace", "replay_golden"]
+
+GOLDEN_GRID = (4, 2, 1)          # rungs bec(tau=2), tradeoff p'=2(5), polycode(11)
+GOLDEN_K = 12
+GOLDEN_L = 257                   # every rung feasible in float64
+GOLDEN_SHAPES = ((16, 8), (16, 4))
+GOLDEN_STEPS = 10
+GOLDEN_SEED = 7
+#: deterministic per-rung step costs (units of one worker step) — the
+#: depth-p digit stack prices the low-tau rungs, so the mean ranking
+#: genuinely moves across regimes instead of parking on the widest budget.
+GOLDEN_OVERHEAD_S = {"bec": 2.0, "tradeoff(p'=2)": 1.0, "polycode": 0.1}
+_SLO_QUANTILE = 0.99
+_SLO_S = 4.0                     # bound the predictive fallback is judged by
+_FEEDBACK_SLO_S = 2.5            # tighter bound for the feedback variant
+
+
+def golden_names() -> Tuple[str, ...]:
+    """Catalog keys: every registered scenario + the feedback variant."""
+    return scenario_names() + ("pareto_feedback",)
+
+
+def _request(dtype):
+    """Deterministic integer operands (no rng: stable across versions)."""
+    import jax.numpy as jnp
+
+    (v, r), (_, t) = GOLDEN_SHAPES
+    A = jnp.asarray(np.arange(v * r).reshape(v, r) % 5 - 2, dtype)
+    B = jnp.asarray(np.arange(v * t).reshape(v, t) % 5 - 2, dtype)
+    return A, B
+
+
+def _serve(key: str, feed, steps: int):
+    """Run the canonical server config for ``key`` over ``feed``."""
+    import jax.numpy as jnp
+
+    from repro.control import (
+        AdaptiveServer,
+        ExpectedLatencyPolicy,
+        PlanLadder,
+    )
+
+    feedback = key == "pareto_feedback"
+    p, m, n = GOLDEN_GRID
+    ladder = PlanLadder(p, m, n, K=GOLDEN_K, L=GOLDEN_L,
+                        backend="reference", dtype=jnp.float64)
+    ladder.prewarm(*GOLDEN_SHAPES)
+    policy = ExpectedLatencyPolicy(ladder, overhead_s=GOLDEN_OVERHEAD_S)
+    server = AdaptiveServer(
+        ladder, policy=policy, feed=feed, check_exact=True,
+        slo_quantile=_SLO_QUANTILE,
+        slo_s=_FEEDBACK_SLO_S if feedback else _SLO_S,
+        feedback=feedback)
+    A, B = _request(jnp.float64)
+    return server.run(steps, lambda i: (A, B))
+
+
+def golden_trace(key: str, steps: int = GOLDEN_STEPS,
+                 seed: int = GOLDEN_SEED) -> Trace:
+    """Run the canonical recipe for catalog entry ``key`` and record it.
+
+    Raises:
+        KeyError: for a key outside :func:`golden_names`.
+    """
+    if key not in golden_names():
+        raise KeyError(f"unknown golden key {key!r}; have {golden_names()}")
+    feedback = key == "pareto_feedback"
+    scenario_name = "pareto" if feedback else key
+    scenario = make_scenario(scenario_name)
+    recorder = TraceRecorder(
+        scenario.compile(GOLDEN_K, seed=seed), GOLDEN_K,
+        meta={"scenario": scenario_name, "seed": seed, "steps": steps,
+              "grid": list(GOLDEN_GRID), "L": GOLDEN_L,
+              "feedback": feedback})
+    reports = _serve(key, recorder, steps)
+    return recorder.finish(reports)
+
+
+def replay_golden(key: str, trace: Trace):
+    """Re-serve ``trace`` through a FRESH canonical server; the reports
+    must reproduce the trace bit-exactly (``trace.diff(...) == []``)."""
+    if key not in golden_names():
+        raise KeyError(f"unknown golden key {key!r}; have {golden_names()}")
+    return _serve(key, trace.feed(), len(trace.steps))

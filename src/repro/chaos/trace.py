@@ -1,0 +1,250 @@
+"""Record and bit-deterministically replay adaptive serving runs.
+
+A trace is a JSONL file: one header line, then one line per serving step
+carrying BOTH sides of the control loop — the (K,) per-worker finish
+times the feed produced AND the deterministic fields of the resulting
+``StepReport`` (rung choice, mask, modelled latency, predicted/realized
+tails, feedback quantile; everything except wall-clock noise).  Python's
+``json`` serialises floats at shortest round-trip precision, so float64
+values survive the file boundary bit-exactly.
+
+Usage — record::
+
+    recorder = TraceRecorder(scenario.compile(K, seed=7), K,
+                             meta={"scenario": "bursty", "seed": 7})
+    server = AdaptiveServer(ladder, feed=recorder, ...)
+    reports = server.run(steps, make_request)
+    trace = recorder.finish(reports)
+    trace.save("run.jsonl")
+
+and replay::
+
+    trace = Trace.load("run.jsonl")
+    server2 = AdaptiveServer(ladder2, feed=trace.feed(), ...)  # same config
+    reports2 = server2.run(len(trace.steps), make_request)
+    assert trace.diff(reports2) == []
+
+Replaying feeds the RECORDED times back through a freshly constructed,
+identically configured server; because every control decision is a pure
+function of the time stream (monitor EWMAs, closed-form quantiles, seeded
+policy sampling), the rung choices, masks, and tails must reproduce
+exactly — ``diff`` returns the field-level mismatches (empty = identical)
+and ``verify_replay`` raises on any.  Golden traces under ``tests/golden/``
+pin this contract in CI (regenerate via ``scripts/regen_golden_traces.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import TimeFeed
+
+if TYPE_CHECKING:  # StepReport lives in control/, which imports jax;
+    # keep repro.chaos importable (and fast) in jax-less contexts —
+    # scenarios + trace handling are pure host-side numpy.
+    from repro.control.driver import StepReport
+
+__all__ = ["TRACE_VERSION", "TraceStep", "Trace", "TraceRecorder",
+           "verify_replay"]
+
+TRACE_VERSION = 1
+
+#: StepReport fields a replay must reproduce bit-exactly (wall_ms is
+#: wall-clock noise and is never recorded).
+COMPARED_FIELDS = (
+    "rung", "switched", "erased", "sim_latency_s", "slack", "respecialize",
+    "shrink_target", "exact", "slo_violation", "predicted_tail_s",
+    "realized_s", "realized_violation", "q_effective",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceStep:
+    """One recorded serving step: the feed's times + the report's decisions."""
+
+    step: int
+    times: Tuple[float, ...]
+    rung: str
+    switched: bool
+    erased: Tuple[int, ...]
+    sim_latency_s: float
+    slack: int
+    respecialize: bool
+    shrink_target: Optional[Tuple[int, int]]
+    exact: Optional[bool]
+    slo_violation: bool
+    predicted_tail_s: Optional[float]
+    realized_s: Optional[float]
+    realized_violation: bool
+    q_effective: Optional[float]
+
+    @classmethod
+    def from_report(cls, report: StepReport,
+                    times: np.ndarray) -> "TraceStep":
+        """Pair a ``StepReport`` with the times that produced it."""
+        return cls(
+            step=report.step,
+            times=tuple(float(t) for t in np.asarray(times)),
+            rung=report.rung,
+            switched=report.switched,
+            erased=tuple(report.erased),
+            sim_latency_s=report.sim_latency_s,
+            slack=report.slack,
+            respecialize=report.respecialize,
+            shrink_target=(tuple(report.shrink_target)
+                           if report.shrink_target is not None else None),
+            exact=report.exact,
+            slo_violation=report.slo_violation,
+            predicted_tail_s=report.predicted_tail_s,
+            realized_s=report.realized_s,
+            realized_violation=report.realized_violation,
+            q_effective=report.q_effective,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A recorded run: K workers, free-form metadata, per-step records."""
+
+    K: int
+    meta: dict
+    steps: Tuple[TraceStep, ...]
+
+    def feed(self) -> TimeFeed:
+        """A ``TimeFeed`` replaying the recorded per-worker times verbatim.
+
+        Raises:
+            IndexError: when asked for a step beyond the recording.
+        """
+        by_step = {s.step: np.asarray(s.times, dtype=np.float64)
+                   for s in self.steps}
+
+        def replay_feed(step: int, rng=None) -> np.ndarray:
+            if step not in by_step:
+                raise IndexError(
+                    f"trace has no step {step} (recorded: {len(self.steps)})")
+            return by_step[step].copy()
+
+        return replay_feed
+
+    def diff(self, reports: Sequence[StepReport]) -> List[str]:
+        """Field-level mismatches between this trace and ``reports``.
+
+        Every compared field must match EXACTLY (floats included — that is
+        the bit-determinism contract).  Returns human-readable mismatch
+        strings; an empty list means the replay reproduced the run.
+        """
+        out: List[str] = []
+        if len(reports) != len(self.steps):
+            out.append(f"step count: trace {len(self.steps)} vs "
+                       f"replay {len(reports)}")
+        for rec, rep in zip(self.steps, reports):
+            got = TraceStep.from_report(rep, rec.times)
+            for field in COMPARED_FIELDS:
+                want, have = getattr(rec, field), getattr(got, field)
+                if want != have:
+                    out.append(f"step {rec.step} {field}: "
+                               f"trace {want!r} vs replay {have!r}")
+        return out
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path) -> Path:
+        """Write the trace as JSONL (header line + one line per step)."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        lines = [json.dumps({"kind": "header", "version": TRACE_VERSION,
+                             "K": self.K, "steps": len(self.steps),
+                             "meta": self.meta}, sort_keys=True)]
+        for s in self.steps:
+            rec = dataclasses.asdict(s)
+            rec = {"kind": "step", **{k: list(v) if isinstance(v, tuple)
+                                      else v for k, v in rec.items()}}
+            lines.append(json.dumps(rec, sort_keys=True))
+        path.write_text("\n".join(lines) + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path) -> "Trace":
+        """Read a trace written by :meth:`save`.
+
+        Raises:
+            ValueError: on a missing/foreign header or version mismatch.
+        """
+        lines = Path(path).read_text().splitlines()
+        if not lines:
+            raise ValueError(f"{path}: empty trace file")
+        header = json.loads(lines[0])
+        if header.get("kind") != "header":
+            raise ValueError(f"{path}: first line is not a trace header")
+        if header.get("version") != TRACE_VERSION:
+            raise ValueError(f"{path}: trace version {header.get('version')} "
+                             f"!= supported {TRACE_VERSION}")
+        steps = []
+        for line in lines[1:]:
+            rec = json.loads(line)
+            if rec.pop("kind", None) != "step":
+                raise ValueError(f"{path}: non-step record after header")
+            rec["times"] = tuple(rec["times"])
+            rec["erased"] = tuple(rec["erased"])
+            if rec["shrink_target"] is not None:
+                rec["shrink_target"] = tuple(rec["shrink_target"])
+            steps.append(TraceStep(**rec))
+        return cls(K=int(header["K"]), meta=dict(header.get("meta", {})),
+                   steps=tuple(steps))
+
+
+class TraceRecorder:
+    """A pass-through ``TimeFeed`` that records what it emitted.
+
+    Wrap the real feed, hand the recorder to ``AdaptiveServer(feed=...)``,
+    run, then :meth:`finish` with the server's reports to obtain the
+    :class:`Trace`.
+
+    Args:
+        feed: the underlying per-worker time source.
+        K: worker count (recorded in the header; feeds are (K,)-shaped).
+        meta: free-form provenance (scenario name/params, seed, ...).
+    """
+
+    def __init__(self, feed: TimeFeed, K: int, meta: Optional[dict] = None):
+        self._feed = feed
+        self.K = K
+        self.meta = dict(meta or {})
+        self._times: dict = {}
+
+    def __call__(self, step: int, rng=None) -> np.ndarray:
+        """Delegate to the wrapped feed, keeping a copy of the times."""
+        t = np.asarray(self._feed(step, rng), dtype=np.float64)
+        self._times[int(step)] = t.copy()
+        return t
+
+    def finish(self, reports: Sequence[StepReport]) -> Trace:
+        """Pair the recorded times with the run's reports into a Trace.
+
+        Raises:
+            ValueError: if a report's step has no recorded times (the
+                recorder was not the feed that served the run).
+        """
+        steps = []
+        for rep in reports:
+            if rep.step not in self._times:
+                raise ValueError(f"no recorded times for step {rep.step}; "
+                                 f"was this recorder the server's feed?")
+            steps.append(TraceStep.from_report(rep, self._times[rep.step]))
+        return Trace(K=self.K, meta=self.meta, steps=tuple(steps))
+
+
+def verify_replay(trace: Trace, reports: Sequence[StepReport]) -> None:
+    """Assert ``reports`` reproduce ``trace`` exactly.
+
+    Raises:
+        AssertionError: listing every mismatching field.
+    """
+    mismatches = trace.diff(reports)
+    if mismatches:
+        raise AssertionError(
+            "replay diverged from trace:\n  " + "\n  ".join(mismatches))

@@ -17,10 +17,14 @@ the paper's L <-> tau ladder:
                           an SLO-violation fallback switch and a
                           CodedElasticPolicy handoff when the erasure
                           budget is exhausted                 (driver.py)
+    ViolationFeedback     sliding-window REALIZED-violation tracker that
+                          tightens/loosens the prediction quantile and can
+                          force the tail-optimal rung        (feedback.py)
 
-See DESIGN.md Sec. 7-8 and docs/architecture.md.
+See DESIGN.md Sec. 7-9 and docs/architecture.md.
 """
 from repro.control.driver import AdaptiveServer, StepReport
+from repro.control.feedback import FeedbackConfig, ViolationFeedback
 from repro.control.ladder import PlanLadder
 from repro.control.monitor import WorkerHealthMonitor
 from repro.control.policy import (
@@ -33,6 +37,8 @@ from repro.control.policy import (
 __all__ = [
     "AdaptiveServer",
     "StepReport",
+    "FeedbackConfig",
+    "ViolationFeedback",
     "PlanLadder",
     "WorkerHealthMonitor",
     "Policy",

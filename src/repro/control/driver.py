@@ -15,12 +15,20 @@ with ``slo_quantile``/``slo_s`` set, every warm step also evaluates the
 ACTIVE rung's modelled q-quantile completion, and a predicted violation
 forces a switch to the tail-optimal rung immediately — off the re-rank
 cadence, and even when the mean ranking disagrees.
+
+``feedback=`` closes the loop on OBSERVED behaviour: a
+``control.feedback.ViolationFeedback`` window judges each step's realized
+latency (masked completion + the rung's priced overhead) against the SLO
+bound and tightens/loosens the quantile the predictions are stated at —
+so a fitted model that underestimates the true tail (e.g. Pareto
+stragglers) gets corrected by the misses it causes, and a run of
+consecutive realized violations forces the tail-optimal rung outright.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -29,6 +37,7 @@ import jax
 from repro.core.api import uncoded_matmul
 from repro.core.simulator import LatencyModel, TimeFeed, WorkerTimes
 from repro.distributed.elastic import CodedElasticPolicy, plan_shrink
+from repro.control.feedback import FeedbackConfig, ViolationFeedback
 from repro.control.ladder import PlanLadder
 from repro.control.monitor import WorkerHealthMonitor
 from repro.control.policy import (
@@ -56,6 +65,9 @@ class StepReport:
     exact: Optional[bool]          # vs uncoded oracle (None = not checked)
     slo_violation: bool = False    # predicted q-quantile exceeded the SLO
     predicted_tail_s: Optional[float] = None  # SERVED rung's modelled q-quantile
+    realized_s: Optional[float] = None        # realized latency the feedback judged
+    realized_violation: bool = False          # realized latency exceeded the SLO
+    q_effective: Optional[float] = None       # feedback-adjusted quantile this step
 
 
 class AdaptiveServer:
@@ -83,9 +95,18 @@ class AdaptiveServer:
             ``slo_quantile``-completion exceeds it, the server immediately
             switches to the tail-optimal feasible rung (bypassing the
             cadence and the primary ranking).
+        feedback: observed-violation feedback over the SLO.  ``True``
+            enables it with the default ``FeedbackConfig``; a
+            ``FeedbackConfig`` customises the control law.  Each step's
+            REALIZED latency (masked completion + the rung's priced
+            overhead) is judged against ``slo_s``; the realized violation
+            rate tightens/loosens the quantile all predictions are stated
+            at, and ``force_after`` consecutive misses force the
+            tail-optimal rung regardless of prediction.
 
     Raises:
-        ValueError: if ``slo_s`` is given without ``slo_quantile``.
+        ValueError: if ``slo_s`` is given without ``slo_quantile``, or
+            ``feedback`` without both.
     """
 
     def __init__(self, ladder: PlanLadder, *,
@@ -98,10 +119,14 @@ class AdaptiveServer:
                  seed: int = 0,
                  check_exact: bool = False,
                  slo_quantile: Optional[float] = None,
-                 slo_s: Optional[float] = None):
+                 slo_s: Optional[float] = None,
+                 feedback: Union[bool, FeedbackConfig, None] = None):
         if slo_s is not None and slo_quantile is None:
             raise ValueError("slo_s needs slo_quantile (the quantile the "
                              "SLO is stated at)")
+        if feedback and (slo_quantile is None or slo_s is None):
+            raise ValueError("feedback needs slo_quantile AND slo_s (it "
+                             "judges realized latencies against the bound)")
         self.ladder = ladder
         self.monitor = monitor or WorkerHealthMonitor(ladder.K)
         self.slo_policy: Optional[QuantileLatencyPolicy] = None
@@ -116,6 +141,11 @@ class AdaptiveServer:
                 ladder, score_threshold=score_threshold)
         self.policy = policy
         self.slo_s = slo_s
+        self.feedback: Optional[ViolationFeedback] = None
+        if feedback:
+            config = (feedback if isinstance(feedback, FeedbackConfig)
+                      else FeedbackConfig())
+            self.feedback = ViolationFeedback(slo_quantile, slo_s, config)
         self.elastic = CodedElasticPolicy(
             K=ladder.K, tau=ladder.tau(ladder.active))
         self._feed = feed
@@ -165,6 +195,17 @@ class AdaptiveServer:
         switched = False
         slo_violation = False
         predicted_tail = None
+        q_eff = None
+        if self.feedback is not None:
+            # realized violations re-state the quantile every prediction
+            # this step is made at (selection, tail estimate, fallback) —
+            # including a user-supplied quantile PRIMARY, which would
+            # otherwise keep ranking at the stale base q.
+            q_eff = self.feedback.effective_q()
+            self.slo_policy.q = q_eff
+            if (self.policy is not self.slo_policy
+                    and isinstance(self.policy, QuantileLatencyPolicy)):
+                self.policy.q = q_eff
         # a cold monitor ranks on noise: hold the initial rung until the
         # EWMA estimates have min_history steps behind them (same gating
         # the monitor applies to its erasure mask).
@@ -197,6 +238,15 @@ class AdaptiveServer:
                         switched = True
                         # report the tail of the rung that will SERVE
                         predicted_tail = fallback.quantile_latency_s
+            if (self.feedback is not None and not slo_violation
+                    and self.feedback.force_tail_optimal):
+                # the model keeps predicting "fine" while reality keeps
+                # violating: stop trusting it and take the tail-optimal
+                # rung outright.
+                forced = self.slo_policy.select(model, scores)
+                if self._switch_to(forced.rung):
+                    switched = True
+                    predicted_tail = forced.quantile_latency_s
 
         budget = self.ladder.budget(self.ladder.active)
         mask = self.monitor.erasure_mask(budget, self.score_threshold)
@@ -226,12 +276,23 @@ class AdaptiveServer:
             exact = bool(np.array_equal(np.asarray(C),
                                         np.asarray(uncoded_matmul(A, B))))
 
+        sim_latency = WorkerTimes(times).completion_with_mask(mask)
+        realized = None
+        realized_violation = False
+        if self.feedback is not None:
+            # realized = what this step actually cost under the model's
+            # own pricing: masked completion + the served rung's overhead
+            # (the same additive cost every prediction carries).
+            realized = sim_latency + self.slo_policy.overhead_for(
+                self.ladder.active)
+            realized_violation = self.feedback.observe(realized)
+
         report = StepReport(
             step=self.steps,
             rung=self.ladder.active,
             switched=switched,
             erased=tuple(int(i) for i in np.flatnonzero(mask == 0)),
-            sim_latency_s=WorkerTimes(times).completion_with_mask(mask),
+            sim_latency_s=sim_latency,
             wall_ms=wall_ms,
             slack=self.elastic.slack,
             respecialize=respecialize,
@@ -239,6 +300,9 @@ class AdaptiveServer:
             exact=exact,
             slo_violation=slo_violation,
             predicted_tail_s=predicted_tail,
+            realized_s=realized,
+            realized_violation=realized_violation,
+            q_effective=q_eff,
         )
         self.reports.append(report)
         self.steps += 1

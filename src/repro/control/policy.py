@@ -131,6 +131,15 @@ class _LatencyPolicyBase:
                else self.ladder.step_overhead_s)
         return float(src.get(rung, 0.0))
 
+    def overhead_for(self, rung: str) -> float:
+        """The per-rung additive step cost this policy prices rungs with.
+
+        Public so the server's observed-violation feedback can judge
+        REALIZED step latencies (completion + overhead) against the same
+        pricing the predictions use.
+        """
+        return self._overhead(rung)
+
     def _victims(self, rung: str, scores: Optional[np.ndarray]) -> Tuple[np.ndarray, int]:
         """(workers the rung's mask would erase, flagged-but-unmasked count)."""
         if scores is None:

@@ -99,10 +99,23 @@ class LatencyModel:
             raise ValueError(f"per-worker {what} has shape {v.shape}, need ({K},)")
         return v.copy()
 
-    def sample(self, K: int, stragglers: Sequence[int], rng: np.random.Generator) -> np.ndarray:
-        """One trial's (K,) finish times with ``stragglers`` slowed down."""
+    def sample(self, K: int, stragglers: Sequence[int], rng: np.random.Generator,
+               *, stable: bool = False) -> np.ndarray:
+        """One trial's (K,) finish times with ``stragglers`` slowed down.
+
+        ``stable=True`` draws the exponential jitter by inverse-CDF over
+        ``rng.random()`` uniforms (always K of them, even for zero-scale
+        workers).  NumPy guarantees the raw uniform bitstream of a seeded
+        ``Generator`` across versions but NOT its distribution methods, so
+        this is the path recorded golden traces (``repro.chaos``) rely on
+        for bit-reproducibility.
+        """
         t = self.base_vector(K)
         t[list(stragglers)] *= self.straggler_slowdown
+        if stable:
+            scale = self.jitter_vector(K) * t
+            u = rng.random(K)
+            return t + np.where(scale > 0, -scale * np.log1p(-u), 0.0)
         if self.has_jitter:
             t = t + rng.exponential(self.jitter_vector(K) * t)
         return t

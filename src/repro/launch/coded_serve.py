@@ -18,12 +18,25 @@ tail-optimal rung whenever the active rung's predicted quantile blows the
 bound.  ``--batch`` serves vmap-batched requests of VARYING size through
 prewarmed leading-dim buckets (round-up padding, zero recompiles).
 
+Fault injection rides on ``repro.chaos``: ``--scenario NAME`` feeds the
+loop from any registered straggler regime (deterministic under ``--seed``)
+instead of the built-in resampled-straggler feed; ``--feedback`` turns on
+the observed-violation controller (requires ``--slo-ms``), which
+tightens/loosens the prediction quantile from realized SLO misses;
+``--record PATH`` captures the run (times, decisions, and the server
+config) as a JSONL trace; ``--replay PATH`` re-serves the recorded times
+verbatim — decisions reproduce bit-deterministically when the server
+flags match the recording, and a config drift prints a warning.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.coded_serve --backend fused \
       --requests 12 --size 256 --fail-rate 0.3
   PYTHONPATH=src python -m repro.launch.coded_serve --adaptive \
       --requests 16 --size 64 --fail-rate 0.25 --batch 8 \
       --slo-quantile 0.99 --slo-ms 1800
+  PYTHONPATH=src python -m repro.launch.coded_serve --adaptive \
+      --scenario pareto --feedback --slo-ms 12000 --requests 32 \
+      --record /tmp/pareto.jsonl
 """
 from __future__ import annotations
 
@@ -68,10 +81,30 @@ def main(argv=None):
                     help="SLO bound on modelled step completion (ms); a "
                          "predicted violation forces a switch to the "
                          "tail-optimal rung")
+    ap.add_argument("--scenario", default=None,
+                    help="feed the adaptive loop from a registered "
+                         "repro.chaos scenario (see chaos.scenario_names) "
+                         "instead of the built-in straggler feed")
+    ap.add_argument("--feedback", action="store_true",
+                    help="observed-violation feedback: tighten/loosen the "
+                         "prediction quantile from realized SLO misses "
+                         "(adaptive only; requires --slo-ms)")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="record the adaptive run as a JSONL trace")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="replay a recorded JSONL trace as the time feed "
+                         "(bit-deterministic against the recording)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.feedback and args.slo_ms is None:
+        ap.error("--feedback requires --slo-ms (the bound realized "
+                 "latencies are judged by)")
+    if args.scenario and args.replay:
+        ap.error("--scenario and --replay are mutually exclusive feeds")
     if args.adaptive:
         return run_adaptive(args)
+    if args.scenario or args.feedback or args.record or args.replay:
+        ap.error("--scenario/--feedback/--record/--replay need --adaptive")
     return run_static(args)
 
 
@@ -165,20 +198,77 @@ def run_adaptive(args):
               f"prewarm: {builds_at_prewarm} executables, overheads "
               f"{ {k: round(1e3 * s, 2) for k, s in info['overhead_s'].items()} } ms")
 
-        # persistent straggler set (resampled every 6 requests): 2x slowdown
-        # plus a heavy exponential tail on the slow machines
-        n_slow = int(round(args.fail_rate * K))
-        state = {"slow": rng.choice(K, size=n_slow, replace=False)}
-        base = np.ones(K)
-        jitter = np.full(K, 0.02)
+        requests = args.requests
+        # resolve the EFFECTIVE policy/SLO knobs up front: the recorded
+        # config (and the replay drift check) must compare what the server
+        # actually runs with, not raw CLI defaults.
+        policy_name = args.policy or (
+            "quantile" if args.slo_quantile is not None else "mean")
+        slo_quantile = args.slo_quantile
+        if slo_quantile is None and (policy_name == "quantile"
+                                     or args.slo_ms is not None):
+            slo_quantile = 0.99
+        slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
+        server_config = {"policy": policy_name, "slo_quantile": slo_quantile,
+                         "slo_ms": args.slo_ms, "feedback": args.feedback,
+                         "backend": backend, "size": args.size,
+                         "batch": args.batch, "seed": args.seed}
+        if args.replay:
+            from repro.chaos import Trace
 
-        def feed(step, feed_rng):
-            if step and step % 6 == 0:
-                state["slow"] = feed_rng.choice(K, size=n_slow, replace=False)
-            jit = jitter.copy()
-            jit[state["slow"]] = 0.5
-            model = LatencyModel(base=base, straggler_slowdown=2.0, jitter=jit)
-            return model.sample(K, state["slow"], feed_rng)
+            trace = Trace.load(args.replay)
+            if trace.K != K:
+                raise SystemExit(f"trace recorded K={trace.K}, ladder has "
+                                 f"K={K}")
+            feed = trace.feed()
+            requests = min(requests, len(trace.steps))
+            print(f"replaying {args.replay}: {len(trace.steps)} recorded "
+                  f"steps (meta {trace.meta})")
+            # replayed TIMES are always verbatim, but rung decisions only
+            # reproduce under the recorded server config — say so instead
+            # of letting a silently different config masquerade as replay.
+            recorded = trace.meta.get("config")
+            if recorded is not None:
+                drift = {k: (recorded[k], server_config.get(k))
+                         for k in recorded if server_config.get(k) != recorded[k]}
+                if drift:
+                    print("WARNING: server config differs from the recording "
+                          f"(decisions will not reproduce): {drift}")
+        elif args.scenario:
+            from repro.chaos import make_scenario, scenario_names
+
+            if args.scenario not in scenario_names():
+                raise SystemExit(f"unknown scenario {args.scenario!r}; "
+                                 f"have {scenario_names()}")
+            feed = make_scenario(args.scenario).compile(K, seed=args.seed)
+            print(f"scenario={args.scenario} (seed {args.seed})")
+        else:
+            # persistent straggler set (resampled every 6 requests): 2x
+            # slowdown plus a heavy exponential tail on the slow machines
+            n_slow = int(round(args.fail_rate * K))
+            state = {"slow": rng.choice(K, size=n_slow, replace=False)}
+            base = np.ones(K)
+            jitter = np.full(K, 0.02)
+
+            def feed(step, feed_rng):
+                if step and step % 6 == 0:
+                    state["slow"] = feed_rng.choice(K, size=n_slow,
+                                                    replace=False)
+                jit = jitter.copy()
+                jit[state["slow"]] = 0.5
+                model = LatencyModel(base=base, straggler_slowdown=2.0,
+                                     jitter=jit)
+                return model.sample(K, state["slow"], feed_rng)
+
+        recorder = None
+        if args.record:
+            from repro.chaos import TraceRecorder
+
+            recorder = TraceRecorder(
+                feed, K, meta={"scenario": args.scenario, "seed": args.seed,
+                               "source": "coded_serve",
+                               "config": server_config})
+            feed = recorder
 
         def make_request(i):
             shape = ()
@@ -189,32 +279,31 @@ def run_adaptive(args):
             B = jnp.asarray(rng.integers(-4, 5, size=(v, t)), jnp.float64)
             return A, B
 
-        policy_name = args.policy or (
-            "quantile" if args.slo_quantile is not None else "mean")
-        slo_quantile = args.slo_quantile
-        if slo_quantile is None and (policy_name == "quantile"
-                                     or args.slo_ms is not None):
-            slo_quantile = 0.99
         policy = None
         if policy_name == "mean":
             policy = ExpectedLatencyPolicy(ladder)
-        slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
         print(f"policy={policy_name}"
               + (f" slo: q{slo_quantile} <= {args.slo_ms} ms"
-                 if slo_s is not None else ""))
+                 if slo_s is not None else "")
+              + (" feedback=on" if args.feedback else ""))
         server = AdaptiveServer(ladder, policy=policy, feed=feed,
                                 seed=args.seed, check_exact=True,
-                                slo_quantile=slo_quantile, slo_s=slo_s)
-        for rep in server.run(args.requests, make_request):
+                                slo_quantile=slo_quantile, slo_s=slo_s,
+                                feedback=args.feedback)
+        for rep in server.run(requests, make_request):
             flag = " SWITCH" if rep.switched else ""
             if rep.slo_violation:
                 flag += " SLO-FALLBACK"
+            if rep.realized_violation:
+                flag += " REALIZED-MISS"
             tail = (f"  q-tail {rep.predicted_tail_s:6.3f} s"
                     if rep.predicted_tail_s is not None else "")
+            q_eff = (f"  q_eff {rep.q_effective:.3f}"
+                     if rep.q_effective is not None else "")
             print(f"req {rep.step:02d}: rung={rep.rung:<15} "
                   f"erased={str(list(rep.erased)):<12} "
                   f"sim {rep.sim_latency_s:6.3f} s  wall {rep.wall_ms:7.1f} ms"
-                  f"{tail}  slack={rep.slack}  "
+                  f"{tail}{q_eff}  slack={rep.slack}  "
                   f"{'exact' if rep.exact else 'CHECK FAILED'}{flag}")
         info = ladder.cache_info()
         assert info["builds"] == builds_at_prewarm, (
@@ -222,6 +311,14 @@ def run_adaptive(args):
         print(f"{info['builds']} executables (unchanged since prewarm), "
               f"{info['hits']} cache hits, {info['panel_builds']} decode "
               f"panels, {info['switches']} rung switches")
+        if server.feedback is not None:
+            fb = server.feedback
+            print(f"feedback: {fb.violations}/{fb.observations} realized "
+                  f"violations, window rate {fb.realized_rate:.3f}, "
+                  f"q_eff {fb.effective_q():.3f}")
+        if recorder is not None:
+            out = recorder.finish(server.reports).save(args.record)
+            print(f"recorded trace -> {out}")
         return server.reports
 
 

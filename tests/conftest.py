@@ -11,3 +11,34 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def chaos_feed():
+    """Factory for deterministic ``repro.chaos`` scenario time feeds.
+
+    ``chaos_feed(name, K=12, seed=0, **overrides)`` returns a compiled
+    ``TimeFeed`` — ``(step, rng) -> (K,) seconds`` — for the registered
+    scenario ``name`` with dataclass-field ``overrides`` applied.  The
+    feed is a pure function of ``(scenario, K, seed)``, so any test module
+    can share regimes with the control-plane suite and the bench without
+    hand-rolling latency feeds.
+    """
+    from repro.chaos import make_scenario
+
+    def make(name="iid", K=12, seed=0, **overrides):
+        return make_scenario(name, **overrides).compile(K, seed=seed)
+
+    return make
+
+
+@pytest.fixture
+def chaos_scenario():
+    """Factory for ``repro.chaos`` Scenario objects (uncompiled).
+
+    Use when a test needs the declarative form — ``calm()`` variants,
+    ``trace_matrix`` dumps, field overrides — rather than a bare feed.
+    """
+    from repro.chaos import make_scenario
+
+    return make_scenario

@@ -1,0 +1,291 @@
+"""Scenario DSL, trace record/replay, golden regressions, feedback law."""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.chaos import (  # noqa: E402
+    Scenario,
+    Trace,
+    TraceRecorder,
+    make_scenario,
+    scenario_names,
+    trace_matrix,
+    verify_replay,
+)
+from repro.chaos.golden import (  # noqa: E402
+    GOLDEN_K,
+    golden_names,
+    golden_trace,
+    replay_golden,
+)
+from repro.control import WorkerHealthMonitor  # noqa: E402
+from repro.control.feedback import FeedbackConfig, ViolationFeedback  # noqa: E402
+
+K = 12
+STEPS = 16
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+ARCHETYPES = ("iid", "heavy_tail", "pareto", "bursty", "flapping", "rack",
+              "pool_resize")
+
+
+class TestScenarioDSL:
+    def test_catalog_registered(self):
+        assert set(ARCHETYPES) <= set(scenario_names())
+        with pytest.raises(KeyError):
+            make_scenario("thundering_herd")
+
+    def test_overrides_and_frozen(self):
+        sc = make_scenario("heavy_tail", num_stragglers=5, heavy_jitter=2.0)
+        assert sc.num_stragglers == 5 and sc.heavy_jitter == 2.0
+        with pytest.raises(Exception):  # frozen dataclass
+            sc.num_stragglers = 1
+
+    @pytest.mark.parametrize("name", ARCHETYPES)
+    def test_seeded_scenarios_reproducible(self, name):
+        """Property: the compiled feed is a pure function of (K, seed)."""
+        sc = make_scenario(name)
+        a = trace_matrix(sc, K, STEPS, seed=3)
+        b = trace_matrix(sc, K, STEPS, seed=3)
+        c = trace_matrix(sc, K, STEPS, seed=4)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+        assert a.shape == (STEPS, K)
+        assert np.all(np.isfinite(a)) and np.all(a > 0)
+
+    @pytest.mark.parametrize("name", ARCHETYPES)
+    def test_calm_variant_flags_nobody(self, name):
+        """The calm() control: the monitor never flags a straggler."""
+        feed = make_scenario(name).calm().compile(K, seed=3)
+        mon = WorkerHealthMonitor(K)
+        for step in range(8):
+            mon.record_step(feed(step, None))
+        assert mon.stragglers().size == 0
+
+    def test_heavy_tail_monitor_flags_slow_set(self, chaos_feed):
+        feed = chaos_feed("heavy_tail", K=K, seed=3)
+        mon = WorkerHealthMonitor(K)
+        for step in range(10):
+            mon.record_step(feed(step, None))
+        assert mon.stragglers().size == 3  # num_stragglers default
+
+    def test_rack_failure_degrades_one_rack_together(self, chaos_scenario):
+        sc = chaos_scenario("rack", healthy_jitter=0.0, rack_jitter=0.0)
+        before = sc.times(sc.fail_step - 1, K, seed=5)
+        after = sc.times(sc.fail_step, K, seed=5)
+        slowed = np.flatnonzero(after > 2.0 * before)
+        assert slowed.size == K // sc.racks  # the whole rack, at once
+        assert len({int(w) % sc.racks for w in slowed}) == 1  # same rack
+
+    def test_pool_resize_departures_and_arrivals(self, chaos_scenario):
+        sc = chaos_scenario("pool_resize", healthy_jitter=0.0)
+        pre = sc.times(0, K, seed=1)       # arrivals not joined yet
+        mid = sc.times(sc.join_step, K, seed=1)   # everyone present
+        post = sc.times(sc.depart_step, K, seed=1)  # departures gone
+        assert (pre > 10).sum() == sc.num_arriving
+        assert (mid > 10).sum() == 0
+        assert (post > 10).sum() == sc.num_departing
+
+    def test_compile_validates(self):
+        with pytest.raises(ValueError):
+            make_scenario("iid").compile(0)
+
+        class Broken(Scenario):
+            def times(self, step, K, seed):
+                return np.zeros(K - 1)
+
+        with pytest.raises(ValueError):
+            Broken().compile(4)(0, None)
+        with pytest.raises(NotImplementedError):
+            Scenario().times(0, 4, 0)
+
+
+class TestTraceRoundTrip:
+    def _small_trace(self, tmp_path=None):
+        trace = golden_trace("heavy_tail", steps=6)
+        if tmp_path is None:
+            return trace
+        return Trace.load(trace.save(tmp_path / "t.jsonl"))
+
+    def test_jsonl_roundtrip_bit_exact(self, tmp_path):
+        trace = self._small_trace()
+        loaded = Trace.load(trace.save(tmp_path / "t.jsonl"))
+        assert loaded == trace  # dataclass equality: every float bit-equal
+
+    def test_header_validation(self, tmp_path):
+        p = tmp_path / "bad.jsonl"
+        p.write_text('{"kind": "step"}\n')
+        with pytest.raises(ValueError):
+            Trace.load(p)
+        p.write_text("")
+        with pytest.raises(ValueError):
+            Trace.load(p)
+
+    def test_replay_feed_is_verbatim_and_bounded(self):
+        trace = self._small_trace()
+        feed = trace.feed()
+        for s in trace.steps:
+            np.testing.assert_array_equal(feed(s.step, None),
+                                          np.asarray(s.times))
+        with pytest.raises(IndexError):
+            feed(len(trace.steps), None)
+
+    def test_recorder_requires_recorded_steps(self):
+        trace = self._small_trace()
+        rec = TraceRecorder(lambda step, rng: np.ones(GOLDEN_K), GOLDEN_K)
+        with pytest.raises(ValueError):
+            rec.finish([_report_like(trace.steps[0])])
+
+    def test_diff_catches_divergence(self):
+        trace = self._small_trace()
+        reports = [_report_like(s) for s in trace.steps]
+        assert trace.diff(reports) == []
+        tampered = list(reports)
+        import dataclasses
+
+        tampered[2] = dataclasses.replace(tampered[2], rung="polycode",
+                                          sim_latency_s=999.0)
+        diffs = trace.diff(tampered)
+        assert any("rung" in d for d in diffs)
+        assert any("sim_latency_s" in d for d in diffs)
+        with pytest.raises(AssertionError):
+            verify_replay(trace, tampered)
+        assert len(trace.diff(reports[:-1])) == 1  # step-count mismatch
+
+
+class TestReplayDeterminism:
+    @pytest.mark.parametrize("key", ["heavy_tail", "pool_resize",
+                                     "pareto_feedback"])
+    def test_replay_reproduces_run_bit_exactly(self, key):
+        """The tentpole contract: record a run, rebuild the server from
+        scratch, replay the recorded times — identical rung choices,
+        masks, latencies, tails, and feedback quantiles."""
+        trace = golden_trace(key, steps=8)
+        reports = replay_golden(key, trace)
+        verify_replay(trace, reports)
+
+    def test_replay_exercises_switches(self):
+        """The replayed stream must actually contain control decisions
+        (otherwise the determinism assertion is vacuous)."""
+        trace = golden_trace("heavy_tail", steps=8)
+        assert any(s.switched for s in trace.steps)
+        assert any(s.erased for s in trace.steps)
+
+
+class TestGoldenTraces:
+    """Drift check: today's control plane vs. the checked-in recordings.
+
+    On an INTENDED behaviour change, regenerate via
+    ``PYTHONPATH=src python scripts/regen_golden_traces.py`` and commit
+    the diff.
+    """
+
+    @pytest.mark.parametrize("key", golden_names())
+    def test_matches_checked_in_golden(self, key):
+        path = GOLDEN_DIR / f"{key}.jsonl"
+        assert path.exists(), f"missing golden trace {path}; regenerate"
+        golden = Trace.load(path)
+        fresh = golden_trace(key)
+        mismatches = fresh.diff([_report_like(s) for s in golden.steps])
+        for s_new, s_old in zip(fresh.steps, golden.steps):
+            if s_new.times != s_old.times:
+                mismatches.append(f"step {s_new.step}: scenario times drifted")
+        assert not mismatches, (
+            "golden trace drift (run scripts/regen_golden_traces.py if "
+            "intended):\n  " + "\n  ".join(mismatches))
+
+    def test_catalog_covers_at_least_four_archetypes(self):
+        assert len(golden_names()) >= 4
+        assert set(golden_names()) >= {"iid", "heavy_tail", "bursty", "rack"}
+
+
+class TestFeedbackLaw:
+    def _rate(self, violations, window=8, **cfg):
+        """A feedback tracker whose window holds ``violations`` misses."""
+        fb = ViolationFeedback(0.95, 1.0, FeedbackConfig(
+            window=window, min_observations=window, **cfg))
+        for i in range(window):
+            fb.observe(2.0 if i < violations else 0.5)
+        return fb
+
+    def test_q_monotone_in_realized_violation_rate(self):
+        """Property: effective q never decreases as the realized rate
+        rises (the control law is monotone)."""
+        for cfg in ({}, {"q_min": 0.5}, {"gain": 5.0}):
+            qs = [self._rate(v, **cfg).effective_q() for v in range(9)]
+            assert all(a <= b for a, b in zip(qs, qs[1:])), cfg
+            assert qs[-1] == 0.999   # saturated window clips at q_max
+
+    def test_loosening_floors_at_base_unless_opted_in(self):
+        """A clean window never drops q below the SLO's own quantile by
+        default; an explicit q_min opts in to below-base loosening."""
+        assert self._rate(0).effective_q() == 0.95
+        assert self._rate(0, q_min=0.5).effective_q() < 0.95
+
+    def test_holds_base_until_min_observations(self):
+        fb = ViolationFeedback(0.95, 1.0, FeedbackConfig(min_observations=4))
+        for _ in range(3):
+            fb.observe(5.0)
+            assert fb.effective_q() == 0.95
+        fb.observe(5.0)
+        assert fb.effective_q() > 0.95
+
+    def test_force_tail_optimal_after_consecutive_misses(self):
+        fb = ViolationFeedback(0.99, 1.0, FeedbackConfig(force_after=3))
+        for _ in range(2):
+            fb.observe(2.0)
+        assert not fb.force_tail_optimal
+        fb.observe(2.0)
+        assert fb.force_tail_optimal
+        fb.observe(0.5)  # one clean step resets the run
+        assert not fb.force_tail_optimal
+
+    def test_window_slides(self):
+        fb = ViolationFeedback(0.95, 1.0, FeedbackConfig(
+            window=4, min_observations=1))
+        for _ in range(4):
+            fb.observe(2.0)
+        assert fb.realized_rate == 1.0
+        for _ in range(4):
+            fb.observe(0.5)
+        assert fb.realized_rate == 0.0
+        assert fb.violations == 4 and fb.observations == 8
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ViolationFeedback(0.0, 1.0)
+        with pytest.raises(ValueError):
+            ViolationFeedback(0.99, -1.0)
+        with pytest.raises(ValueError):
+            FeedbackConfig(window=0)
+        with pytest.raises(ValueError):
+            FeedbackConfig(q_min=0.9, q_max=0.5)
+        with pytest.raises(ValueError):
+            FeedbackConfig(target_rate=2.0)
+        with pytest.raises(ValueError):
+            # a window that can never hold min_observations would leave
+            # the law at q_base forever
+            FeedbackConfig(window=4, min_observations=8)
+        with pytest.raises(ValueError):
+            # clip range collapses: the law could never tighten
+            ViolationFeedback(0.9995, 1.0)
+
+
+def _report_like(step):
+    """A StepReport carrying a TraceStep's compared fields (wall_ms 0)."""
+    from repro.control import StepReport
+
+    return StepReport(
+        step=step.step, rung=step.rung, switched=step.switched,
+        erased=step.erased, sim_latency_s=step.sim_latency_s, wall_ms=0.0,
+        slack=step.slack, respecialize=step.respecialize,
+        shrink_target=step.shrink_target, exact=step.exact,
+        slo_violation=step.slo_violation,
+        predicted_tail_s=step.predicted_tail_s, realized_s=step.realized_s,
+        realized_violation=step.realized_violation,
+        q_effective=step.q_effective)

@@ -11,6 +11,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.control import (  # noqa: E402
     AdaptiveServer,
     ExpectedLatencyPolicy,
+    FeedbackConfig,
     PlanLadder,
     QuantileLatencyPolicy,
     WorkerHealthMonitor,
@@ -538,3 +539,96 @@ class TestSLOFallback:
         reports = srv.run(5, lambda i: (A, B))
         assert not any(r.slo_violation for r in reports)
         assert all(r.predicted_tail_s is not None for r in reports[2:])
+        # no feedback configured: the observed-violation fields stay inert
+        assert all(r.realized_s is None and r.q_effective is None
+                   and not r.realized_violation for r in reports)
+
+
+class TestObservedViolationFeedback:
+    _AB = (jnp.zeros(SHAPES[0], jnp.float64), jnp.zeros(SHAPES[1],
+                                                        jnp.float64))
+
+    def test_feedback_requires_slo(self):
+        with pytest.raises(ValueError):
+            AdaptiveServer(_ladder(), feedback=True)
+        with pytest.raises(ValueError):
+            AdaptiveServer(_ladder(), slo_quantile=0.99, feedback=True)
+
+    def test_realized_misses_tighten_q_and_force_tail_optimal(self):
+        """Every realized step blows a tiny SLO: the window rate saturates,
+        q climbs to q_max, and consecutive misses arm the forced switch."""
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        pol = ExpectedLatencyPolicy(lad,
+                                    overhead_s={r: 0.0 for r in lad.rungs})
+        srv = AdaptiveServer(lad, policy=pol,
+                             feed=lambda s, r: _steady_times(),
+                             slo_quantile=0.9, slo_s=0.5, feedback=True)
+        reports = srv.run(8, lambda i: self._AB)
+        assert all(r.realized_violation for r in reports)
+        assert all(r.realized_s == pytest.approx(1.0) for r in reports)
+        assert reports[0].q_effective == 0.9          # window still filling
+        assert reports[-1].q_effective == 0.999       # clipped at q_max
+        assert srv.feedback.force_tail_optimal
+        assert srv.feedback.violations == 8
+
+    def test_feedback_restates_user_supplied_quantile_primary(self):
+        """A quantile PRIMARY passed explicitly must rank at the
+        feedback-adjusted q, not its stale construction-time base."""
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        primary = QuantileLatencyPolicy(
+            lad, q=0.8, overhead_s={r: 0.0 for r in lad.rungs})
+        srv = AdaptiveServer(lad, policy=primary,
+                             feed=lambda s, r: _steady_times(),
+                             slo_quantile=0.8, slo_s=0.5, feedback=True)
+        srv.run(8, lambda i: self._AB)
+        assert primary is not srv.slo_policy
+        assert primary.q == srv.slo_policy.q == 0.999  # both tightened
+
+    def test_clean_run_holds_base_q(self):
+        """Default config never loosens below the SLO's own quantile."""
+        lad = _ladder()
+        lad.prewarm(*SHAPES)
+        srv = AdaptiveServer(lad, feed=lambda s, r: _steady_times(),
+                             slo_quantile=0.9, slo_s=50.0, feedback=True)
+        reports = srv.run(8, lambda i: self._AB)
+        assert not any(r.realized_violation for r in reports)
+        assert all(r.q_effective == 0.9 for r in reports)
+
+    def test_feedback_reduces_realized_violations_vs_static_q(self):
+        """The ROADMAP acceptance scenario, at the bench's CANONICAL
+        config (imported, not copied, so retuning the controller cannot
+        silently leave this test exercising stale constants): an
+        understated base quantile under heavy tails lets the cheap
+        narrow-budget rung serve and eat realized misses;
+        observed-violation feedback tightens q off the misses, pinning
+        the wide-budget rung while the window remembers — strictly fewer
+        realized violations, no worse p99."""
+        from benchmarks.control_bench import (
+            FB_CONFIG,
+            FB_Q_BASE,
+            FB_SEEDS,
+            FB_SLO_S,
+            FB_STEPS,
+            FB_WARMUP,
+            Q_OVERHEAD,
+        )
+        from repro.chaos import make_scenario
+
+        results = {}
+        for fb in (False, FeedbackConfig(**FB_CONFIG)):
+            feed = make_scenario("heavy_tail").compile(K, seed=FB_SEEDS[0])
+            lad = _ladder()
+            lad.prewarm(*SHAPES)
+            pol = ExpectedLatencyPolicy(lad, overhead_s=Q_OVERHEAD)
+            srv = AdaptiveServer(lad, policy=pol, feed=feed,
+                                 seed=FB_SEEDS[0], slo_quantile=FB_Q_BASE,
+                                 slo_s=FB_SLO_S, feedback=fb)
+            reports = srv.run(FB_STEPS, lambda i: self._AB)[FB_WARMUP:]
+            realized = np.array([r.sim_latency_s + Q_OVERHEAD[r.rung]
+                                 for r in reports])
+            results[bool(fb)] = ((realized > FB_SLO_S).sum(),
+                                 np.quantile(realized, 0.99))
+        assert results[True][0] < results[False][0]
+        assert results[True][1] <= results[False][1]

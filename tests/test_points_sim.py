@@ -129,13 +129,29 @@ class TestSimulatorProperties:
         with pytest.raises(ValueError):
             model.sample(8, [], np.random.default_rng(0))
 
-    def test_injectable_feed_overrides_model(self):
-        fed = np.arange(1.0, 11.0)
-        lat = simulate_completion(10, 4, 0, None, decode_time=0.5, trials=3,
-                                  feed=lambda trial, rng: fed)
-        np.testing.assert_allclose(lat, 4.5)  # 4th smallest + decode
+    def test_injectable_feed_overrides_model(self, chaos_feed):
+        """A repro.chaos scenario feed drives the Fig. 1 protocol: the
+        model argument is ignored, trials replay the scenario's seeded
+        steps, and the tau-th order statistic + decode time comes out."""
+        feed = chaos_feed("heavy_tail", K=10, seed=5)
+        lat = simulate_completion(10, 4, 0, None, decode_time=0.5, trials=6,
+                                  feed=feed)
+        again = simulate_completion(10, 4, 0, None, decode_time=0.5, trials=6,
+                                    feed=feed)
+        np.testing.assert_array_equal(lat, again)  # scenario feeds are seeded
+        expect = [np.sort(feed(t, None))[3] + 0.5 for t in range(6)]
+        np.testing.assert_allclose(lat, expect)
         with pytest.raises(ValueError):
             simulate_completion(10, 4, 0, None)  # neither model nor feed
+
+    def test_scenario_feed_pool_shrink_ignores_departed(self, chaos_feed):
+        """Beyond-paper: under a pool-shrink regime the async master at a
+        low tau never waits for departed workers, so completion stays at
+        the healthy level before AND after the departure step."""
+        feed = chaos_feed("pool_resize", K=10, seed=2, num_arriving=0,
+                          healthy_jitter=0.0)
+        lat = simulate_completion(10, 4, 0, None, trials=16, feed=feed)
+        assert lat.max() < 2.0  # departed workers never in the first 4
 
     def test_masked_completion_bridges_sync_and_async(self):
         """Erasing the K - tau slowest makes the synchronous step complete
