@@ -41,17 +41,30 @@ static policy's predictions look safe, the cheap narrow-budget rung
 serves, and realized p99 misses pile up; feedback tightens q off the
 misses and pins the wide-budget rung while its window remembers.
 
-Rows land in BENCH_control.json.  ``--check`` asserts the acceptance
-criteria (CI smoke): adaptive matches the best static rung at zero
-stragglers, beats every static rung in at least one nonzero regime, zero
-recompiles after prewarm (batched sweeps included), the quantile policy
-strictly beats the mean policy on p99 under the heavy-tailed mix while
-matching it at S=0, the budget-exhaustion scenario hands off to
+The PARTIAL sweep (``partial_sweep``) benches the tentpole of the
+partial-straggler work: binary erasure vs ``sub_tasks=Q`` fractional
+consumption over IDENTICAL scenario traces, priced under the same
+synthetic per-rung overheads.  The overheads drive selection to the
+narrow-budget polycode rung (budget 1), so with more flagged stragglers
+than the budget the binary server must WAIT IN FULL on the uncovered
+slow machines while the partial server consumes their completed chunk
+prefixes — fractional waits ``w * finish`` instead of ``finish``.
+
+Rows land in BENCH_control.json (a sweep run merge-appends into the
+existing file).  ``--check`` asserts the acceptance criteria (CI smoke):
+adaptive matches the best static rung at zero stragglers, beats every
+static rung in at least one nonzero regime, zero recompiles after prewarm
+(batched and partial sweeps included), the quantile policy strictly beats
+the mean policy on p99 under the heavy-tailed mix while matching it at
+S=0, the budget-exhaustion scenario hands off to
 ``CodedElasticPolicy``/``plan_shrink``, every registered scenario's calm
 control shows zero spurious erasures (forcing adaptive == static exactly
 — the S=0 gate stated so it can fail) while its stressed regime shows
-adaptive beating static by a real margin, and the feedback controller
-strictly reduces realized SLO violations vs. the static-q policy.
+adaptive beating static by a real margin, the feedback controller
+strictly reduces realized SLO violations vs. the static-q policy, and the
+partial server never loses to binary erasure on realized p99 — strictly
+beating it under ``heavy_tail`` and ``pareto`` — while a ``Q=1`` server
+reproduces the binary report stream field for field.
 """
 from __future__ import annotations
 
@@ -227,6 +240,13 @@ def _run_quantile_sweep() -> list:
 SC_STEPS = 24
 SC_SEED = 5
 
+# -- partial-straggler sweep (binary erasure vs sub-task consumption) ---------
+PARTIAL_SCENARIOS = ("heavy_tail", "pareto", "crawler", "degrading")
+PARTIAL_SUB_TASKS = 4
+PARTIAL_STEPS = 48
+PARTIAL_WARMUP = 6
+PARTIAL_SEED = 11
+
 # -- observed-violation feedback sweep ---------------------------------------
 FB_STEPS = 96
 FB_WARMUP = 8
@@ -283,6 +303,90 @@ def _run_scenario_sweep() -> list:
     from repro.chaos import scenario_names
 
     return [_run_scenario(name, seed=SC_SEED) for name in scenario_names()]
+
+
+def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int):
+    """One server (binary when ``sub_tasks=1``) over a fixed trace matrix.
+
+    Returns ``(row, reports, ladder, (A, B))`` so the caller can run the
+    Q=1 bit-parity check against the same compiled facades and operands.
+    """
+    import jax.numpy as jnp
+
+    from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
+
+    ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
+    prewarm = ladder.prewarm((V, R), (V, T), sub_tasks=sub_tasks)
+    policy = ExpectedLatencyPolicy(ladder, overhead_s=Q_OVERHEAD,
+                                   sub_tasks=sub_tasks)
+    server = AdaptiveServer(ladder, policy=policy,
+                            feed=lambda step, rng: traces[step],
+                            seed=seed, check_exact=True, sub_tasks=sub_tasks)
+    rng = np.random.default_rng(seed + 1)
+    A = jnp.asarray(rng.integers(-4, 5, size=(V, R)), jnp.float64)
+    B = jnp.asarray(rng.integers(-4, 5, size=(V, T)), jnp.float64)
+    reports = server.run(len(traces), lambda i: (A, B))
+
+    realized = np.array([r.sim_latency_s + Q_OVERHEAD[r.rung]
+                         for r in reports])[PARTIAL_WARMUP:]
+    rung_counts: dict = {}
+    fractions = 0
+    for r in reports[PARTIAL_WARMUP:]:
+        rung_counts[r.rung] = rung_counts.get(r.rung, 0) + 1
+        if r.progress is not None:
+            fractions += sum(1 for x in r.progress if 0.0 < x < 1.0)
+    info = ladder.cache_info()
+    row = {
+        "sub_tasks": sub_tasks,
+        "p50_s": float(np.quantile(realized, 0.5)),
+        "p99_s": float(np.quantile(realized, Q_SLO)),
+        "mean_s": float(realized.mean()),
+        "fractional_consumptions": fractions,
+        "rungs": rung_counts,
+        "builds_prewarm": prewarm["builds"],
+        "builds_final": info["builds"],
+        "all_exact": all(r.exact for r in reports),
+    }
+    return row, reports, ladder, (A, B)
+
+
+def _q1_parity(ladder, A, B, binary_reports) -> bool:
+    """Every mask the binary run emitted, replayed through the Q=1 partial
+    path (``progress`` vector + ``sub_tasks=1``): the decoded products must
+    be BIT-IDENTICAL to the legacy mask path — the fractional code is a
+    strict generalisation, not a parallel implementation."""
+    for rung, erased in sorted({(r.rung, r.erased) for r in binary_reports}):
+        ladder.switch(rung)  # a mask is only decodable on the rung that cut it
+        progress = np.ones(K)
+        progress[list(erased)] = 0.0
+        legacy = np.asarray(ladder(A, B, erased=list(erased)))
+        partial = np.asarray(ladder(A, B, progress=progress, sub_tasks=1))
+        if not np.array_equal(legacy, partial):
+            return False
+    return True
+
+
+def _run_partial(name: str, seed: int) -> dict:
+    """Binary erasure vs partial consumption under one chaos scenario.
+
+    Both servers replay the SAME deterministic trace matrix; the binary
+    run's masks additionally replay through the Q=1 partial decode path
+    and must reproduce the legacy products bit for bit.
+    """
+    from repro.chaos import make_scenario, trace_matrix
+
+    traces = trace_matrix(make_scenario(name), K, PARTIAL_STEPS, seed=seed)
+    binary, binary_reports, ladder, (A, B) = _serve_partial(traces, 1, seed)
+    partial, _, _, _ = _serve_partial(traces, PARTIAL_SUB_TASKS, seed)
+    return {"scenario": name, "seed": seed, "binary": binary,
+            "partial": partial,
+            "q1_bit_identical": _q1_parity(ladder, A, B, binary_reports)}
+
+
+def _run_partial_sweep() -> list:
+    """Binary vs partial over every partial-regime scenario."""
+    return [_run_partial(name, seed=PARTIAL_SEED)
+            for name in PARTIAL_SCENARIOS]
 
 
 def _run_feedback(enabled: bool, seed: int) -> dict:
@@ -363,9 +467,19 @@ def _run_exhausted(seed: int) -> dict:
     }
 
 
-def run() -> dict:
+def run(sweep: str = "all") -> dict:
     from repro.core.numerics import enable_x64
 
+    partial_config = {
+        "scenarios": list(PARTIAL_SCENARIOS), "sub_tasks": PARTIAL_SUB_TASKS,
+        "steps": PARTIAL_STEPS, "warmup": PARTIAL_WARMUP,
+        "seed": PARTIAL_SEED, "overhead_s": Q_OVERHEAD,
+    }
+    if sweep == "partial_sweep":
+        with enable_x64():
+            partial_sweep = _run_partial_sweep()
+        return {"config": {"partial_sweep": partial_config},
+                "partial_sweep": partial_sweep}
     with enable_x64():
         regimes = [_run_regime(L, S, seed=17 + S)
                    for L in (L_SMALL, L_LARGE)
@@ -373,6 +487,7 @@ def run() -> dict:
         quantile_sweep = _run_quantile_sweep()
         scenario_sweep = _run_scenario_sweep()
         feedback_sweep = _run_feedback_sweep()
+        partial_sweep = _run_partial_sweep()
         exhausted = _run_exhausted(seed=29)
     return {
         "config": {
@@ -393,13 +508,48 @@ def run() -> dict:
                 "seeds": list(FB_SEEDS), "scenario": "heavy_tail",
                 "overhead_s": Q_OVERHEAD, "config": FB_CONFIG,
             },
+            "partial_sweep": partial_config,
         },
         "regimes": regimes,
         "quantile_sweep": quantile_sweep,
         "scenario_sweep": scenario_sweep,
         "feedback_sweep": feedback_sweep,
+        "partial_sweep": partial_sweep,
         "exhausted": exhausted,
     }
+
+
+def check_partial(rows: list) -> None:
+    """Acceptance gates of the partial sweep (also run under ``--check``).
+
+    Partial must never lose to binary erasure on realized p99 (the plan
+    construction guarantees it is never slower), must beat it STRICTLY
+    under ``heavy_tail`` and ``pareto`` (more flagged stragglers than the
+    narrow budget — the regime sub-tasking exists for), must actually
+    consume fractions, keep every decode exact and recompile-free, and
+    the Q=1 path must be bit-identical to the legacy mask path.
+    """
+    by_name = {row["scenario"]: row for row in rows}
+    assert {"heavy_tail", "pareto"} <= set(by_name), (
+        f"partial sweep missing its win regimes: {sorted(by_name)}")
+    for row in rows:
+        binary, partial = row["binary"], row["partial"]
+        for side in (binary, partial):
+            assert side["all_exact"], f"inexact partial-sweep decode: {row}"
+            assert side["builds_final"] == side["builds_prewarm"], (
+                f"recompile after prewarm in partial sweep: {row}")
+        assert row["q1_bit_identical"], (
+            f"Q=1 partial decode diverged from the legacy mask path: {row}")
+        assert partial["p99_s"] <= binary["p99_s"] * 1.001, (
+            f"partial LOST to binary erasure on p99 at "
+            f"{row['scenario']}: {row}")
+        assert partial["fractional_consumptions"] > 0, (
+            f"partial server never consumed a fraction at "
+            f"{row['scenario']}: {row}")
+    for name in ("heavy_tail", "pareto"):
+        row = by_name[name]
+        assert row["partial"]["p99_s"] < 0.95 * row["binary"]["p99_s"], (
+            f"partial did not STRICTLY beat binary p99 under {name}: {row}")
 
 
 def check(result: dict) -> None:
@@ -480,20 +630,51 @@ def check(result: dict) -> None:
     assert reduced > 0, (
         "feedback never strictly reduced realized SLO violations vs the "
         f"static-q policy: {result['feedback_sweep']}")
+    check_partial(result["partial_sweep"])
+
+
+def _print_partial(rows: list) -> None:
+    for row in rows:
+        b, p = row["binary"], row["partial"]
+        print(f"partial {row['scenario']:<12} binary p99 {b['p99_s']:6.2f} s "
+              f"vs Q={p['sub_tasks']} p99 {p['p99_s']:6.2f} s "
+              f"(p50 {b['p50_s']:5.2f} -> {p['p50_s']:5.2f} s, "
+              f"{p['fractional_consumptions']} fractional consumptions, "
+              f"q1 parity {row['q1_bit_identical']})")
 
 
 def main(argv=None, save: str = "BENCH_control.json"):
     import argparse
 
     ap = argparse.ArgumentParser()
+    ap.add_argument("sweep", nargs="?", default="all",
+                    choices=["all", "partial_sweep"],
+                    help="which sweep to run: the full bench (default) or "
+                         "only the binary-vs-partial comparison")
     ap.add_argument("--check", action="store_true",
                     help="assert the acceptance criteria (CI smoke)")
     args = ap.parse_args(argv)
 
-    result = run()
+    result = run(args.sweep)
     out = Path(__file__).resolve().parents[1] / save
-    out.write_text(json.dumps(result, indent=2) + "\n")
+    # merge-append: a single-sweep run updates its keys in the existing
+    # file instead of discarding the other sweeps' rows.
+    merged = result
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except ValueError:
+            merged = {}
+        merged.setdefault("config", {}).update(result["config"])
+        merged.update({k: v for k, v in result.items() if k != "config"})
+    out.write_text(json.dumps(merged, indent=2) + "\n")
     print(f"wrote {out}")
+    if args.sweep == "partial_sweep":
+        _print_partial(result["partial_sweep"])
+        if args.check:
+            check_partial(result["partial_sweep"])
+            print("control bench partial check: OK")
+        return result
     for row in result["regimes"]:
         static = {r: round(s, 3) for r, s in row["static_s"].items()}
         print(f"L={row['L']:>6} S={row['stragglers']}: "
@@ -515,6 +696,7 @@ def main(argv=None, save: str = "BENCH_control.json"):
               f"violations {row['violations']:2d}/{row['steps']} "
               f"p50 {row['p50_s']:5.2f} s  p99 {row['p99_s']:5.2f} s "
               f"(rungs {row['rungs']})")
+    _print_partial(result["partial_sweep"])
     ex = result["exhausted"]
     print(f"exhausted-budget handoff: {ex['respecializations']} "
           f"respecialisations -> shrink {ex['shrink_target']}")

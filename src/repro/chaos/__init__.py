@@ -4,8 +4,8 @@ The behavioural test substrate of the control plane (DESIGN Sec. 9):
 
     scenarios.py   declarative ``Scenario`` DSL + registry — straggler
                    regimes (iid, heavy/Pareto tails, bursts, flapping,
-                   rack failure, pool resize) compiled into deterministic
-                   seeded ``TimeFeed``s
+                   rack failure, pool resize, crawlers, degrading ramps)
+                   compiled into deterministic seeded ``TimeFeed``s
     trace.py       ``TraceRecorder``/``Trace`` — capture per-step worker
                    times + ``StepReport`` streams as JSONL and replay them
                    bit-deterministically
@@ -20,6 +20,8 @@ serves through a ladder.
 from repro.chaos.scenarios import (
     BurstySlowdown,
     CorrelatedRackFailure,
+    Crawler,
+    Degrading,
     FlappingWorkers,
     HeavyTailMixture,
     IIDShiftedExponential,
@@ -47,6 +49,8 @@ __all__ = [
     "FlappingWorkers",
     "CorrelatedRackFailure",
     "PoolResize",
+    "Crawler",
+    "Degrading",
     "register",
     "make_scenario",
     "scenario_names",

@@ -12,7 +12,9 @@ changed).
 Catalog: every registered scenario under its own name, plus
 ``pareto_feedback`` — the Pareto-tail regime served WITH observed-
 violation feedback, so the feedback control law itself is pinned by a
-golden trace too.
+golden trace too — and ``crawler_partial`` — the crawler regime served
+with ``sub_tasks=4``, pinning the fractional progress plans partial
+decoding emits.
 """
 from __future__ import annotations
 
@@ -40,11 +42,12 @@ GOLDEN_OVERHEAD_S = {"bec": 2.0, "tradeoff(p'=2)": 1.0, "polycode": 0.1}
 _SLO_QUANTILE = 0.99
 _SLO_S = 4.0                     # bound the predictive fallback is judged by
 _FEEDBACK_SLO_S = 2.5            # tighter bound for the feedback variant
+_PARTIAL_SUB_TASKS = 4           # Q of the crawler_partial variant
 
 
 def golden_names() -> Tuple[str, ...]:
-    """Catalog keys: every registered scenario + the feedback variant."""
-    return scenario_names() + ("pareto_feedback",)
+    """Catalog keys: every scenario + the feedback and partial variants."""
+    return scenario_names() + ("pareto_feedback", "crawler_partial")
 
 
 def _request(dtype):
@@ -68,16 +71,18 @@ def _serve(key: str, feed, steps: int):
     )
 
     feedback = key == "pareto_feedback"
+    sub_tasks = _PARTIAL_SUB_TASKS if key == "crawler_partial" else 1
     p, m, n = GOLDEN_GRID
     ladder = PlanLadder(p, m, n, K=GOLDEN_K, L=GOLDEN_L,
                         backend="reference", dtype=jnp.float64)
-    ladder.prewarm(*GOLDEN_SHAPES)
-    policy = ExpectedLatencyPolicy(ladder, overhead_s=GOLDEN_OVERHEAD_S)
+    ladder.prewarm(*GOLDEN_SHAPES, sub_tasks=sub_tasks)
+    policy = ExpectedLatencyPolicy(ladder, overhead_s=GOLDEN_OVERHEAD_S,
+                                   sub_tasks=sub_tasks)
     server = AdaptiveServer(
         ladder, policy=policy, feed=feed, check_exact=True,
         slo_quantile=_SLO_QUANTILE,
         slo_s=_FEEDBACK_SLO_S if feedback else _SLO_S,
-        feedback=feedback)
+        feedback=feedback, sub_tasks=sub_tasks)
     A, B = _request(jnp.float64)
     return server.run(steps, lambda i: (A, B))
 
@@ -92,13 +97,16 @@ def golden_trace(key: str, steps: int = GOLDEN_STEPS,
     if key not in golden_names():
         raise KeyError(f"unknown golden key {key!r}; have {golden_names()}")
     feedback = key == "pareto_feedback"
-    scenario_name = "pareto" if feedback else key
+    scenario_name = {"pareto_feedback": "pareto",
+                     "crawler_partial": "crawler"}.get(key, key)
     scenario = make_scenario(scenario_name)
     recorder = TraceRecorder(
         scenario.compile(GOLDEN_K, seed=seed), GOLDEN_K,
         meta={"scenario": scenario_name, "seed": seed, "steps": steps,
               "grid": list(GOLDEN_GRID), "L": GOLDEN_L,
-              "feedback": feedback})
+              "feedback": feedback,
+              "sub_tasks": (_PARTIAL_SUB_TASKS
+                            if key == "crawler_partial" else 1)})
     reports = _serve(key, recorder, steps)
     return recorder.finish(reports)
 

@@ -45,6 +45,8 @@ __all__ = [
     "FlappingWorkers",
     "CorrelatedRackFailure",
     "PoolResize",
+    "Crawler",
+    "Degrading",
     "register",
     "make_scenario",
     "scenario_names",
@@ -421,3 +423,74 @@ class PoolResize(Scenario):
         """Nobody leaves, everybody already joined."""
         return dataclasses.replace(self, num_departing=0, num_arriving=0,
                                    join_step=None)
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class Crawler(Scenario):
+    """Persistently slow workers that never die — partial decoding's regime.
+
+    ``num_crawlers`` seed-fixed workers run at a steady ``crawl_factor`` x
+    base with mild ``crawl_jitter`` tails: slow enough that waiting for
+    them dominates a step, but reliably PRODUCTIVE — each still completes
+    a useful fraction of its block in the time the healthy pool finishes.
+    Binary erasure throws that fraction away (and with more crawlers than
+    the rung's budget, cannot mask them all); partial-straggler
+    sub-tasking (``sub_tasks > 1``) consumes their chunk prefixes instead.
+    """
+
+    name: ClassVar[str] = "crawler"
+    base: float = 1.0
+    healthy_jitter: float = 0.05
+    num_crawlers: int = 4
+    crawl_factor: float = 1.8
+    crawl_jitter: float = 0.15
+
+    def times(self, step: int, K: int, seed: int) -> np.ndarray:
+        """Per-worker times; the seed-fixed crawler set stays slow forever."""
+        crawlers = self._pick(K, self.num_crawlers, seed, 0)
+        base = np.full(K, self.base)
+        jitter = np.full(K, self.healthy_jitter)
+        base[crawlers] *= self.crawl_factor
+        jitter[crawlers] = self.crawl_jitter
+        return self._shifted_exp(step, K, seed, base, jitter)
+
+    def calm(self) -> "Crawler":
+        """No crawlers; healthy jitter only."""
+        return dataclasses.replace(self, num_crawlers=0)
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class Degrading(Scenario):
+    """Workers that slow down progressively but keep producing.
+
+    ``num_degrading`` seed-fixed workers run at
+    ``min(1 + rate * step, max_factor)`` x base — a thermal-throttling /
+    leaking-neighbour ramp.  Early on they are indistinguishable from
+    healthy; by the time the monitor flags them they are far too slow to
+    wait for yet still finish a useful prefix per step, so erasing them
+    outright discards real work every step for the rest of the run.
+    """
+
+    name: ClassVar[str] = "degrading"
+    base: float = 1.0
+    healthy_jitter: float = 0.05
+    num_degrading: int = 3
+    rate: float = 0.08
+    max_factor: float = 3.0
+    degrade_jitter: float = 0.2
+
+    def times(self, step: int, K: int, seed: int) -> np.ndarray:
+        """Per-worker times with the ramped slowdown applied at ``step``."""
+        degrading = self._pick(K, self.num_degrading, seed, 0)
+        base = np.full(K, self.base)
+        jitter = np.full(K, self.healthy_jitter)
+        factor = min(1.0 + self.rate * step, self.max_factor)
+        base[degrading] *= factor
+        jitter[degrading] = self.degrade_jitter
+        return self._shifted_exp(step, K, seed, base, jitter)
+
+    def calm(self) -> "Degrading":
+        """Nobody degrades; healthy jitter only."""
+        return dataclasses.replace(self, num_degrading=0)

@@ -3,8 +3,9 @@
 A trace is a JSONL file: one header line, then one line per serving step
 carrying BOTH sides of the control loop — the (K,) per-worker finish
 times the feed produced AND the deterministic fields of the resulting
-``StepReport`` (rung choice, mask, modelled latency, predicted/realized
-tails, feedback quantile; everything except wall-clock noise).  Python's
+``StepReport`` (rung choice, mask, fractional progress plan, modelled
+latency, predicted/realized tails, feedback quantile and threshold;
+everything except wall-clock noise).  Python's
 ``json`` serialises floats at shortest round-trip precision, so float64
 values survive the file boundary bit-exactly.
 
@@ -58,7 +59,8 @@ TRACE_VERSION = 1
 COMPARED_FIELDS = (
     "rung", "switched", "erased", "sim_latency_s", "slack", "respecialize",
     "shrink_target", "exact", "slo_violation", "predicted_tail_s",
-    "realized_s", "realized_violation", "q_effective",
+    "realized_s", "realized_violation", "q_effective", "progress",
+    "threshold_effective",
 )
 
 
@@ -81,6 +83,10 @@ class TraceStep:
     realized_s: Optional[float]
     realized_violation: bool
     q_effective: Optional[float]
+    #: fractional per-worker progress plan (partial serving; None when Q=1).
+    progress: Optional[Tuple[float, ...]] = None
+    #: feedback-adjusted flagging threshold (None without feedback).
+    threshold_effective: Optional[float] = None
 
     @classmethod
     def from_report(cls, report: StepReport,
@@ -103,6 +109,9 @@ class TraceStep:
             realized_s=report.realized_s,
             realized_violation=report.realized_violation,
             q_effective=report.q_effective,
+            progress=(tuple(float(x) for x in report.progress)
+                      if report.progress is not None else None),
+            threshold_effective=report.threshold_effective,
         )
 
 
@@ -192,6 +201,8 @@ class Trace:
             rec["erased"] = tuple(rec["erased"])
             if rec["shrink_target"] is not None:
                 rec["shrink_target"] = tuple(rec["shrink_target"])
+            if rec.get("progress") is not None:
+                rec["progress"] = tuple(rec["progress"])
             steps.append(TraceStep(**rec))
         return cls(K=int(header["K"]), meta=dict(header.get("meta", {})),
                    steps=tuple(steps))

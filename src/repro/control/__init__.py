@@ -18,15 +18,19 @@ the paper's L <-> tau ladder:
                           CodedElasticPolicy handoff when the erasure
                           budget is exhausted                 (driver.py)
     ViolationFeedback     sliding-window REALIZED-violation tracker that
-                          tightens/loosens the prediction quantile and can
-                          force the tail-optimal rung        (feedback.py)
+                          tightens/loosens the prediction quantile, adapts
+                          the flagging threshold, and can force the
+                          tail-optimal rung                  (feedback.py)
+    plan_partial_progress fractional progress plans: consume chunk
+                          prefixes from flagged stragglers   (partial.py)
 
-See DESIGN.md Sec. 7-9 and docs/architecture.md.
+See DESIGN.md Sec. 7-10 and docs/architecture.md.
 """
 from repro.control.driver import AdaptiveServer, StepReport
 from repro.control.feedback import FeedbackConfig, ViolationFeedback
 from repro.control.ladder import PlanLadder
 from repro.control.monitor import WorkerHealthMonitor
+from repro.control.partial import plan_partial_progress
 from repro.control.policy import (
     ExpectedLatencyPolicy,
     Policy,
@@ -45,4 +49,5 @@ __all__ = [
     "ExpectedLatencyPolicy",
     "QuantileLatencyPolicy",
     "RungEstimate",
+    "plan_partial_progress",
 ]

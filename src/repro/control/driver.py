@@ -68,6 +68,8 @@ class StepReport:
     realized_s: Optional[float] = None        # realized latency the feedback judged
     realized_violation: bool = False          # realized latency exceeded the SLO
     q_effective: Optional[float] = None       # feedback-adjusted quantile this step
+    progress: Optional[Tuple[float, ...]] = None  # partial plan (sub_tasks > 1)
+    threshold_effective: Optional[float] = None   # adaptive monitor threshold
 
 
 class AdaptiveServer:
@@ -102,11 +104,20 @@ class AdaptiveServer:
             overhead) is judged against ``slo_s``; the realized violation
             rate tightens/loosens the quantile all predictions are stated
             at, and ``force_after`` consecutive misses force the
-            tail-optimal rung regardless of prediction.
+            tail-optimal rung regardless of prediction.  The same window
+            also adapts the monitor's flagging threshold
+            (``effective_threshold``): realized misses tighten flagging,
+            calm windows relax it back to ``score_threshold``.
+        sub_tasks: sub-task count Q per worker.  With ``Q > 1`` each step
+            serves through the partial-straggler decode: the monitor's
+            ``progress_plan`` consumes completed chunk prefixes from
+            flagged stragglers instead of erasing them outright, and both
+            policies rank rungs under the refined fractional law.  ``Q=1``
+            is the legacy binary loop, bit for bit.
 
     Raises:
-        ValueError: if ``slo_s`` is given without ``slo_quantile``, or
-            ``feedback`` without both.
+        ValueError: if ``slo_s`` is given without ``slo_quantile``,
+            ``feedback`` without both, or ``sub_tasks < 1``.
     """
 
     def __init__(self, ladder: PlanLadder, *,
@@ -120,13 +131,17 @@ class AdaptiveServer:
                  check_exact: bool = False,
                  slo_quantile: Optional[float] = None,
                  slo_s: Optional[float] = None,
-                 feedback: Union[bool, FeedbackConfig, None] = None):
+                 feedback: Union[bool, FeedbackConfig, None] = None,
+                 sub_tasks: int = 1):
         if slo_s is not None and slo_quantile is None:
             raise ValueError("slo_s needs slo_quantile (the quantile the "
                              "SLO is stated at)")
         if feedback and (slo_quantile is None or slo_s is None):
             raise ValueError("feedback needs slo_quantile AND slo_s (it "
                              "judges realized latencies against the bound)")
+        if sub_tasks < 1:
+            raise ValueError(f"need sub_tasks >= 1, got {sub_tasks}")
+        self.sub_tasks = int(sub_tasks)
         self.ladder = ladder
         self.monitor = monitor or WorkerHealthMonitor(ladder.K)
         self.slo_policy: Optional[QuantileLatencyPolicy] = None
@@ -135,10 +150,11 @@ class AdaptiveServer:
             # SLO fallback and the primary ranking price rungs identically.
             self.slo_policy = QuantileLatencyPolicy(
                 ladder, q=slo_quantile, score_threshold=score_threshold,
-                overhead_s=getattr(policy, "overhead_s", None))
+                overhead_s=getattr(policy, "overhead_s", None),
+                sub_tasks=sub_tasks)
         if policy is None:
             policy = self.slo_policy or ExpectedLatencyPolicy(
-                ladder, score_threshold=score_threshold)
+                ladder, score_threshold=score_threshold, sub_tasks=sub_tasks)
         self.policy = policy
         self.slo_s = slo_s
         self.feedback: Optional[ViolationFeedback] = None
@@ -196,6 +212,8 @@ class AdaptiveServer:
         slo_violation = False
         predicted_tail = None
         q_eff = None
+        thr = self.score_threshold
+        thr_eff = None
         if self.feedback is not None:
             # realized violations re-state the quantile every prediction
             # this step is made at (selection, tail estimate, fallback) —
@@ -206,6 +224,14 @@ class AdaptiveServer:
             if (self.policy is not self.slo_policy
                     and isinstance(self.policy, QuantileLatencyPolicy)):
                 self.policy.q = q_eff
+            # ...and re-state the flagging threshold the masks/plans and
+            # both policies' victim sets are computed at: misses tighten
+            # flagging, calm windows relax it back to the configured base.
+            thr = thr_eff = self.feedback.effective_threshold(
+                self.score_threshold)
+            for p in (self.policy, self.slo_policy):
+                if p is not None and hasattr(p, "score_threshold"):
+                    p.score_threshold = thr
         # a cold monitor ranks on noise: hold the initial rung until the
         # EWMA estimates have min_history steps behind them (same gating
         # the monitor applies to its erasure mask).
@@ -248,13 +274,22 @@ class AdaptiveServer:
                     switched = True
                     predicted_tail = forced.quantile_latency_s
 
-        budget = self.ladder.budget(self.ladder.active)
-        mask = self.monitor.erasure_mask(budget, self.score_threshold)
+        progress = None
+        if self.sub_tasks > 1:
+            # fractional generalisation of the erasure mask: flagged
+            # workers contribute completed chunk prefixes instead of being
+            # erased outright (or waited on in full past the budget).
+            progress = self.monitor.progress_plan(
+                self.sub_tasks, self.ladder.tau(self.ladder.active), thr)
+            mask = (progress > 0).astype(np.float64)
+        else:
+            budget = self.ladder.budget(self.ladder.active)
+            mask = self.monitor.erasure_mask(budget, thr)
         self.elastic.observe_mask(mask)
 
         # ladder-wide exhaustion: more persistent stragglers than even the
         # widest-budget FEASIBLE rung can erase -> respecialisation handoff.
-        flagged = self.monitor.stragglers(self.score_threshold).size
+        flagged = self.monitor.stragglers(thr).size
         max_budget = max((self.ladder.budget(r) for r in self.ladder.rungs
                           if self.policy.feasible(r)), default=0)
         respecialize = flagged > max_budget and self.elastic.must_respecialize
@@ -267,7 +302,11 @@ class AdaptiveServer:
                 shrink_target = None  # not even a 1x1 mesh left
 
         t0 = time.perf_counter()
-        C = self.ladder(A, B, mask=mask)
+        if progress is not None:
+            C = self.ladder(A, B, progress=progress,
+                            sub_tasks=self.sub_tasks)
+        else:
+            C = self.ladder(A, B, mask=mask)
         jax.block_until_ready(C)
         wall_ms = (time.perf_counter() - t0) * 1e3
 
@@ -276,7 +315,9 @@ class AdaptiveServer:
             exact = bool(np.array_equal(np.asarray(C),
                                         np.asarray(uncoded_matmul(A, B))))
 
-        sim_latency = WorkerTimes(times).completion_with_mask(mask)
+        sim_latency = (WorkerTimes(times).completion_with_progress(progress)
+                       if progress is not None
+                       else WorkerTimes(times).completion_with_mask(mask))
         realized = None
         realized_violation = False
         if self.feedback is not None:
@@ -303,6 +344,9 @@ class AdaptiveServer:
             realized_s=realized,
             realized_violation=realized_violation,
             q_effective=q_eff,
+            progress=(None if progress is None
+                      else tuple(float(x) for x in progress)),
+            threshold_effective=thr_eff,
         )
         self.reports.append(report)
         self.steps += 1

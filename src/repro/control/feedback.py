@@ -54,6 +54,11 @@ class FeedbackConfig:
     force_after:      consecutive realized violations that assert
                       ``force_tail_optimal``.
     target_rate:      tolerated violation rate; None = ``1 - q_base``.
+    threshold_gain:   d(threshold) per unit of excess violation rate for the
+                      monitor's straggler-score threshold (see
+                      :meth:`ViolationFeedback.effective_threshold`).
+    threshold_min:    floor of the adaptive score threshold — the law never
+                      tightens flagging below this (0 would flag everyone).
     """
 
     window: int = 16
@@ -63,6 +68,8 @@ class FeedbackConfig:
     min_observations: int = 4
     force_after: int = 3
     target_rate: Optional[float] = None
+    threshold_gain: float = 1.0
+    threshold_min: float = 0.1
 
     def __post_init__(self):
         """Validate the configuration ranges."""
@@ -85,6 +92,12 @@ class FeedbackConfig:
                 f"window={self.window}; the feedback law could never engage")
         if self.target_rate is not None and not 0.0 <= self.target_rate <= 1.0:
             raise ValueError(f"target_rate={self.target_rate} outside [0, 1]")
+        if self.threshold_gain < 0:
+            raise ValueError(
+                f"threshold_gain must be >= 0, got {self.threshold_gain}")
+        if not 0.0 < self.threshold_min <= 1.0:
+            raise ValueError(
+                f"threshold_min={self.threshold_min} outside (0, 1]")
 
 
 class ViolationFeedback:
@@ -161,3 +174,29 @@ class ViolationFeedback:
         excess = self.realized_rate - self.target_rate
         return float(np.clip(self.q_base + self.config.gain * excess,
                              lo, self.config.q_max))
+
+    def effective_threshold(self, base: float) -> float:
+        """The feedback-adjusted straggler-score threshold for the monitor.
+
+        The mirror image of :meth:`effective_q` for
+        ``WorkerHealthMonitor``'s flagging threshold: excess realized
+        violations LOWER the threshold (flag borderline-slow workers
+        sooner, so the next mask/progress plan stops waiting on them); a
+        clean window relaxes it back toward ``base``.  Monotone
+        NON-INCREASING in :attr:`realized_rate`; equals ``base`` until the
+        window holds ``min_observations`` steps, and never moves above
+        ``base`` (relaxing beyond the configured threshold would erase
+        nobody the operator asked to keep).
+
+        Args:
+            base: the configured threshold (``--monitor-threshold``).
+
+        Returns:
+            The clipped threshold in ``[min(threshold_min, base), base]``.
+        """
+        if len(self._window) < self.config.min_observations:
+            return float(base)
+        lo = min(self.config.threshold_min, float(base))
+        excess = self.realized_rate - self.target_rate
+        return float(np.clip(
+            float(base) - self.config.threshold_gain * excess, lo, float(base)))

@@ -185,7 +185,8 @@ class PlanLadder:
 
     # -- compilation --------------------------------------------------------
     def prewarm(self, a_shape: Sequence[int], b_shape: Sequence[int],
-                reps: int = 1, batch_sizes: Sequence[int] = ()) -> dict:
+                reps: int = 1, batch_sizes: Sequence[int] = (),
+                sub_tasks: int = 1) -> dict:
         """Compile every rung for one problem shape; measure warm step cost.
 
         One call per rung with the full-survivor concrete pattern builds the
@@ -202,6 +203,12 @@ class PlanLadder:
                 rung (batched A, shared B).  Later batched calls round up
                 to the smallest covering bucket, so serving stays
                 recompile-free across batch sizes up to the largest bucket.
+            sub_tasks: when > 1, additionally compile each rung's
+                partial-straggler executable for Q = ``sub_tasks`` (and per
+                bucket), so serving with fractional progress is as
+                recompile-free as binary serving — any concrete progress
+                vector is pure data against the one ("partial", Q)
+                executable.
 
         Returns:
             ``cache_info()`` plus the measured ``overhead_s`` per rung.
@@ -221,9 +228,13 @@ class PlanLadder:
             for _ in range(reps):
                 jax.block_until_ready(cm(A, B, erased=[]))
             self.step_overhead_s[rung] = (time.perf_counter() - t0) / reps
+            if sub_tasks > 1:
+                jax.block_until_ready(cm(A, B, sub_tasks=sub_tasks))
             for bucket in self._buckets:
                 Ab = jnp.zeros((bucket,) + tuple(a_shape), self.dtype)
                 jax.block_until_ready(cm(Ab, B, erased=[]))
+                if sub_tasks > 1:
+                    jax.block_until_ready(cm(Ab, B, sub_tasks=sub_tasks))
         info = self.cache_info()
         info["overhead_s"] = dict(self.step_overhead_s)
         info["batch_buckets"] = self._buckets

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.control.partial import plan_partial_progress
 from repro.core.simulator import LatencyModel
 
 __all__ = ["WorkerHealthMonitor"]
@@ -113,6 +114,23 @@ class WorkerHealthMonitor:
         victims = self.stragglers(threshold)[:budget]
         mask[victims] = 0.0
         return mask
+
+    def progress_plan(self, Q: int, tau: int,
+                      threshold: float = 0.5) -> np.ndarray:
+        """(K,) fractional progress for the NEXT step's partial decode.
+
+        The fractional generalisation of :meth:`erasure_mask`: flagged
+        workers start at zero chunks, and ``plan_partial_progress`` raises
+        counts only where a chunk would be undercovered — so whenever the
+        binary mask leaves a decodable survivor set the plan EQUALS that
+        mask, and when flagging exceeds the erasure budget the cheapest
+        slices of straggler work are consumed instead of waiting on full
+        straggler steps.  A cold monitor emits all-ones (wait for all).
+        """
+        if self.steps < self.min_history:
+            return np.ones(self.K, dtype=np.float64)
+        return plan_partial_progress(np.maximum(self._mean, 1e-12),
+                                     self.stragglers(threshold), Q, tau)
 
     def fitted_model(self, fallback_base: float = 1.0) -> LatencyModel:
         """Per-worker ``LatencyModel`` from the EWMA estimates.

@@ -1,0 +1,86 @@
+"""Progress planning: how much work to consume from flagged stragglers.
+
+The binary control plane erases a flagged worker outright — the step then
+never waits on it.  With sub-tasking (``runtime/partial.py``) there is a
+middle ground: ask a flagged worker for a PREFIX of its chunks, paying
+``q/Q`` of its (slow) finish time for ``q/Q`` of its coded rows.
+
+The planner here starts from the binary decision (flagged workers at zero
+chunks — never slower than erasure) and only raises a flagged worker's
+chunk count when a chunk would otherwise be UNDERCOVERED (fewer than tau
+contributors).  Each repair picks the assignment minimising the resulting
+wait ``(counts_k + need) / Q * mean_k``, so the refined plan degrades
+gracefully: when the healthy pool spans the system the plan IS the binary
+mask, and when it does not, the cheapest slices of straggler work are
+consumed instead of failing over to a full synchronous wait.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.runtime.partial import chunk_coverage
+
+__all__ = ["plan_partial_progress"]
+
+
+def plan_partial_progress(mean_s, flagged: Sequence[int], Q: int,
+                          tau: int) -> np.ndarray:
+    """Per-worker progress plan in [0, 1] covering every chunk tau times.
+
+    Args:
+        mean_s: (K,) per-worker mean step latencies (the monitor's EWMA) —
+            the cost model for choosing WHICH straggler's chunks to consume.
+        flagged: worker ids the monitor would erase (start at 0 chunks;
+            healthy workers run all Q).
+        Q: sub-task count per worker.
+        tau: the active rung's recovery threshold.
+
+    Returns:
+        (K,) progress vector, multiples of ``1/Q``.  Equals the binary
+        erasure mask whenever the healthy pool alone spans the system.
+
+    Raises:
+        ValueError: on a bad shape/ids, non-positive means, or ``tau > K``
+            (no progress assignment can cover a chunk tau times).
+    """
+    mean = np.asarray(mean_s, dtype=np.float64)
+    if mean.ndim != 1 or mean.size == 0:
+        raise ValueError(f"mean_s must be a (K,) vector, got {np.shape(mean_s)}")
+    K = mean.shape[0]
+    if not np.all(np.isfinite(mean)) or np.any(mean <= 0):
+        raise ValueError(f"per-worker means must be positive, got {mean.tolist()}")
+    if Q < 1:
+        raise ValueError(f"need Q >= 1 sub-tasks, got {Q}")
+    if tau > K:
+        raise ValueError(f"tau={tau} > K={K}: no plan can span the system")
+    ids = [int(i) for i in flagged]
+    if len(set(ids)) != len(ids):
+        raise ValueError(f"duplicate worker ids in flagged: {ids}")
+    for i in ids:
+        if not 0 <= i < K:
+            raise ValueError(f"flagged id {i} out of range for K={K}")
+
+    counts = np.full(K, Q, dtype=np.int64)
+    counts[ids] = 0
+    while True:
+        cov = chunk_coverage(counts, Q)
+        deficient = np.flatnonzero(cov < tau)
+        if not deficient.size:
+            break
+        # repair the worst-covered chunk first
+        c = int(deficient[np.argmin(cov[deficient])])
+        best_k, best_need, best_wait = -1, 0, np.inf
+        for k in range(K):
+            d = (c - k) % Q  # chunk c is worker k's (d+1)-th sub-task
+            if counts[k] > d:
+                continue  # already covers chunk c
+            need = d + 1 - counts[k]
+            wait = (counts[k] + need) / Q * mean[k]
+            if wait < best_wait:
+                best_k, best_need, best_wait = k, need, wait
+        # a candidate always exists while cov[c] < tau <= K: any worker not
+        # covering chunk c can be extended to it.
+        counts[best_k] += best_need
+    return counts.astype(np.float64) / Q

@@ -41,6 +41,7 @@ from repro.core.simulator import (
     masked_completion_quantile,
 )
 from repro.control.ladder import PlanLadder
+from repro.control.partial import plan_partial_progress
 
 __all__ = [
     "RungEstimate",
@@ -63,6 +64,7 @@ class RungEstimate:
     unmasked_stragglers: int    # flagged stragglers the budget could NOT cover
     quantile: Optional[float] = None           # q of the tail estimate, if any
     quantile_latency_s: Optional[float] = None  # q-quantile completion + overhead
+    progress: Optional[Tuple[float, ...]] = None  # partial plan (sub_tasks > 1)
 
     @property
     def metric_s(self) -> float:
@@ -113,12 +115,15 @@ class _LatencyPolicyBase:
     def __init__(self, ladder: PlanLadder, *,
                  overhead_s: Optional[Mapping[str, float]] = None,
                  trials: int = 64, seed: int = 0,
-                 score_threshold: float = 0.5):
+                 score_threshold: float = 0.5, sub_tasks: int = 1):
+        if sub_tasks < 1:
+            raise ValueError(f"need sub_tasks >= 1, got {sub_tasks}")
         self.ladder = ladder
         self.overhead_s = dict(overhead_s) if overhead_s is not None else None
         self.trials = trials
         self.seed = seed
         self.score_threshold = score_threshold
+        self.sub_tasks = int(sub_tasks)
 
     # -- feasibility (the L gate) -------------------------------------------
     def feasible(self, rung: str) -> bool:
@@ -140,23 +145,29 @@ class _LatencyPolicyBase:
         """
         return self._overhead(rung)
 
-    def _victims(self, rung: str, scores: Optional[np.ndarray]) -> Tuple[np.ndarray, int]:
-        """(workers the rung's mask would erase, flagged-but-unmasked count)."""
+    def _all_flagged(self, scores: Optional[np.ndarray]) -> np.ndarray:
+        """Every worker scoring above threshold, worst first."""
         if scores is None:
-            return np.empty(0, dtype=np.int64), 0
+            return np.empty(0, dtype=np.int64)
         scores = np.asarray(scores, dtype=np.float64)
         flagged = np.flatnonzero(scores > self.score_threshold)
-        flagged = flagged[np.argsort(-scores[flagged], kind="stable")]
+        return flagged[np.argsort(-scores[flagged], kind="stable")]
+
+    def _victims(self, rung: str, scores: Optional[np.ndarray]) -> Tuple[np.ndarray, int]:
+        """(workers the rung's mask would erase, flagged-but-unmasked count)."""
+        flagged = self._all_flagged(scores)
         budget = self.ladder.budget(rung)
         return flagged[:budget], max(0, flagged.size - budget)
 
-    def _completions(self, mask: np.ndarray, model: LatencyModel) -> np.ndarray:
-        """Per-trial masked step completions sampled from ``model``.
+    def _completions(self, weights: np.ndarray, model: LatencyModel) -> np.ndarray:
+        """Per-trial step completions under ``weights`` sampled from ``model``.
 
-        A deterministic model (no jitter) needs a single sample; the rng is
-        re-seeded per call so every rung (and every policy sharing a seed)
-        sees the SAME sample paths — rankings then compare nested survivor
-        sets on identical draws, never sampling noise.
+        ``weights`` is the 0/1 survivor mask (binary policies) or the
+        fractional progress plan (``sub_tasks > 1``).  A deterministic
+        model (no jitter) needs a single sample; the rng is re-seeded per
+        call so every rung (and every policy sharing a seed) sees the SAME
+        sample paths — rankings then compare nested survivor sets on
+        identical draws, never sampling noise.
         """
         rng = np.random.default_rng(self.seed)
         trials = self.trials if model.has_jitter else 1
@@ -164,13 +175,34 @@ class _LatencyPolicyBase:
         lat = np.empty(trials)
         for t in range(trials):
             times = WorkerTimes(model.sample(K, (), rng))
-            lat[t] = times.completion_with_mask(mask)
+            lat[t] = (times.completion_with_progress(weights)
+                      if self.sub_tasks > 1
+                      else times.completion_with_mask(weights))
         return lat
 
     def estimate(self, rung: str, model: LatencyModel,
                  scores: Optional[np.ndarray] = None) -> RungEstimate:
-        """Latency estimate for serving the next step on ``rung``."""
+        """Latency estimate for serving the next step on ``rung``.
+
+        With ``sub_tasks > 1`` the rung is priced under the REFINED law: the
+        flagged stragglers' progress plan (``plan_partial_progress``) sets
+        fractional waits, so a slow worker's expected contribution is no
+        longer zero and the estimate carries the plan in ``progress``.
+        """
         victims, unmasked = self._victims(rung, scores)
+        if self.sub_tasks > 1:
+            flagged = self._all_flagged(scores)
+            K = self.ladder.K
+            mean_s = np.maximum(
+                model.base_vector(K) * (1.0 + model.jitter_vector(K)), 1e-12)
+            progress = plan_partial_progress(
+                mean_s, flagged, self.sub_tasks, self.ladder.tau(rung))
+            victims = np.asarray([i for i in flagged if progress[i] == 0.0],
+                                 dtype=np.int64)
+            est = self._masked_estimate(rung, model, progress, victims,
+                                        unmasked)
+            return dataclasses.replace(
+                est, progress=tuple(float(x) for x in progress))
         mask = np.ones(self.ladder.K, dtype=np.float64)
         mask[victims] = 0.0
         return self._masked_estimate(rung, model, mask, victims, unmasked)
@@ -265,11 +297,12 @@ class QuantileLatencyPolicy(_LatencyPolicyBase):
                  analytic: bool = True,
                  overhead_s: Optional[Mapping[str, float]] = None,
                  trials: int = 64, seed: int = 0,
-                 score_threshold: float = 0.5):
+                 score_threshold: float = 0.5, sub_tasks: int = 1):
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile q={q} outside [0, 1]")
         super().__init__(ladder, overhead_s=overhead_s, trials=trials,
-                         seed=seed, score_threshold=score_threshold)
+                         seed=seed, score_threshold=score_threshold,
+                         sub_tasks=sub_tasks)
         self.q = q
         self.analytic = analytic
 

@@ -189,6 +189,7 @@ class DecodePanelCache:
         self.ridge = ridge
         self.builds = 0
         self._panels: dict = {}
+        self._partial_stacks: dict = {}
 
     def get(self, mask: Optional[np.ndarray] = None) -> DecodePanel:
         K = self.z_all.shape[0]
@@ -200,3 +201,27 @@ class DecodePanelCache:
             self._panels[key] = panel
             self.builds += 1
         return panel
+
+    def get_partial(self, chunk_masks: np.ndarray) -> np.ndarray:
+        """Stacked (Q, mn, K) decode weights for per-chunk survivor masks.
+
+        ``chunk_masks`` is the (Q, K) 0/1 availability matrix of a concrete
+        ``PartialPattern``: row c masks the workers whose completed prefix
+        covers output-row chunk c.  Every chunk's panel has the same (mn, K)
+        shape, so the stack is a single array operand for the partial decode
+        executable.  Per-chunk panels come from :meth:`get`, so chunks
+        sharing a survivor set — and binary patterns, where all Q rows are
+        identical — share ONE factorisation; the stack itself is memoised by
+        the pattern's quantized signature.
+        """
+        cm = np.asarray(chunk_masks)
+        if cm.ndim != 2 or cm.shape[1] != self.z_all.shape[0]:
+            raise ValueError(
+                f"chunk_masks shape {cm.shape} != (Q, {self.z_all.shape[0]})")
+        key = ("partial",) + tuple(
+            tuple(int(x != 0) for x in row) for row in cm)
+        stack = self._partial_stacks.get(key)
+        if stack is None:
+            stack = np.stack([self.get(row).W for row in cm])
+            self._partial_stacks[key] = stack
+        return stack

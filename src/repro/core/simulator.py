@@ -148,6 +148,26 @@ class WorkerTimes:
             raise ValueError("mask erases every worker: nothing to wait for")
         return float(self.finish[keep].max())
 
+    def completion_with_progress(self, progress) -> float:
+        """Latency of one step that consumes FRACTIONS of workers' tasks.
+
+        ``progress[k]`` in [0, 1] is the share of worker k's task the step
+        waits for (the partial-straggler sub-task prefix,
+        ``runtime/partial.py``); a worker's prefix lands at
+        ``progress_k * finish_k`` under the proportional-work law, so the
+        step completes at ``max over progress_k > 0``.  A 0/1 progress
+        vector reproduces ``completion_with_mask`` exactly.
+        """
+        w = np.asarray(progress, dtype=np.float64)
+        if w.shape != self.finish.shape:
+            raise ValueError(f"progress shape {w.shape} != {self.finish.shape}")
+        if np.any(w < 0) or np.any(w > 1):
+            raise ValueError(f"progress must lie in [0, 1], got {w.tolist()}")
+        kept = w > 0
+        if not kept.any():
+            raise ValueError("zero progress everywhere: nothing to wait for")
+        return float((w[kept] * self.finish[kept]).max())
+
 
 def simulate_completion(
     K: int,
@@ -199,16 +219,29 @@ def completion_quantile(latencies: np.ndarray, q) -> np.ndarray:
 
 
 def _masked_shifted_exp(model: LatencyModel, mask) -> tuple:
-    """(kept per-worker shifts, kept per-worker Exp scales) under a 0/1 mask."""
-    keep = np.asarray(mask).astype(bool)
-    K = keep.shape[0] if keep.ndim == 1 else 0
-    if keep.ndim != 1 or K == 0:
-        raise ValueError(f"mask must be a (K,) 0/1 vector, got shape {np.shape(mask)}")
-    if not keep.any():
+    """(kept per-worker shifts, kept per-worker Exp scales) under a weight
+    vector.
+
+    ``mask`` generalises from 0/1 to fractional work shares in [0, 1]
+    (partial-straggler sub-task prefixes): a worker waited on for share
+    ``w`` contributes ``w * (base + Exp(scale)) = w*base + Exp(w*scale)``
+    — the same shifted-exponential family with both parameters scaled — so
+    every closed-form consumer (CDF / quantile / mean) generalises for
+    free.  A 0/1 mask reproduces the binary law exactly.
+    """
+    w = np.asarray(mask, dtype=np.float64)
+    K = w.shape[0] if w.ndim == 1 else 0
+    if w.ndim != 1 or K == 0:
+        raise ValueError(
+            f"mask must be a (K,) weight vector, got shape {np.shape(mask)}")
+    if np.any(w < 0) or np.any(w > 1):
+        raise ValueError(f"weights must lie in [0, 1], got {w.tolist()}")
+    kept = w > 0
+    if not kept.any():
         raise ValueError("mask erases every worker: nothing to wait for")
     base = model.base_vector(K)
     scale = model.jitter_vector(K) * base
-    return base[keep], scale[keep]
+    return base[kept] * w[kept], scale[kept] * w[kept]
 
 
 def _product_cdf(base: np.ndarray, scale: np.ndarray, ts) -> np.ndarray:
@@ -258,7 +291,10 @@ def masked_completion_cdf(model: LatencyModel, mask, ts) -> np.ndarray:
 
     (a unit step at ``base_i`` when ``scale_i == 0``).  This is the
     tau-th-order-statistic law of the paper's latency model, specialised to
-    the mask that erases the ``K - tau`` flagged stragglers.
+    the mask that erases the ``K - tau`` flagged stragglers.  ``mask`` may
+    also carry fractional work shares in [0, 1] (partial-straggler
+    prefixes): share ``w`` scales both the shift and the Exp scale by
+    ``w``, staying inside the same product-of-shifted-exponentials law.
     """
     base, scale = _masked_shifted_exp(model, mask)
     return _product_cdf(base, scale, ts)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["decode_pallas"]
+__all__ = ["decode_pallas", "decode_partial_pallas"]
 
 
 def _decode_kernel(w_ref, y_ref, out_ref, *, s: float, extract: bool):
@@ -65,3 +65,52 @@ def decode_pallas(
         out_shape=jax.ShapeDtypeStruct((mn, E), W.dtype),
         interpret=interpret,
     )(W, Y)
+
+
+def _decode_partial_kernel(w_ref, y_ref, out_ref, *, s: float, extract: bool):
+    X = jnp.dot(w_ref[0], y_ref[0], preferred_element_type=out_ref.dtype)
+    R = jnp.round(X)
+    if extract:
+        C_hat = R - jnp.floor(R / s) * s          # mod s in [0, s)
+        C = jnp.where(C_hat <= s / 2, C_hat, C_hat - s)
+    else:
+        C = R
+    out_ref[0] = C
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s", "extract", "e_blk", "interpret"))
+def decode_partial_pallas(
+    W_stack: jnp.ndarray,
+    Y: jnp.ndarray,
+    *,
+    s: float,
+    extract: bool = True,
+    e_blk: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-chunk decode: W_stack (Q, mn, K), Y (Q, K, Ec) -> (Q, mn, Ec).
+
+    The partial-straggler decode applies a DIFFERENT weight panel to each
+    output-row chunk (chunk c only uses the workers whose completed prefix
+    covers it).  Grid is (Q, Ec // e_blk): each step loads chunk q's panel
+    resident in VMEM and streams one e-block of its worker outputs, with
+    the Sec. III-C digit extraction fused in-register as in
+    :func:`decode_pallas`.  ``Q = 1`` degenerates to the binary kernel.
+    """
+    Q, mn, K = W_stack.shape
+    Q2, K2, Ec = Y.shape
+    assert (Q, K) == (Q2, K2), (W_stack.shape, Y.shape)
+    assert Ec % e_blk == 0, f"Ec={Ec} not a multiple of e_blk={e_blk}"
+    kern = functools.partial(_decode_partial_kernel, s=s, extract=extract)
+    return pl.pallas_call(
+        kern,
+        grid=(Q, Ec // e_blk),
+        in_specs=[
+            pl.BlockSpec((1, mn, K), lambda q, e: (q, 0, 0)),     # panel q
+            pl.BlockSpec((1, K, e_blk), lambda q, e: (q, 0, e)),  # streamed
+        ],
+        out_specs=pl.BlockSpec((1, mn, e_blk), lambda q, e: (q, 0, e)),
+        out_shape=jax.ShapeDtypeStruct((Q, mn, Ec), W_stack.dtype),
+        interpret=interpret,
+    )(W_stack, Y)

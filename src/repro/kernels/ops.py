@@ -13,11 +13,12 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.block_matmul import matmul_t_pallas
-from repro.kernels.coded_decode import decode_pallas
+from repro.kernels.coded_decode import decode_pallas, decode_partial_pallas
 from repro.kernels.coded_encode import encode_pallas
 from repro.kernels.coded_fused import fused_worker_pallas
 
-__all__ = ["encode", "decode", "matmul_t", "fused_worker", "on_tpu"]
+__all__ = ["encode", "decode", "decode_partial", "matmul_t", "fused_worker",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -64,6 +65,25 @@ def decode(W: jnp.ndarray, Y: jnp.ndarray, s: float, *, extract: bool = True,
     out = decode_pallas(W, Yp, s=float(s), extract=extract, e_blk=e_blk,
                         interpret=_interpret())
     return out[:, :E]
+
+
+def decode_partial(W_stack: jnp.ndarray, Y: jnp.ndarray, s: float, *,
+                   extract: bool = True, e_blk: int = 2048) -> jnp.ndarray:
+    """W_stack: (Q, mn, K), Y: (Q, K, Ec) -> (Q, mn, Ec) per-chunk decode.
+
+    The partial-straggler decode stage: chunk q's worker outputs hit chunk
+    q's panel, with digit extraction fused.  Complex panels (unit-circle
+    plans) fall back to the per-chunk jnp oracle.
+    """
+    if jnp.iscomplexobj(W_stack) or jnp.iscomplexobj(Y):
+        return jnp.stack([ref.decode_ref(W_stack[q], Y[q], s)
+                          for q in range(W_stack.shape[0])])
+    Ec = Y.shape[-1]
+    e_blk = _pow2_tile(e_blk, Ec)
+    Yp = _pad_last(Y, e_blk)
+    out = decode_partial_pallas(W_stack, Yp, s=float(s), extract=extract,
+                                e_blk=e_blk, interpret=_interpret())
+    return out[:, :, :Ec]
 
 
 def fused_worker(

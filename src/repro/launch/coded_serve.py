@@ -17,6 +17,11 @@ mask — recompile-free after ``prewarm()``.  ``--policy quantile`` (or
 tail-optimal rung whenever the active rung's predicted quantile blows the
 bound.  ``--batch`` serves vmap-batched requests of VARYING size through
 prewarmed leading-dim buckets (round-up padding, zero recompiles).
+``--sub-tasks Q`` turns on partial-straggler decoding: each worker's block
+splits into Q ordered sub-tasks and the monitor's progress plan consumes
+completed chunk prefixes from flagged stragglers instead of erasing them;
+``--monitor-threshold`` sets the flagging score (the base of the adaptive
+threshold law when ``--feedback`` is on).
 
 Fault injection rides on ``repro.chaos``: ``--scenario NAME`` feeds the
 loop from any registered straggler regime (deterministic under ``--seed``)
@@ -89,6 +94,15 @@ def main(argv=None):
                     help="observed-violation feedback: tighten/loosen the "
                          "prediction quantile from realized SLO misses "
                          "(adaptive only; requires --slo-ms)")
+    ap.add_argument("--sub-tasks", type=int, default=1,
+                    help="split each worker's block into Q ordered sub-tasks "
+                         "(adaptive only): the decoder consumes completed "
+                         "chunk prefixes from flagged stragglers instead of "
+                         "erasing them outright (1 = legacy binary masking)")
+    ap.add_argument("--monitor-threshold", type=float, default=0.5,
+                    help="straggler-score threshold the monitor flags at; "
+                         "with --feedback it becomes the BASE of the "
+                         "adaptive threshold law")
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="record the adaptive run as a JSONL trace")
     ap.add_argument("--replay", default=None, metavar="PATH",
@@ -101,10 +115,18 @@ def main(argv=None):
                  "latencies are judged by)")
     if args.scenario and args.replay:
         ap.error("--scenario and --replay are mutually exclusive feeds")
+    if args.sub_tasks < 1:
+        ap.error(f"--sub-tasks must be >= 1, got {args.sub_tasks}")
+    if not 0.0 < args.monitor_threshold <= 1.0:
+        ap.error(f"--monitor-threshold must be in (0, 1], got "
+                 f"{args.monitor_threshold}")
     if args.adaptive:
         return run_adaptive(args)
     if args.scenario or args.feedback or args.record or args.replay:
         ap.error("--scenario/--feedback/--record/--replay need --adaptive")
+    if args.sub_tasks != 1:
+        ap.error("--sub-tasks needs --adaptive (partial-straggler decoding "
+                 "is driven by the monitor's progress plans)")
     return run_static(args)
 
 
@@ -190,11 +212,13 @@ def run_adaptive(args):
         if args.batch:
             top = 1 << (args.batch - 1).bit_length()
             buckets = tuple(1 << i for i in range(top.bit_length()))
-        info = ladder.prewarm((v, r), (v, t), batch_sizes=buckets)
+        info = ladder.prewarm((v, r), (v, t), batch_sizes=buckets,
+                              sub_tasks=args.sub_tasks)
         builds_at_prewarm = info["builds"]
         print(f"adaptive ladder rungs={ladder.rungs} "
               f"taus={[ladder.tau(x) for x in ladder.rungs]} K={K} "
-              f"v={v} r={r} t={t} buckets={buckets or 'none'}; "
+              f"v={v} r={r} t={t} buckets={buckets or 'none'} "
+              f"sub_tasks={args.sub_tasks}; "
               f"prewarm: {builds_at_prewarm} executables, overheads "
               f"{ {k: round(1e3 * s, 2) for k, s in info['overhead_s'].items()} } ms")
 
@@ -212,7 +236,9 @@ def run_adaptive(args):
         server_config = {"policy": policy_name, "slo_quantile": slo_quantile,
                          "slo_ms": args.slo_ms, "feedback": args.feedback,
                          "backend": backend, "size": args.size,
-                         "batch": args.batch, "seed": args.seed}
+                         "batch": args.batch, "seed": args.seed,
+                         "sub_tasks": args.sub_tasks,
+                         "monitor_threshold": args.monitor_threshold}
         if args.replay:
             from repro.chaos import Trace
 
@@ -281,15 +307,22 @@ def run_adaptive(args):
 
         policy = None
         if policy_name == "mean":
-            policy = ExpectedLatencyPolicy(ladder)
+            policy = ExpectedLatencyPolicy(
+                ladder, score_threshold=args.monitor_threshold,
+                sub_tasks=args.sub_tasks)
         print(f"policy={policy_name}"
               + (f" slo: q{slo_quantile} <= {args.slo_ms} ms"
                  if slo_s is not None else "")
-              + (" feedback=on" if args.feedback else ""))
+              + (" feedback=on" if args.feedback else "")
+              + (f" sub_tasks={args.sub_tasks}" if args.sub_tasks > 1 else "")
+              + (f" threshold={args.monitor_threshold}"
+                 if args.monitor_threshold != 0.5 else ""))
         server = AdaptiveServer(ladder, policy=policy, feed=feed,
                                 seed=args.seed, check_exact=True,
+                                score_threshold=args.monitor_threshold,
                                 slo_quantile=slo_quantile, slo_s=slo_s,
-                                feedback=args.feedback)
+                                feedback=args.feedback,
+                                sub_tasks=args.sub_tasks)
         for rep in server.run(requests, make_request):
             flag = " SWITCH" if rep.switched else ""
             if rep.slo_violation:
@@ -300,10 +333,19 @@ def run_adaptive(args):
                     if rep.predicted_tail_s is not None else "")
             q_eff = (f"  q_eff {rep.q_effective:.3f}"
                      if rep.q_effective is not None else "")
+            partial = ""
+            if rep.progress is not None:
+                # show only the workers consumed at a fraction (< 1 chunk
+                # budget); full workers are the quiet common case.
+                frac = {k: round(x, 2) for k, x in enumerate(rep.progress)
+                        if x < 1.0}
+                partial = f"  partial={frac if frac else '{}'}"
+            thr_eff = (f"  thr_eff {rep.threshold_effective:.3f}"
+                       if rep.threshold_effective is not None else "")
             print(f"req {rep.step:02d}: rung={rep.rung:<15} "
                   f"erased={str(list(rep.erased)):<12} "
                   f"sim {rep.sim_latency_s:6.3f} s  wall {rep.wall_ms:7.1f} ms"
-                  f"{tail}{q_eff}  slack={rep.slack}  "
+                  f"{tail}{q_eff}{partial}{thr_eff}  slack={rep.slack}  "
                   f"{'exact' if rep.exact else 'CHECK FAILED'}{flag}")
         info = ladder.cache_info()
         assert info["builds"] == builds_at_prewarm, (

@@ -2,10 +2,17 @@
 
 ``CodedMatmul`` is the single entry point for every backend (reference /
 staged Pallas / fused megakernel / mesh shard_map); ``ErasurePattern``
-normalises every erasure convention; executors are pluggable via
+normalises every erasure convention and ``PartialPattern`` its fractional
+generalisation (per-worker sub-task progress); executors are pluggable via
 ``with_backend``.  See DESIGN.md "Runtime & Executors".
 """
 from repro.runtime.erasure import ErasurePattern
+from repro.runtime.partial import (
+    PartialPattern,
+    chunk_bounds,
+    chunk_coverage,
+    chunk_masks_for,
+)
 from repro.runtime.executors import (
     BACKENDS,
     Executor,
@@ -23,6 +30,10 @@ __all__ = [
     "CacheGroup",
     "plan_token",
     "ErasurePattern",
+    "PartialPattern",
+    "chunk_bounds",
+    "chunk_coverage",
+    "chunk_masks_for",
     "Executor",
     "LocalExecutor",
     "ReferenceExecutor",

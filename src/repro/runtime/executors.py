@@ -16,8 +16,16 @@ function the ``CodedMatmul`` facade jit-compiles and memoises:
   kind == "concrete":  fn(A, B, mask, W)  with W the (mn, K) decode panel
   kind == "traced":    fn(A, B, mask)     in-body masked solve
 
-Both signatures take the erasure pattern strictly as DATA, so one compiled
-executable serves every erasure pattern of that kind.
+Partial-straggler kinds are tuples carrying the sub-task count Q
+(``runtime/partial.py``): each worker's output rows split into Q cyclic
+chunks and decode consumes whatever prefix each worker finished:
+
+  kind == ("partial", Q):         fn(A, B, chunk_masks, W_stack)
+                                  chunk_masks (Q, K), W_stack (Q, mn, K)
+  kind == ("partial-traced", Q):  fn(A, B, progress)  with progress (K,)
+
+All signatures take the erasure/progress pattern strictly as DATA, so one
+compiled executable serves every pattern of that kind.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ from repro.core.api import (
 )
 from repro.core.decoding import decode_masked, decode_with_weights, digit_extract
 from repro.core.partition import block_decompose, block_recompose, unpad
+from repro.runtime.partial import chunk_bounds
 from repro.distributed.sharding import shard_map_compat
 from repro.kernels import ops as kops
 
@@ -88,14 +97,17 @@ class LocalExecutor:
         """(p, m, bv, br), (p, n, bv, bt) -> all-K worker outputs (K, br, bt)."""
         raise NotImplementedError
 
-    def make_pipeline(self, plan: CodedMatmulPlan, kind: str, dtype) -> Callable:
+    def make_pipeline(self, plan: CodedMatmulPlan, kind, dtype) -> Callable:
         """The single-host 4-stage pipeline for one erasure ``kind``."""
         g = plan.scheme.grid
 
-        def stages(A, B, mask):
+        def products(A, B):
             a_blocks = block_decompose(A.astype(dtype), g.p, g.m)
             b_blocks = block_decompose(B.astype(dtype), g.p, g.n)
-            Y = self.worker_products(plan, a_blocks, b_blocks)  # (K, br, bt)
+            return self.worker_products(plan, a_blocks, b_blocks)  # (K, br, bt)
+
+        def stages(A, B, mask):
+            Y = products(A, B)
             # stage 3 ERASE: zero failed workers' outputs (decode weights
             # also annihilate them; the multiply keeps parity with the mesh
             # pipeline where erased devices genuinely emit garbage).
@@ -103,6 +115,10 @@ class LocalExecutor:
 
         def finish(C_blocks, r, t):
             return unpad(block_recompose(C_blocks), (r, t)).astype(dtype)
+
+        if isinstance(kind, tuple):
+            return self._make_partial_pipeline(plan, kind, dtype, products,
+                                               finish)
 
         if kind == "concrete":
 
@@ -120,6 +136,58 @@ class LocalExecutor:
             C_blocks = decode_masked(plan.scheme, z_all, Y,
                                      mask.astype(Y.real.dtype), plan.s)
             return finish(C_blocks, A.shape[1], B.shape[1])
+
+        return fn
+
+    def _make_partial_pipeline(self, plan: CodedMatmulPlan, kind: tuple,
+                               dtype, products: Callable,
+                               finish: Callable) -> Callable:
+        """Prefix-aware pipeline: per-chunk erase + decode, kind carries Q.
+
+        The Q row chunks have static bounds (from the padded block row count),
+        so the per-chunk loop is a plain Python loop inside one jitted body —
+        chunk c erases with its own (K,) availability row and decodes with
+        its own (mn, K) panel, then the chunks concatenate back into the
+        full C block rows.  ``Q = 1`` reproduces the binary pipeline exactly
+        (one chunk, one mask, one panel).
+        """
+        style, Q = kind
+
+        if style == "partial":
+
+            def fn(A, B, chunk_masks, W_stack):
+                Y = products(A, B)                       # (K, br, bt)
+                bounds = chunk_bounds(Y.shape[1], Q)
+                parts = []
+                for c in range(Q):
+                    Yc = Y[:, bounds[c]:bounds[c + 1], :]
+                    Yc = Yc * chunk_masks[c].astype(Yc.dtype)[:, None, None]
+                    parts.append(decode_with_weights(
+                        plan.scheme, W_stack[c], Yc, plan.s))
+                return finish(jnp.concatenate(parts, axis=2),
+                              A.shape[1], B.shape[1])
+
+            return fn
+
+        if style != "partial-traced":
+            raise ValueError(f"unknown partial pipeline kind {kind!r}")
+
+        z_all = jnp.asarray(plan.z_points)
+        k_idx = jnp.arange(plan.K)
+
+        def fn(A, B, progress):
+            Y = products(A, B)                           # (K, br, bt)
+            bounds = chunk_bounds(Y.shape[1], Q)
+            counts = jnp.floor(progress * Q + 1e-9)
+            parts = []
+            for c in range(Q):
+                mask_c = ((c - k_idx) % Q < counts).astype(Y.real.dtype)
+                Yc = Y[:, bounds[c]:bounds[c + 1], :]
+                Yc = Yc * mask_c.astype(Yc.dtype)[:, None, None]
+                parts.append(decode_masked(
+                    plan.scheme, z_all, Yc, mask_c, plan.s))
+            return finish(jnp.concatenate(parts, axis=2),
+                          A.shape[1], B.shape[1])
 
         return fn
 
@@ -250,13 +318,19 @@ class MeshExecutor:
         """Executable-memo identity: name + mesh + axis + kernel flags."""
         return (self.name, self.mesh, self.axis, self.use_kernels, self.fused)
 
-    def make_pipeline(self, plan: CodedMatmulPlan, kind: str, dtype) -> Callable:
+    def make_pipeline(self, plan: CodedMatmulPlan, kind, dtype) -> Callable:
         """The shard_map pipeline (one device per worker) for ``kind``.
 
         Raises:
+            NotImplementedError: for partial-straggler (tuple) kinds — the
+                mesh pipeline decodes once per device from a single panel.
             ValueError: if the mesh axis size differs from the plan's K, or
                 the plan uses complex (unit-circle) evaluation points.
         """
+        if not isinstance(kind, str):
+            raise NotImplementedError(
+                "mesh backend does not support partial-straggler sub-tasking "
+                "(sub_tasks > 1); use a local backend")
         K = self.mesh.shape[self.axis]
         if K != plan.K:
             raise ValueError(

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.api import CodedMatmulPlan
 from repro.runtime.erasure import ErasurePattern
 from repro.runtime.executors import Executor, resolve_executor
+from repro.runtime.partial import PartialPattern
 
 __all__ = ["CodedMatmul", "CacheGroup", "plan_token"]
 
@@ -107,7 +108,10 @@ class CodedMatmul:
                  dtype=jnp.float64, mesh=None, axis: str = "model",
                  use_kernels: bool = True, fused: bool = True,
                  panel_ridge: float = 0.0, cache_group: "CacheGroup" = None,
-                 _shared=None):
+                 sub_tasks: int = 1, _shared=None):
+        if sub_tasks < 1:
+            raise ValueError(f"need sub_tasks >= 1, got {sub_tasks}")
+        self.sub_tasks = int(sub_tasks)
         self.plan = plan
         self.dtype = jnp.dtype(dtype)
         self._mesh = mesh
@@ -149,6 +153,7 @@ class CodedMatmul:
             axis=self._axis if axis is None else axis,
             use_kernels=self._use_kernels if use_kernels is None else use_kernels,
             fused=self._fused if fused is None else fused,
+            sub_tasks=self.sub_tasks,
             _shared=(self.panel_cache, self._executables, self._stats))
 
     def cache_info(self) -> dict:
@@ -172,32 +177,46 @@ class CodedMatmul:
     def __call__(self, A, B, erasure: Any = None, *,
                  erased: Optional[Sequence[int]] = None,
                  survivors: Optional[Sequence[int]] = None,
-                 mask: Any = None) -> jnp.ndarray:
+                 mask: Any = None, progress: Any = None,
+                 sub_tasks: Optional[int] = None) -> jnp.ndarray:
         """Coded C = A^T B under at most one erasure spec (none = all alive).
 
         Args:
             A: (*batch, v, r) left operand.
             B: (*batch, v, t) right operand.
-            erasure: positional spec — an ``ErasurePattern``, a (K,) 0/1
-                mask, or a list of erased worker ids.
+            erasure: positional spec — an ``ErasurePattern``, a
+                ``PartialPattern``, a (K,) 0/1 mask, or a list of erased
+                worker ids.
             erased / survivors / mask: keyword alternatives.
+            progress: (K,) fractional progress in [0, 1] — routes through
+                the partial-straggler decode (``runtime/partial.py``).
+            sub_tasks: per-call override of the facade's sub-task count Q.
+                ``Q > 1`` (or an explicit ``progress``/``PartialPattern``)
+                selects the partial path; ``Q = 1`` with binary specs is the
+                legacy path, bit for bit.
 
         Returns:
             (*batch, r, t) decoded product.
 
         Raises:
             ValueError: on conflicting erasure specs, rank-<2 operands,
-                contraction mismatch, or fewer than tau survivors.
+                contraction mismatch, fewer than tau survivors, or a partial
+                progress vector that does not span the decoding system.
         """
+        Q = self.sub_tasks if sub_tasks is None else int(sub_tasks)
+        if Q < 1:
+            raise ValueError(f"need sub_tasks >= 1, got {Q}")
+        if Q > 1 or progress is not None or isinstance(erasure, PartialPattern):
+            pattern = PartialPattern.normalize(
+                self.plan.K, Q, erasure, progress=progress, erased=erased,
+                survivors=survivors, mask=mask)
+            return self._call_partial(A, B, pattern)
         pattern = ErasurePattern.normalize(
             self.plan.K, erasure, erased=erased, survivors=survivors,
             mask=mask)
         A = jnp.asarray(A)
         B = jnp.asarray(B)
-        if A.ndim < 2 or B.ndim < 2:
-            raise ValueError(f"need >= 2-D operands, got {A.shape} / {B.shape}")
-        if A.shape[-2] != B.shape[-2]:
-            raise ValueError(f"contraction mismatch {A.shape} vs {B.shape}")
+        self._check_operands(A, B)
         fn = self._get_executable(A, B, pattern.kind)
         mask_arr = pattern.mask_array(self._mask_dtype())
         if pattern.kind == "concrete":
@@ -210,8 +229,29 @@ class CodedMatmul:
             return fn(A, B, mask_arr, W)
         return fn(A, B, mask_arr)
 
+    def _call_partial(self, A, B, pattern: PartialPattern) -> jnp.ndarray:
+        """Partial-straggler decode path: per-chunk masks + panel stack."""
+        A = jnp.asarray(A)
+        B = jnp.asarray(B)
+        self._check_operands(A, B)
+        if pattern.is_concrete:
+            pattern.require_decodable(self.plan.tau)
+            fn = self._get_executable(A, B, ("partial", pattern.Q))
+            cm = pattern.chunk_masks
+            W_stack = self.panel_cache.get_partial(cm)
+            return fn(A, B, jnp.asarray(cm, self._mask_dtype()),
+                      jnp.asarray(W_stack, self._decode_dtype()))
+        fn = self._get_executable(A, B, ("partial-traced", pattern.Q))
+        return fn(A, B, pattern.progress_array(self._mask_dtype()))
+
+    def _check_operands(self, A, B) -> None:
+        if A.ndim < 2 or B.ndim < 2:
+            raise ValueError(f"need >= 2-D operands, got {A.shape} / {B.shape}")
+        if A.shape[-2] != B.shape[-2]:
+            raise ValueError(f"contraction mismatch {A.shape} vs {B.shape}")
+
     # -- executable construction -------------------------------------------
-    def _get_executable(self, A, B, kind: str):
+    def _get_executable(self, A, B, kind):
         # the token folds in executor CONFIG (mesh/axis/kernel flags) and
         # the PLAN identity, so with_backend siblings that share a backend
         # name but differ in config — and CacheGroup members on different
@@ -227,9 +267,12 @@ class CodedMatmul:
         self._stats["builds"] += 1
         return fn
 
-    def _build(self, a_batch: int, b_batch: int, kind: str):
+    def _build(self, a_batch: int, b_batch: int, kind):
         base = self._executor.make_pipeline(self.plan, kind, self.dtype)
-        n_data = 2 if kind == "concrete" else 1  # (mask, W) or (mask,)
+        # data operands after (A, B): (mask, W) / (chunk_masks, W_stack) for
+        # panel-carrying kinds, (mask,) / (progress,) for traced ones.
+        n_data = 2 if kind == "concrete" or (
+            isinstance(kind, tuple) and kind[0] == "partial") else 1
         if (a_batch or b_batch) and not self._executor.supports_batching:
             raise NotImplementedError(
                 f"backend {self.backend!r} does not support batched operands")

@@ -1,0 +1,243 @@
+"""Fractional straggler progress: ``PartialPattern`` and the chunk schedule.
+
+``ErasurePattern`` models a worker as binary — alive or erased.  The
+partial-straggler line of work (Das & Ramamoorthy, arXiv 2012.06065,
+2109.12070) shows a slow worker that completed an ordered PREFIX of its
+task still contributes to decoding.  This module is the runtime face of
+that idea: each worker's coded block product ``A~_k^T B~_k`` is split into
+``Q`` ordered sub-tasks (row chunks of the output), and a worker reporting
+progress ``q/Q`` has completed ``q`` of them.
+
+Chunk schedule
+--------------
+A naive schedule (every worker processes chunk 0 first, then 1, ...) is
+useless: chunk ``Q-1`` would only ever be covered by workers that finished
+EVERYTHING, so recovery would still need tau full finishers.  Workers
+therefore process chunks in a CYCLIC order — worker ``k`` runs chunk
+``(k + j) % Q`` as its ``j``-th sub-task — so each prefix length spreads
+its coverage evenly over the chunks:
+
+    worker k has chunk c  <=>  ((c - k) mod Q) < q_k
+
+Decodability is then PER CHUNK: chunk ``c`` decodes iff at least tau
+workers completed it, and the whole product decodes iff every chunk does.
+A binary pattern is the special case ``q_k in {0, Q}``; ``Q = 1`` is
+exactly ``ErasurePattern``.
+
+Like ``ErasurePattern``, a pattern is *concrete* (host-known progress:
+the decode path looks up a per-chunk panel stack keyed on the quantized
+signature) or *traced* (progress is a jax tracer: per-chunk masked
+normal-equation solves in-body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.runtime.erasure import ErasurePattern
+
+__all__ = ["PartialPattern", "chunk_bounds", "chunk_masks_for",
+           "chunk_coverage"]
+
+
+def _is_traced(x: Any) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def chunk_bounds(rows: int, Q: int) -> tuple:
+    """Row offsets splitting ``rows`` output rows into ``Q`` ordered chunks.
+
+    Chunks differ in size by at most one row (the first ``rows % Q`` chunks
+    get the extra row).  Returns ``Q + 1`` offsets.
+
+    Raises:
+        ValueError: when ``rows < Q`` (a chunk would be empty).
+    """
+    if Q < 1:
+        raise ValueError(f"need Q >= 1 sub-tasks, got {Q}")
+    if rows < Q:
+        raise ValueError(
+            f"cannot split {rows} output rows into Q={Q} non-empty chunks; "
+            f"lower --sub-tasks or grow the block size")
+    sizes = np.full(Q, rows // Q, dtype=np.int64)
+    sizes[: rows % Q] += 1
+    return tuple(int(x) for x in np.concatenate([[0], np.cumsum(sizes)]))
+
+
+def chunk_masks_for(counts: np.ndarray, Q: int) -> np.ndarray:
+    """(Q, K) 0/1 chunk-availability masks from per-worker chunk counts.
+
+    ``counts[k]`` is the number of sub-tasks worker ``k`` completed under
+    the cyclic schedule; row ``c`` of the result masks the workers whose
+    prefix covers chunk ``c``.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    c = np.arange(Q)[:, None]
+    k = np.arange(counts.shape[0])[None, :]
+    return (((c - k) % Q) < counts[None, :]).astype(np.float64)
+
+
+def chunk_coverage(counts: np.ndarray, Q: int) -> np.ndarray:
+    """(Q,) number of workers covering each chunk under the cyclic schedule."""
+    return chunk_masks_for(counts, Q).sum(axis=1).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialPattern:
+    """Per-worker fractional progress over K workers and Q sub-tasks.
+
+    ``progress`` is a (K,) float array in [0, 1] for ``kind == "concrete"``
+    (quantized to multiples of ``1/Q`` via ``chunk_counts``) and the
+    original jax value for ``kind == "traced"``.
+    """
+
+    K: int
+    Q: int
+    kind: str  # "concrete" | "traced"
+    progress: Any
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def full(cls, K: int, Q: int) -> "PartialPattern":
+        """Every worker completed all ``Q`` sub-tasks."""
+        cls._check_q(Q)
+        return cls(K=K, Q=Q, kind="concrete",
+                   progress=np.ones(K, dtype=np.float64))
+
+    @classmethod
+    def from_progress(cls, K: int, Q: int, progress: Any) -> "PartialPattern":
+        """Pattern from a (K,) progress vector — concrete array or tracer.
+
+        Raises:
+            ValueError: on a bad shape, or concrete values outside [0, 1].
+        """
+        cls._check_q(Q)
+        if _is_traced(progress):
+            if getattr(progress, "shape", None) != (K,):
+                raise ValueError(
+                    f"traced progress shape "
+                    f"{getattr(progress, 'shape', None)} != ({K},)")
+            return cls(K=K, Q=Q, kind="traced", progress=progress)
+        prog = np.asarray(progress, dtype=np.float64)
+        if prog.shape != (K,):
+            raise ValueError(f"progress shape {prog.shape} != ({K},)")
+        if not np.all(np.isfinite(prog)) or np.any(prog < 0) or np.any(prog > 1):
+            raise ValueError(
+                f"progress must lie in [0, 1], got {prog.tolist()}")
+        return cls(K=K, Q=Q, kind="concrete", progress=prog)
+
+    @classmethod
+    def from_erasure(cls, pattern: ErasurePattern, Q: int) -> "PartialPattern":
+        """Lift a binary ``ErasurePattern`` (0/1 progress) to ``Q`` sub-tasks."""
+        cls._check_q(Q)
+        if pattern.is_concrete:
+            return cls(K=pattern.K, Q=Q, kind="concrete",
+                       progress=np.asarray(pattern.mask, dtype=np.float64))
+        return cls(K=pattern.K, Q=Q, kind="traced",
+                   progress=pattern.mask)
+
+    @classmethod
+    def normalize(
+        cls,
+        K: int,
+        Q: int,
+        spec: Any = None,
+        *,
+        progress: Any = None,
+        erased: Optional[Sequence[int]] = None,
+        survivors: Optional[Sequence[int]] = None,
+        mask: Any = None,
+    ) -> "PartialPattern":
+        """Accept one spec (pattern / progress / binary forms; none = full).
+
+        A ``PartialPattern`` spec must agree with ``K`` (and with ``Q``
+        unless it carries its own); binary specs become 0/1 progress.
+        """
+        if spec is not None and progress is not None:
+            raise ValueError("pass only one of partial spec / progress")
+        if isinstance(spec, PartialPattern):
+            if spec.K != K:
+                raise ValueError(
+                    f"pattern built for K={spec.K}, plan has K={K}")
+            return spec
+        if isinstance(spec, ErasurePattern):
+            return cls.from_erasure(spec, Q)
+        if spec is not None:
+            return cls.from_progress(K, Q, spec)
+        if progress is not None:
+            return cls.from_progress(K, Q, progress)
+        if erased is not None or survivors is not None or mask is not None:
+            return cls.from_erasure(
+                ErasurePattern.normalize(K, erased=erased,
+                                         survivors=survivors, mask=mask), Q)
+        return cls.full(K, Q)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def is_concrete(self) -> bool:
+        """True when the progress vector is host-known (not a jax tracer)."""
+        return self.kind == "concrete"
+
+    @property
+    def chunk_counts(self) -> np.ndarray:
+        """(K,) completed sub-task counts: ``floor(progress * Q)`` (concrete)."""
+        self._require_concrete("chunk_counts")
+        return np.floor(np.asarray(self.progress) * self.Q
+                        + 1e-9).astype(np.int64)
+
+    @property
+    def chunk_masks(self) -> np.ndarray:
+        """(Q, K) per-chunk worker-availability masks (concrete patterns)."""
+        return chunk_masks_for(self.chunk_counts, self.Q)
+
+    @property
+    def coverage(self) -> np.ndarray:
+        """(Q,) workers covering each chunk (concrete patterns)."""
+        return chunk_coverage(self.chunk_counts, self.Q)
+
+    @property
+    def key(self) -> tuple:
+        """Hashable identity: (Q, quantized signature) for concrete patterns."""
+        if self.is_concrete:
+            return (self.Q,) + tuple(int(c) for c in self.chunk_counts)
+        return (self.Q, "traced")
+
+    def decodable(self, tau: int) -> bool:
+        """True when every chunk has at least ``tau`` contributors."""
+        return bool(np.all(self.coverage >= tau))
+
+    def require_decodable(self, tau: int) -> None:
+        """Raise loudly (not garbage output) when a chunk is undercovered.
+
+        Raises:
+            ValueError: naming every chunk whose coverage is below ``tau``.
+        """
+        cov = self.coverage
+        bad = np.flatnonzero(cov < tau)
+        if bad.size:
+            detail = ", ".join(f"chunk {int(c)}: {int(cov[c])}" for c in bad)
+            raise ValueError(
+                f"partial progress does not span the decoding system: "
+                f"need >= tau={tau} contributors per chunk, got {detail} "
+                f"(counts {self.chunk_counts.tolist()}, Q={self.Q})")
+
+    def progress_array(self, dtype):
+        """The progress vector as a jax array of ``dtype`` (traced passthrough)."""
+        import jax.numpy as jnp
+
+        if self.is_concrete:
+            return jnp.asarray(self.progress, dtype)
+        return self.progress.astype(dtype)
+
+    # -- helpers ------------------------------------------------------------
+    def _require_concrete(self, what: str) -> None:
+        if not self.is_concrete:
+            raise ValueError(f"{what} is undefined for a traced partial pattern")
+
+    @staticmethod
+    def _check_q(Q: int) -> None:
+        if Q < 1:
+            raise ValueError(f"need Q >= 1 sub-tasks, got {Q}")

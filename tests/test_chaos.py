@@ -31,7 +31,7 @@ STEPS = 16
 GOLDEN_DIR = Path(__file__).parent / "golden"
 
 ARCHETYPES = ("iid", "heavy_tail", "pareto", "bursty", "flapping", "rack",
-              "pool_resize")
+              "pool_resize", "crawler", "degrading")
 
 
 class TestScenarioDSL:
@@ -90,6 +90,29 @@ class TestScenarioDSL:
         assert (pre > 10).sum() == sc.num_arriving
         assert (mid > 10).sum() == 0
         assert (post > 10).sum() == sc.num_departing
+
+    def test_crawler_set_is_persistent(self, chaos_scenario):
+        """The crawler set is seed-fixed and slow at every step."""
+        sc = chaos_scenario("crawler", healthy_jitter=0.0, crawl_jitter=0.0)
+        early = sc.times(0, K, seed=2)
+        late = sc.times(40, K, seed=2)
+        slow = np.flatnonzero(early > 1.5 * sc.base)
+        assert slow.size == sc.num_crawlers
+        np.testing.assert_array_equal(
+            slow, np.flatnonzero(late > 1.5 * sc.base))
+
+    def test_degrading_ramp_monotone_then_capped(self, chaos_scenario):
+        """Degrading workers slow down over steps until max_factor caps."""
+        sc = chaos_scenario("degrading", healthy_jitter=0.0,
+                            degrade_jitter=0.0)
+        victims = np.flatnonzero(sc.times(100, K, seed=4) > 2.0 * sc.base)
+        assert victims.size == sc.num_degrading
+        v = victims[0]
+        ramp = [sc.times(s, K, seed=4)[v] for s in (0, 10, 20, 100, 200)]
+        assert all(a <= b + 1e-12 for a, b in zip(ramp, ramp[1:]))
+        # the cap: deep into the run the factor stops growing
+        assert ramp[-1] == pytest.approx(ramp[-2])
+        assert ramp[-1] <= sc.max_factor * sc.base + 1e-9
 
     def test_compile_validates(self):
         with pytest.raises(ValueError):
@@ -160,7 +183,7 @@ class TestTraceRoundTrip:
 
 class TestReplayDeterminism:
     @pytest.mark.parametrize("key", ["heavy_tail", "pool_resize",
-                                     "pareto_feedback"])
+                                     "pareto_feedback", "crawler_partial"])
     def test_replay_reproduces_run_bit_exactly(self, key):
         """The tentpole contract: record a run, rebuild the server from
         scratch, replay the recorded times — identical rung choices,
@@ -201,7 +224,20 @@ class TestGoldenTraces:
 
     def test_catalog_covers_at_least_four_archetypes(self):
         assert len(golden_names()) >= 4
-        assert set(golden_names()) >= {"iid", "heavy_tail", "bursty", "rack"}
+        assert set(golden_names()) >= {"iid", "heavy_tail", "bursty", "rack",
+                                       "crawler", "degrading",
+                                       "crawler_partial"}
+
+    def test_crawler_partial_golden_consumes_fractions(self):
+        """The partial variant must actually emit FRACTIONAL progress —
+        some worker consumed at a strict fraction (not just 0/1 masking) —
+        and every step must decode exactly."""
+        golden = Trace.load(GOLDEN_DIR / "crawler_partial.jsonl")
+        assert all(s.progress is not None for s in golden.steps)
+        fractions = [x for s in golden.steps for x in s.progress
+                     if 0.0 < x < 1.0]
+        assert fractions, "no step consumed a strict fraction of a worker"
+        assert all(s.exact for s in golden.steps)
 
 
 class TestFeedbackLaw:
@@ -288,4 +324,5 @@ def _report_like(step):
         slo_violation=step.slo_violation,
         predicted_tail_s=step.predicted_tail_s, realized_s=step.realized_s,
         realized_violation=step.realized_violation,
-        q_effective=step.q_effective)
+        q_effective=step.q_effective, progress=step.progress,
+        threshold_effective=step.threshold_effective)

@@ -1,0 +1,580 @@
+"""Partial-straggler sub-tasking: patterns, decode parity, planner, laws.
+
+Covers the acceptance bar for graceful degradation:
+  * cyclic chunk schedule invariants (coverage spreads over prefixes);
+  * PartialPattern normalisation / quantisation / decodability checks;
+  * bit-identical partial decode vs the uncoded oracle on SPANNING
+    progress vectors — every scheme family, Q in {1, 2, 4}, all local
+    backends, batched operands, traced progress under jit;
+  * loud ValueError (never garbage output) on NON-spanning vectors;
+  * randomized fuzz plus hypothesis property tests for the span/raise
+    dichotomy;
+  * per-chunk decode kernel parity against the jnp reference;
+  * progress planner: binary-mask equivalence when the healthy pool
+    spans, cheapest-straggler consumption otherwise, always decodable;
+  * fractional completion law (w * (base + Exp(scale)) closed forms vs
+    Monte-Carlo) and the adaptive monitor-threshold feedback law;
+  * zero executable rebuilds across partial serving calls.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.control.feedback import FeedbackConfig, ViolationFeedback  # noqa: E402
+from repro.control.partial import plan_partial_progress  # noqa: E402
+from repro.core import make_plan, make_scheme, uncoded_matmul  # noqa: E402
+from repro.core.simulator import (  # noqa: E402
+    LatencyModel,
+    WorkerTimes,
+    _masked_shifted_exp,
+    masked_completion_cdf,
+    masked_completion_mean,
+    masked_completion_quantile,
+)
+from repro.kernels import ops as kops  # noqa: E402
+from repro.kernels import ref as kref  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    CodedMatmul,
+    ErasurePattern,
+    MeshExecutor,
+    PartialPattern,
+    chunk_bounds,
+    chunk_coverage,
+    chunk_masks_for,
+)
+
+LOCAL_BACKENDS = ("reference", "staged", "fused")
+
+# (kind, p, m, n, p_prime) - one geometry per scheme family.
+SCHEMES = [
+    ("bec", 2, 2, 2, 1),
+    ("tradeoff", 4, 2, 1, 2),
+    ("polycode", 2, 2, 1, 1),
+]
+SUB_TASKS = (1, 2, 4)
+
+
+def _int_problem(rng, plan, v, r, t):
+    A = jnp.asarray(rng.integers(-3, 4, size=(v, r)), jnp.float64)
+    B = jnp.asarray(rng.integers(-3, 4, size=(v, t)), jnp.float64)
+    return A, B, np.asarray(uncoded_matmul(A, B))
+
+
+def _make(kind, p, m, n, pp, *, extra=2, v_mult=8, points="chebyshev"):
+    tau = make_scheme(kind, p, m, n, p_prime=pp).tau
+    v = v_mult * p
+    return make_plan(kind, p, m, n, K=tau + extra, L=v * 3 * 3 + 1,
+                     p_prime=pp, points=points), v
+
+
+def _spanning_progress(K, Q):
+    """A fractional progress vector whose every chunk has >= K - 2 workers.
+
+    Worker 0 misses only chunk Q-1 and worker 1 only chunk 0 under the
+    cyclic schedule, so with K = tau + 2 every chunk still spans.  Q = 1
+    cannot be fractional; erase worker 0 outright instead.
+    """
+    prog = np.ones(K)
+    if Q > 1:
+        prog[0] = (Q - 1) / Q
+        prog[1] = (Q - 1) / Q
+    else:
+        prog[0] = 0.0
+    return prog
+
+
+class TestChunkSchedule:
+    @pytest.mark.parametrize("rows,Q", [(8, 1), (8, 3), (9, 4), (30, 4)])
+    def test_bounds_partition_rows(self, rows, Q):
+        offs = chunk_bounds(rows, Q)
+        assert len(offs) == Q + 1
+        assert offs[0] == 0 and offs[-1] == rows
+        sizes = np.diff(offs)
+        assert sizes.min() >= 1
+        assert sizes.max() - sizes.min() <= 1
+
+    def test_bounds_errors(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            chunk_bounds(3, 4)
+        with pytest.raises(ValueError, match="Q >= 1"):
+            chunk_bounds(8, 0)
+
+    def test_cyclic_membership_identity(self):
+        K, Q = 7, 4
+        counts = np.array([0, 1, 2, 3, 4, 2, 1])
+        masks = chunk_masks_for(counts, Q)
+        assert masks.shape == (Q, K)
+        for c in range(Q):
+            for k in range(K):
+                assert masks[c, k] == (1.0 if ((c - k) % Q) < counts[k]
+                                       else 0.0)
+        # column k holds exactly counts[k] ones: a prefix covers its length.
+        np.testing.assert_array_equal(masks.sum(axis=0),
+                                      np.minimum(counts, Q).astype(float))
+
+    def test_prefixes_spread_over_chunks(self):
+        # Single-sub-task prefixes land on DIFFERENT chunks (the point of
+        # the cyclic order): a naive schedule would pile all K onto chunk 0.
+        K, Q = 8, 4
+        cov = chunk_coverage(np.ones(K, dtype=np.int64), Q)
+        np.testing.assert_array_equal(cov, np.full(Q, K // Q))
+
+    def test_coverage_matches_masks(self):
+        counts = np.array([4, 0, 2, 3, 1, 4])
+        masks = chunk_masks_for(counts, 4)
+        np.testing.assert_array_equal(chunk_coverage(counts, 4),
+                                      masks.sum(axis=1).astype(np.int64))
+
+
+class TestPartialPattern:
+    def test_equivalent_specs_same_key(self):
+        K, Q = 6, 3
+        mask = [0, 1, 1, 1, 0, 1]
+        by_erased = PartialPattern.normalize(K, Q, erased=[0, 4])
+        by_mask = PartialPattern.normalize(K, Q, mask=mask)
+        by_progress = PartialPattern.normalize(K, Q, progress=np.array(
+            mask, dtype=np.float64))
+        lifted = PartialPattern.normalize(
+            K, Q, ErasurePattern.normalize(K, erased=[0, 4]))
+        assert (by_erased.key == by_mask.key == by_progress.key
+                == lifted.key)
+        np.testing.assert_array_equal(by_erased.chunk_counts,
+                                      np.array(mask) * Q)
+
+    def test_default_is_full(self):
+        pat = PartialPattern.normalize(5, 2)
+        np.testing.assert_array_equal(pat.chunk_counts, np.full(5, 2))
+        assert pat.decodable(5)
+
+    def test_pattern_spec_k_mismatch_raises(self):
+        pat = PartialPattern.full(4, 2)
+        with pytest.raises(ValueError, match="K=4"):
+            PartialPattern.normalize(6, 2, pat)
+
+    def test_conflicting_specs_raise(self):
+        with pytest.raises(ValueError, match="only one"):
+            PartialPattern.normalize(4, 2, np.ones(4), progress=np.ones(4))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="Q >= 1"):
+            PartialPattern.full(4, 0)
+        with pytest.raises(ValueError, match="shape"):
+            PartialPattern.from_progress(4, 2, np.ones(5))
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            PartialPattern.from_progress(4, 2, [0.5, 1.0, 1.5, 0.0])
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            PartialPattern.from_progress(4, 2, [0.5, 1.0, -0.1, 0.0])
+
+    def test_chunk_counts_floor(self):
+        pat = PartialPattern.from_progress(4, 2, [0.49, 0.5, 0.99, 1.0])
+        np.testing.assert_array_equal(pat.chunk_counts, [0, 1, 1, 2])
+
+    def test_key_quantizes_progress(self):
+        a = PartialPattern.from_progress(3, 2, [0.5, 1.0, 0.0])
+        b = PartialPattern.from_progress(3, 2, [0.6, 1.0, 0.49])
+        c = PartialPattern.from_progress(3, 2, [1.0, 1.0, 0.0])
+        assert a.key == b.key
+        assert a.key != c.key
+
+    def test_require_decodable_names_chunks(self):
+        # worker prefixes never reach chunk 1 with enough multiplicity
+        pat = PartialPattern.from_progress(4, 2, [0.5, 0.0, 0.5, 0.0])
+        assert not pat.decodable(2)
+        with pytest.raises(ValueError, match="chunk"):
+            pat.require_decodable(2)
+
+    def test_q1_lift_is_erasure_semantics(self):
+        era = ErasurePattern.normalize(5, erased=[2])
+        pat = PartialPattern.from_erasure(era, 1)
+        np.testing.assert_array_equal(pat.chunk_counts, [1, 1, 0, 1, 1])
+        assert pat.decodable(4)
+        assert not pat.decodable(5)
+
+    def test_traced_progress_is_traced_kind(self):
+        seen = {}
+
+        def f(prog):
+            pat = PartialPattern.from_progress(4, 2, prog)
+            seen["kind"] = pat.kind
+            with pytest.raises(ValueError, match="traced"):
+                pat.chunk_counts  # noqa: B018 - asserting the raise
+            return prog
+
+        jax.jit(f)(jnp.ones(4))
+        assert seen["kind"] == "traced"
+
+
+class TestPartialDecodeParity:
+    @pytest.mark.parametrize("kind,p,m,n,pp", SCHEMES)
+    @pytest.mark.parametrize("Q", SUB_TASKS)
+    def test_spanning_progress_is_exact(self, rng, kind, p, m, n, pp, Q):
+        plan, v = _make(kind, p, m, n, pp)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        out = cm(A, B, progress=_spanning_progress(plan.K, Q), sub_tasks=Q)
+        np.testing.assert_array_equal(np.asarray(out), C0)
+
+    @pytest.mark.parametrize("kind,p,m,n,pp", SCHEMES)
+    @pytest.mark.parametrize("Q", (2, 4))
+    def test_tau_exact_coverage_decodes(self, rng, kind, p, m, n, pp, Q):
+        # worker 0 dead, worker 1 one chunk short: chunk 0's coverage is
+        # EXACTLY tau (K = tau + 2) - the tightest decodable pattern.
+        plan, v = _make(kind, p, m, n, pp)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        prog = np.ones(plan.K)
+        prog[0] = 0.0
+        prog[1] = (Q - 1) / Q
+        pat = PartialPattern.from_progress(plan.K, Q, prog)
+        assert pat.coverage.min() == plan.tau
+        cm = CodedMatmul(plan, "reference")
+        out = cm(A, B, progress=prog, sub_tasks=Q)
+        np.testing.assert_array_equal(np.asarray(out), C0)
+
+    @pytest.mark.parametrize("kind,p,m,n,pp", SCHEMES)
+    def test_non_spanning_raises_loudly(self, rng, kind, p, m, n, pp):
+        plan, v = _make(kind, p, m, n, pp)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Q = 2
+        # only tau - 1 workers report ANY progress: chunk coverage < tau.
+        prog = np.zeros(plan.K)
+        prog[: plan.tau - 1] = 1.0
+        with pytest.raises(ValueError, match="does not span"):
+            cm(A, B, progress=prog, sub_tasks=Q)
+
+    def test_backend_parity(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        prog = _spanning_progress(plan.K, 2)
+        outs = [np.asarray(CodedMatmul(plan, b)(A, B, progress=prog,
+                                                sub_tasks=2))
+                for b in LOCAL_BACKENDS]
+        for out in outs:
+            np.testing.assert_array_equal(out, C0)
+
+    def test_q1_binary_spec_matches_legacy_path(self, rng):
+        # the SAME binary mask through the partial executable and the
+        # legacy erasure executable must be bitwise identical.
+        for kind, p, m, n, pp in SCHEMES:
+            plan, v = _make(kind, p, m, n, pp)
+            A, B, _ = _int_problem(rng, plan, v, 12, 10)
+            cm = CodedMatmul(plan, "reference")
+            mask = np.ones(plan.K)
+            mask[[0, plan.K - 1]] = 0
+            legacy = np.asarray(cm(A, B, mask=mask))
+            partial = np.asarray(cm(A, B, progress=mask, sub_tasks=1))
+            np.testing.assert_array_equal(partial, legacy)
+
+    def test_batched_operands(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        A2, B2, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        prog = _spanning_progress(plan.K, 2)
+        Cb = cm(jnp.stack([A, A2]), jnp.stack([B, B2]), progress=prog,
+                sub_tasks=2)
+        assert Cb.shape == (2, 12, 10)
+        np.testing.assert_array_equal(
+            np.asarray(Cb[0]), np.asarray(cm(A, B, progress=prog,
+                                             sub_tasks=2)))
+        np.testing.assert_array_equal(
+            np.asarray(Cb[1]), np.asarray(cm(A2, B2, progress=prog,
+                                             sub_tasks=2)))
+
+    @pytest.mark.parametrize("kind,p,m,n,pp", SCHEMES)
+    def test_traced_progress_under_jit(self, rng, kind, p, m, n, pp):
+        plan, v = _make(kind, p, m, n, pp)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Q = 2
+        f = jax.jit(lambda a, b, w: cm(a, b, progress=w, sub_tasks=Q))
+        prog = jnp.asarray(_spanning_progress(plan.K, Q))
+        np.testing.assert_array_equal(np.asarray(f(A, B, prog)), C0)
+
+    def test_fuzz_random_counts_span_or_raise(self, rng):
+        # seeded fuzz (always runs): any random chunk-count vector either
+        # spans every chunk tau times and decodes EXACTLY, or raises.
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Q, K, tau = 4, plan.K, plan.tau
+        fuzz = np.random.default_rng(1234)
+        decoded = failed = 0
+        for _ in range(30):
+            counts = fuzz.integers(0, Q + 1, size=K)
+            pat = PartialPattern.from_progress(K, Q, counts / Q)
+            if pat.decodable(tau):
+                out = cm(A, B, progress=counts / Q, sub_tasks=Q)
+                np.testing.assert_array_equal(np.asarray(out), C0)
+                decoded += 1
+            else:
+                with pytest.raises(ValueError, match="does not span"):
+                    cm(A, B, progress=counts / Q, sub_tasks=Q)
+                failed += 1
+        # the seed exercises BOTH branches; if not, the fuzz is vacuous.
+        assert decoded > 0 and failed > 0
+
+    def test_hypothesis_span_or_raise(self, rng):
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need the 'test' extra "
+                   "(pip install .[test])")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        plan, v = _make("polycode", 2, 2, 1, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Q, K, tau = 2, plan.K, plan.tau
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.lists(st.integers(min_value=0, max_value=Q),
+                        min_size=K, max_size=K))
+        def check(counts):
+            prog = np.asarray(counts, dtype=np.float64) / Q
+            pat = PartialPattern.from_progress(K, Q, prog)
+            if pat.decodable(tau):
+                out = cm(A, B, progress=prog, sub_tasks=Q)
+                np.testing.assert_array_equal(np.asarray(out), C0)
+            else:
+                with pytest.raises(ValueError, match="does not span"):
+                    cm(A, B, progress=prog, sub_tasks=Q)
+
+        check()
+
+    def test_mesh_backend_rejects_partial(self):
+        plan, _ = _make("bec", 2, 2, 2, 1)
+        ex = MeshExecutor(object())
+        with pytest.raises(NotImplementedError, match="partial"):
+            ex.make_pipeline(plan, ("partial", 2), jnp.float64)
+
+
+class TestDecodePartialKernel:
+    def test_matches_per_chunk_decode_and_reference(self, rng):
+        Q, mn, K, E = 3, 6, 5, 10
+        W = jnp.asarray(rng.integers(-3, 4, size=(Q, mn, K)), jnp.float64)
+        Y = jnp.asarray(rng.integers(-5, 6, size=(Q, K, E)), jnp.float64)
+        s = 7.0
+        out = np.asarray(kops.decode_partial(W, Y, s))
+        per_chunk = np.stack([np.asarray(kops.decode(W[q], Y[q], s))
+                              for q in range(Q)])
+        oracle = np.stack([np.asarray(kref.decode_ref(W[q], Y[q], s))
+                           for q in range(Q)])
+        np.testing.assert_array_equal(out, per_chunk)
+        np.testing.assert_array_equal(out, oracle)
+
+    def test_complex_panels_fall_back_to_oracle(self, rng):
+        Q, mn, K, E = 2, 4, 3, 6
+        W = jnp.asarray(rng.integers(-2, 3, size=(Q, mn, K))
+                        + 1j * rng.integers(-2, 3, size=(Q, mn, K)))
+        Y = jnp.asarray(rng.integers(-3, 4, size=(Q, K, E)), jnp.float64)
+        s = 5.0
+        out = np.asarray(kops.decode_partial(W, Y, s))
+        oracle = np.stack([np.asarray(kref.decode_ref(W[q], Y[q], s))
+                           for q in range(Q)])
+        np.testing.assert_array_equal(out, oracle)
+
+
+class TestProgressPlanner:
+    def test_binary_mask_when_healthy_pool_spans(self):
+        K, tau, Q = 8, 5, 4
+        plan = plan_partial_progress(np.ones(K), [1, 2], Q, tau)
+        expect = np.ones(K)
+        expect[[1, 2]] = 0.0
+        np.testing.assert_array_equal(plan, expect)
+
+    def test_consumes_cheapest_straggler(self):
+        # healthy pool (4) < tau (5): chunks must be repaired from the
+        # flagged pair; the planner picks the FASTER straggler's prefix.
+        K, tau, Q = 6, 5, 4
+        mean = np.array([1.0, 1.0, 1.0, 10.0, 2.0, 1.0])
+        plan = plan_partial_progress(mean, [3, 4], Q, tau)
+        assert plan[3] == 0.0
+        assert plan[4] > 0.0
+        counts = np.round(plan * Q).astype(np.int64)
+        assert chunk_coverage(counts, Q).min() >= tau
+
+    def test_q1_degenerates_to_revival(self):
+        K, tau = 6, 5
+        plan = plan_partial_progress(np.ones(K), [2, 4], 1, tau)
+        # one flagged worker must be fully revived to reach tau survivors.
+        assert sorted(plan.tolist()).count(1.0) == tau
+        assert set(plan.tolist()) <= {0.0, 1.0}
+
+    def test_fuzz_always_spans_and_keeps_healthy_full(self):
+        fuzz = np.random.default_rng(99)
+        for _ in range(50):
+            K = int(fuzz.integers(3, 10))
+            tau = int(fuzz.integers(1, K + 1))
+            Q = int(fuzz.integers(1, 5))
+            n_flag = int(fuzz.integers(0, K))
+            flagged = fuzz.choice(K, size=n_flag, replace=False).tolist()
+            mean = fuzz.uniform(0.5, 3.0, size=K)
+            plan = plan_partial_progress(mean, flagged, Q, tau)
+            counts = np.round(plan * Q).astype(np.int64)
+            # multiples of 1/Q, healthy workers untouched, always spans
+            np.testing.assert_allclose(plan, counts / Q, atol=1e-12)
+            healthy = [k for k in range(K) if k not in flagged]
+            np.testing.assert_array_equal(plan[healthy], 1.0)
+            assert chunk_coverage(counts, Q).min() >= tau
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="tau"):
+            plan_partial_progress(np.ones(4), [], 2, 5)
+        with pytest.raises(ValueError, match="positive"):
+            plan_partial_progress([1.0, -1.0, 1.0], [], 2, 2)
+        with pytest.raises(ValueError, match="out of range"):
+            plan_partial_progress(np.ones(4), [4], 2, 2)
+        with pytest.raises(ValueError, match="duplicate"):
+            plan_partial_progress(np.ones(4), [1, 1], 2, 2)
+        with pytest.raises(ValueError, match="Q >= 1"):
+            plan_partial_progress(np.ones(4), [], 0, 2)
+
+
+class TestFractionalCompletion:
+    def test_binary_progress_reproduces_mask(self, rng):
+        times = WorkerTimes(finish=rng.uniform(1.0, 4.0, size=8))
+        mask = np.array([1, 0, 1, 1, 0, 1, 1, 1], dtype=np.float64)
+        assert (times.completion_with_progress(mask)
+                == times.completion_with_mask(mask))
+
+    def test_fractional_is_max_weighted_finish(self, rng):
+        finish = rng.uniform(1.0, 4.0, size=6)
+        times = WorkerTimes(finish=finish)
+        w = np.array([1.0, 0.5, 0.0, 0.25, 1.0, 0.75])
+        kept = w > 0
+        assert times.completion_with_progress(w) == pytest.approx(
+            (w[kept] * finish[kept]).max())
+
+    def test_progress_validation(self, rng):
+        times = WorkerTimes(finish=rng.uniform(1.0, 2.0, size=4))
+        with pytest.raises(ValueError, match="nothing to wait"):
+            times.completion_with_progress(np.zeros(4))
+        with pytest.raises(ValueError, match="shape"):
+            times.completion_with_progress(np.ones(5))
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            times.completion_with_progress([0.5, 1.5, 1.0, 1.0])
+
+    def test_shifted_exp_scaling_law(self):
+        # w * (base + Exp(scale)) = w*base + Exp(w*scale): both parameters
+        # scale, so the closed forms generalise for free.
+        model = LatencyModel(base=np.array([1.0, 2.0, 3.0]),
+                             jitter=np.array([0.1, 0.2, 0.0]))
+        w = np.array([1.0, 0.5, 0.25])
+        base_f, scale_f = _masked_shifted_exp(model, np.ones(3))
+        base_w, scale_w = _masked_shifted_exp(model, w)
+        np.testing.assert_allclose(base_w, w * base_f)
+        np.testing.assert_allclose(scale_w, w * scale_f)
+
+    def test_closed_forms_match_monte_carlo(self):
+        model = LatencyModel(base=np.array([1.0, 1.5, 2.0, 1.2]),
+                             jitter=np.array([0.3, 0.1, 0.2, 0.4]))
+        w = np.array([1.0, 0.5, 0.75, 0.0])
+        base, scale = _masked_shifted_exp(model, w)
+        mc = np.random.default_rng(7)
+        draws = base + mc.exponential(1.0, size=(20000, base.size)) * scale
+        emp = draws.max(axis=1)
+        assert masked_completion_mean(model, w) == pytest.approx(
+            emp.mean(), rel=0.02)
+        t = float(np.median(emp))
+        cdf = masked_completion_cdf(model, w, np.array([t]))[0]
+        assert cdf == pytest.approx((emp <= t).mean(), abs=0.02)
+        assert masked_completion_quantile(model, w, 0.9) == pytest.approx(
+            np.quantile(emp, 0.9), rel=0.03)
+
+    def test_quantile_monotone_and_validated(self):
+        model = LatencyModel(base=1.0, jitter=0.2)
+        w = np.array([1.0, 0.5, 0.25])
+        qs = [masked_completion_quantile(model, w, q)
+              for q in (0.1, 0.5, 0.9, 0.99)]
+        assert qs == sorted(qs)
+        with pytest.raises(ValueError, match="outside"):
+            masked_completion_quantile(model, w, 1.5)
+
+
+class TestThresholdFeedback:
+    def _fb(self, **cfg):
+        defaults = dict(window=8, min_observations=4, threshold_gain=1.0,
+                        threshold_min=0.1)
+        defaults.update(cfg)
+        return ViolationFeedback(0.99, 1.0, FeedbackConfig(**defaults))
+
+    def test_base_until_min_observations(self):
+        fb = self._fb()
+        for _ in range(3):
+            fb.observe(10.0)  # violations, but the window is near-empty
+            assert fb.effective_threshold(0.5) == 0.5
+        fb.observe(10.0)
+        assert fb.effective_threshold(0.5) < 0.5
+
+    def test_monotone_nonincreasing_in_rate(self):
+        thresholds = []
+        for n_viol in range(9):
+            fb = self._fb()
+            for i in range(8):
+                fb.observe(10.0 if i < n_viol else 0.1)
+            thresholds.append(fb.effective_threshold(0.5))
+        assert thresholds == sorted(thresholds, reverse=True)
+
+    def test_floors_at_threshold_min(self):
+        fb = self._fb(threshold_gain=100.0)
+        for _ in range(8):
+            fb.observe(10.0)
+        assert fb.effective_threshold(0.5) == 0.1
+        # a base BELOW the floor wins: the law never raises the threshold.
+        assert fb.effective_threshold(0.05) == 0.05
+
+    def test_clean_window_never_exceeds_base(self):
+        fb = self._fb(threshold_gain=100.0)
+        for _ in range(8):
+            fb.observe(0.1)  # zero violations: excess rate is negative
+        assert fb.effective_threshold(0.5) == 0.5
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="threshold_gain"):
+            FeedbackConfig(threshold_gain=-1.0)
+        with pytest.raises(ValueError, match="threshold_min"):
+            FeedbackConfig(threshold_min=0.0)
+        with pytest.raises(ValueError, match="threshold_min"):
+            FeedbackConfig(threshold_min=1.5)
+
+
+class TestPartialServingCaches:
+    def test_builds_flat_across_progress_patterns(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, C0 = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Q = 2
+        cm(A, B, progress=_spanning_progress(plan.K, Q), sub_tasks=Q)
+        builds = cm.cache_info()["builds"]
+        for k in range(2, plan.K):
+            prog = np.ones(plan.K)
+            prog[k] = (Q - 1) / Q
+            out = cm(A, B, progress=prog, sub_tasks=Q)
+            np.testing.assert_array_equal(np.asarray(out), C0)
+        # fresh fractional patterns hit the SAME partial executable
+        assert cm.cache_info()["builds"] == builds
+
+    def test_panel_stacks_memoised_by_signature(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        prog = _spanning_progress(plan.K, 2)
+        cm(A, B, progress=prog, sub_tasks=2)
+        panels = cm.cache_info()["panel_builds"]
+        cm(A, B, progress=prog, sub_tasks=2)  # identical signature
+        assert cm.cache_info()["panel_builds"] == panels
+
+    def test_distinct_q_distinct_executables(self, rng):
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        cm(A, B, progress=_spanning_progress(plan.K, 2), sub_tasks=2)
+        builds = cm.cache_info()["builds"]
+        cm(A, B, progress=_spanning_progress(plan.K, 4), sub_tasks=4)
+        assert cm.cache_info()["builds"] == builds + 1
