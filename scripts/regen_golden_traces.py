@@ -19,19 +19,27 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
                     help="output directory (default: tests/golden/)")
+    ap.add_argument("--serve", action="store_true",
+                    help="regenerate ONLY the golden serve trace")
     args = ap.parse_args(argv)
 
     from repro.chaos.golden import golden_names, golden_trace
     from repro.core.numerics import enable_x64
+    from repro.serve import GOLDEN_SERVE_SCENARIO, golden_serve_trace
 
     root = Path(__file__).resolve().parents[1]
     out = Path(args.out) if args.out else root / "tests" / "golden"
     with enable_x64():
-        for name in golden_names():
-            trace = golden_trace(name)
-            path = trace.save(out / f"{name}.jsonl")
-            rungs = sorted({s.rung for s in trace.steps})
-            print(f"{path}: {len(trace.steps)} steps, rungs {rungs}")
+        if not args.serve:
+            for name in golden_names():
+                trace = golden_trace(name)
+                path = trace.save(out / f"{name}.jsonl")
+                rungs = sorted({s.rung for s in trace.steps})
+                print(f"{path}: {len(trace.steps)} steps, rungs {rungs}")
+        serve = golden_serve_trace()
+        path = serve.save(out / f"serve_{GOLDEN_SERVE_SCENARIO}.jsonl")
+        print(f"{path}: {len(serve.requests)} requests, "
+              f"{len(serve.batches)} batches")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,12 @@ from repro.chaos.scenarios import (
     scenario_names,
     trace_matrix,
 )
+from repro.chaos.serialize import (
+    dataclass_to_dict,
+    jsonable,
+    report_to_dict,
+    tuplify,
+)
 from repro.chaos.trace import (
     Trace,
     TraceRecorder,
@@ -59,4 +65,8 @@ __all__ = [
     "TraceRecorder",
     "TraceStep",
     "verify_replay",
+    "dataclass_to_dict",
+    "jsonable",
+    "report_to_dict",
+    "tuplify",
 ]

@@ -42,6 +42,7 @@ from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.chaos.serialize import report_to_dict, tuplify
 from repro.core.simulator import TimeFeed
 
 if TYPE_CHECKING:  # StepReport lives in control/, which imports jax;
@@ -91,28 +92,19 @@ class TraceStep:
     @classmethod
     def from_report(cls, report: StepReport,
                     times: np.ndarray) -> "TraceStep":
-        """Pair a ``StepReport`` with the times that produced it."""
-        return cls(
-            step=report.step,
-            times=tuple(float(t) for t in np.asarray(times)),
-            rung=report.rung,
-            switched=report.switched,
-            erased=tuple(report.erased),
-            sim_latency_s=report.sim_latency_s,
-            slack=report.slack,
-            respecialize=report.respecialize,
-            shrink_target=(tuple(report.shrink_target)
-                           if report.shrink_target is not None else None),
-            exact=report.exact,
-            slo_violation=report.slo_violation,
-            predicted_tail_s=report.predicted_tail_s,
-            realized_s=report.realized_s,
-            realized_violation=report.realized_violation,
-            q_effective=report.q_effective,
-            progress=(tuple(float(x) for x in report.progress)
-                      if report.progress is not None else None),
-            threshold_effective=report.threshold_effective,
-        )
+        """Pair a ``StepReport`` with the times that produced it.
+
+        Field selection goes through the shared
+        :func:`repro.chaos.serialize.report_to_dict` (everything except
+        wall-clock noise), so a field added to ``StepReport`` must be
+        added HERE too — the resulting ``TypeError`` on the next recorded
+        trace is the reminder that the trace schema (and
+        ``COMPARED_FIELDS``) needs an intentional update.
+        """
+        rec = report_to_dict(report)
+        rec["times"] = [float(t) for t in np.asarray(times)]
+        return cls(**{k: tuplify(v) if isinstance(v, list) else v
+                      for k, v in rec.items()})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -46,7 +46,7 @@ from repro.control.policy import (
     QuantileLatencyPolicy,
 )
 
-__all__ = ["StepReport", "AdaptiveServer"]
+__all__ = ["StepReport", "StepDecision", "AdaptiveServer"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +70,36 @@ class StepReport:
     q_effective: Optional[float] = None       # feedback-adjusted quantile this step
     progress: Optional[Tuple[float, ...]] = None  # partial plan (sub_tasks > 1)
     threshold_effective: Optional[float] = None   # adaptive monitor threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class StepDecision:
+    """The CONTROL half of one serving step, before any facade call.
+
+    ``begin_step`` runs the whole decision sequence — feed ingestion,
+    monitor update, feedback restatement, policy (re)ranking, SLO
+    fallback, mask/progress planning, elastic bookkeeping — and freezes
+    the result here; ``complete_step`` turns it into a ``StepReport``
+    once the decoded product is in hand.  The split exists so a serving
+    loop can interleave the EXECUTION of one step (worker stage, decode
+    stage) with other work — e.g. pipelining decode of step *t* against
+    the worker stage of step *t+1* — without re-entering the control
+    logic.  ``step()`` composes begin/execute/complete back-to-back and
+    is bit-identical to the pre-split loop.
+    """
+
+    step: int                      # the server step this decision is for
+    times: np.ndarray              # the (K,) per-worker finish times ingested
+    rung: str                      # rung that will serve (already switched to)
+    switched: bool                 # did the decision change the active rung
+    mask: np.ndarray               # (K,) 0/1 erasure mask (derived when partial)
+    progress: Optional[np.ndarray]  # (K,) fractional plan (sub_tasks > 1)
+    slo_violation: bool            # predicted q-quantile exceeded the SLO
+    predicted_tail_s: Optional[float]  # served rung's modelled q-quantile
+    q_effective: Optional[float]   # feedback-adjusted quantile this step
+    threshold_effective: Optional[float]  # feedback-adjusted flag threshold
+    respecialize: bool             # erasure budget exhausted ladder-wide
+    shrink_target: Optional[Tuple[int, int]]  # plan_shrink mesh on handoff
 
 
 class AdaptiveServer:
@@ -194,15 +224,13 @@ class AdaptiveServer:
         return True
 
     # -- one serving step ----------------------------------------------------
-    def step(self, A, B) -> Tuple[jax.Array, StepReport]:
-        """Serve one coded matmul request through the control loop.
+    def begin_step(self) -> StepDecision:
+        """Run the control half of one step: ingest times, decide, plan.
 
-        Args:
-            A: (v, r) or batch-leading (b, v, r) left operand.
-            B: (v, t) right operand (shared across a batch).
-
-        Returns:
-            ``(C, StepReport)`` — the decoded product and what the loop did.
+        Consumes exactly one feed step and mutates every piece of control
+        state (monitor, feedback, ladder rung, elastic policy) exactly as
+        the head of the legacy ``step()`` did.  Pair each call with exactly
+        one ``complete_step`` — the step counter only advances there.
         """
         times = self._worker_times()
         self.monitor.record_step(times)
@@ -301,17 +329,45 @@ class AdaptiveServer:
             except ValueError:
                 shrink_target = None  # not even a 1x1 mesh left
 
-        t0 = time.perf_counter()
-        if progress is not None:
-            C = self.ladder(A, B, progress=progress,
-                            sub_tasks=self.sub_tasks)
-        else:
-            C = self.ladder(A, B, mask=mask)
-        jax.block_until_ready(C)
-        wall_ms = (time.perf_counter() - t0) * 1e3
+        return StepDecision(
+            step=self.steps,
+            times=times,
+            rung=self.ladder.active,
+            switched=switched,
+            mask=mask,
+            progress=progress,
+            slo_violation=slo_violation,
+            predicted_tail_s=predicted_tail,
+            q_effective=q_eff,
+            threshold_effective=thr_eff,
+            respecialize=respecialize,
+            shrink_target=shrink_target,
+        )
 
+    def execute(self, decision: StepDecision, A, B) -> jax.Array:
+        """The one-shot facade call ``decision`` prescribes (no pipelining).
+
+        A serving loop wanting the two-stage overlap calls the ladder's
+        ``worker_stage``/``decode_stage`` with ``decision.mask`` instead;
+        either route is bit-identical.
+        """
+        if decision.progress is not None:
+            return self.ladder(A, B, progress=decision.progress,
+                               sub_tasks=self.sub_tasks)
+        return self.ladder(A, B, mask=decision.mask)
+
+    def complete_step(self, decision: StepDecision, C, wall_ms: float,
+                      A=None, B=None) -> StepReport:
+        """Close out a ``begin_step`` decision once its product is decoded.
+
+        Prices the step (masked/fractional completion of the ingested
+        times), feeds the realized latency to the violation feedback, runs
+        the optional exactness check (needs ``A``/``B``), and appends +
+        returns the ``StepReport``.  Advances the step counter.
+        """
+        times, mask, progress = decision.times, decision.mask, decision.progress
         exact = None
-        if self.check_exact:
+        if self.check_exact and A is not None:
             exact = bool(np.array_equal(np.asarray(C),
                                         np.asarray(uncoded_matmul(A, B))))
 
@@ -325,32 +381,53 @@ class AdaptiveServer:
             # own pricing: masked completion + the served rung's overhead
             # (the same additive cost every prediction carries).
             realized = sim_latency + self.slo_policy.overhead_for(
-                self.ladder.active)
+                decision.rung)
             realized_violation = self.feedback.observe(realized)
 
         report = StepReport(
-            step=self.steps,
-            rung=self.ladder.active,
-            switched=switched,
+            step=decision.step,
+            rung=decision.rung,
+            switched=decision.switched,
             erased=tuple(int(i) for i in np.flatnonzero(mask == 0)),
             sim_latency_s=sim_latency,
             wall_ms=wall_ms,
             slack=self.elastic.slack,
-            respecialize=respecialize,
-            shrink_target=shrink_target,
+            respecialize=decision.respecialize,
+            shrink_target=decision.shrink_target,
             exact=exact,
-            slo_violation=slo_violation,
-            predicted_tail_s=predicted_tail,
+            slo_violation=decision.slo_violation,
+            predicted_tail_s=decision.predicted_tail_s,
             realized_s=realized,
             realized_violation=realized_violation,
-            q_effective=q_eff,
+            q_effective=decision.q_effective,
             progress=(None if progress is None
                       else tuple(float(x) for x in progress)),
-            threshold_effective=thr_eff,
+            threshold_effective=decision.threshold_effective,
         )
         self.reports.append(report)
         self.steps += 1
-        return C, report
+        return report
+
+    def step(self, A, B) -> Tuple[jax.Array, StepReport]:
+        """Serve one coded matmul request through the control loop.
+
+        ``begin_step`` (decide) -> ``execute`` (one-shot facade call) ->
+        ``complete_step`` (price, feed back, report), composed
+        back-to-back; bit-identical to the pre-split synchronous loop.
+
+        Args:
+            A: (v, r) or batch-leading (b, v, r) left operand.
+            B: (v, t) right operand (shared across a batch).
+
+        Returns:
+            ``(C, StepReport)`` — the decoded product and what the loop did.
+        """
+        decision = self.begin_step()
+        t0 = time.perf_counter()
+        C = self.execute(decision, A, B)
+        jax.block_until_ready(C)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        return C, self.complete_step(decision, C, wall_ms, A, B)
 
     def run(self, requests, make_request: Callable[[int], Tuple]) -> List[StepReport]:
         """Serve ``requests`` steps of ``make_request(step) -> (A, B)``."""

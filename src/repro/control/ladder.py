@@ -160,6 +160,41 @@ class PlanLadder:
             jnp.concatenate([A, pad], axis=0), B, **erasure)
         return C[:n]
 
+    def worker_stage(self, A, B) -> Tuple[jnp.ndarray, dict]:
+        """Stages 1+2 (encode + worker products) on the ACTIVE rung.
+
+        Applies the same bucket round-up padding as ``__call__``, then
+        stops BEFORE erase/decode.  Returns ``(Y, ctx)``: the (*batch, K,
+        br, bt) worker products and the context :meth:`decode_stage` needs
+        to finish the step later — the rung that produced Y (so a rung
+        switch between the stages decodes with the RIGHT plan), the
+        original trailing dims, and the true batch size to slice back to.
+        Composing the two stages is bit-identical to ``__call__``.
+        """
+        A = jnp.asarray(A)
+        B = jnp.asarray(B)
+        rt = (int(A.shape[-1]), int(B.shape[-1]))
+        padded = self._bucketed_batch(A, B)
+        n = None
+        if padded is not None:
+            n, bucket = padded
+            pad = jnp.zeros((bucket - n,) + A.shape[1:], A.dtype)
+            A = jnp.concatenate([A, pad], axis=0)
+        Y = self._facades[self._active].worker_stage(A, B)
+        return Y, {"rung": self._active, "rt": rt, "batch": n}
+
+    def decode_stage(self, Y, ctx: dict, **erasure) -> jnp.ndarray:
+        """Stages 3+4 for a :meth:`worker_stage` result (+ bucket unslice).
+
+        ``ctx`` is the context dict ``worker_stage`` returned; the erasure
+        keywords are those of ``CodedMatmul.decode_stage`` (binary specs
+        only).  Decodes on the rung that PRODUCED Y even if the ladder has
+        since switched.
+        """
+        C = self._facades[ctx["rung"]].decode_stage(Y, ctx["rt"], **erasure)
+        n = ctx["batch"]
+        return C if n is None else C[:n]
+
     def _bucketed_batch(self, A, B) -> Optional[Tuple[int, int]]:
         """(batch size, covering bucket) when padding applies, else None.
 
@@ -186,7 +221,7 @@ class PlanLadder:
     # -- compilation --------------------------------------------------------
     def prewarm(self, a_shape: Sequence[int], b_shape: Sequence[int],
                 reps: int = 1, batch_sizes: Sequence[int] = (),
-                sub_tasks: int = 1) -> dict:
+                sub_tasks: int = 1, stages: bool = False) -> dict:
         """Compile every rung for one problem shape; measure warm step cost.
 
         One call per rung with the full-survivor concrete pattern builds the
@@ -209,6 +244,11 @@ class PlanLadder:
                 recompile-free as binary serving — any concrete progress
                 vector is pure data against the one ("partial", Q)
                 executable.
+            stages: when True, additionally compile the SPLIT-STAGE
+                executables per rung (and per bucket): the "products"
+                worker stage and the ("decode", r, t) stage the serve
+                tier's pipelined dispatch uses, so pipelined serving is as
+                recompile-free as one-shot serving.
 
         Returns:
             ``cache_info()`` plus the measured ``overhead_s`` per rung.
@@ -230,11 +270,19 @@ class PlanLadder:
             self.step_overhead_s[rung] = (time.perf_counter() - t0) / reps
             if sub_tasks > 1:
                 jax.block_until_ready(cm(A, B, sub_tasks=sub_tasks))
+            if stages:
+                rt = (int(a_shape[-1]), int(b_shape[-1]))
+                Y = cm.worker_stage(A, B)
+                jax.block_until_ready(cm.decode_stage(Y, rt, erased=[]))
             for bucket in self._buckets:
                 Ab = jnp.zeros((bucket,) + tuple(a_shape), self.dtype)
                 jax.block_until_ready(cm(Ab, B, erased=[]))
                 if sub_tasks > 1:
                     jax.block_until_ready(cm(Ab, B, sub_tasks=sub_tasks))
+                if stages:
+                    rt = (int(a_shape[-1]), int(b_shape[-1]))
+                    Yb = cm.worker_stage(Ab, B)
+                    jax.block_until_ready(cm.decode_stage(Yb, rt, erased=[]))
         info = self.cache_info()
         info["overhead_s"] = dict(self.step_overhead_s)
         info["batch_buckets"] = self._buckets

@@ -33,6 +33,16 @@ config) as a JSONL trace; ``--replay PATH`` re-serves the recorded times
 verbatim — decisions reproduce bit-deterministically when the server
 flags match the recording, and a config drift prints a warning.
 
+``--serve-tier`` lifts the loop into the async multi-tenant tier
+(``repro.serve``): per-tenant token-bucket admission and bounded queues,
+continuous batching into the prewarmed buckets, per-SLO-class adaptive
+servers with earliest-deadline-first dispatch, and a two-stage pipeline
+overlapping decode of step t with the workers of step t+1 — all on a
+seeded simulated clock.  ``--tenant-spec`` takes the spec as inline JSON
+or ``@path/to/spec.json`` (default: the built-in three-tenant example);
+``--requests`` becomes per-tenant; ``--record`` saves a replayable serve
+trace; ``--no-pipeline`` serialises the stages for A/B comparison.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.coded_serve --backend fused \
       --requests 12 --size 256 --fail-rate 0.3
@@ -42,6 +52,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.coded_serve --adaptive \
       --scenario pareto --feedback --slo-ms 12000 --requests 32 \
       --record /tmp/pareto.jsonl
+  PYTHONPATH=src python -m repro.launch.coded_serve --serve-tier \
+      --scenario heavy_tail --requests 12 --seed 11 \
+      --record /tmp/serve.jsonl
 """
 from __future__ import annotations
 
@@ -103,6 +116,21 @@ def main(argv=None):
                     help="straggler-score threshold the monitor flags at; "
                          "with --feedback it becomes the BASE of the "
                          "adaptive threshold law")
+    ap.add_argument("--serve-tier", action="store_true",
+                    help="serve through the async multi-tenant tier "
+                         "(admission control + continuous batching + "
+                         "per-class SLOs + pipelined stages); --requests "
+                         "becomes per-tenant")
+    ap.add_argument("--tenant-spec", default=None, metavar="SPEC",
+                    help="tenant/class spec for --serve-tier: inline JSON "
+                         "or @path/to/spec.json (default: the built-in "
+                         "three-tenant example)")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="serve-tier batch ceiling (0 = the largest "
+                         "prewarmed bucket)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="serve-tier: serialise worker and decode stages "
+                         "instead of overlapping them (A/B baseline)")
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="record the adaptive run as a JSONL trace")
     ap.add_argument("--replay", default=None, metavar="PATH",
@@ -120,6 +148,17 @@ def main(argv=None):
     if not 0.0 < args.monitor_threshold <= 1.0:
         ap.error(f"--monitor-threshold must be in (0, 1], got "
                  f"{args.monitor_threshold}")
+    if args.serve_tier:
+        if args.adaptive:
+            ap.error("--serve-tier already runs the control plane; drop "
+                     "--adaptive")
+        if args.replay or args.feedback or args.slo_ms is not None:
+            ap.error("--serve-tier takes SLOs and feedback from the tenant "
+                     "spec, not --slo-ms/--feedback, and does not replay "
+                     "adaptive traces")
+        return run_serve_tier(args)
+    if args.tenant_spec or args.no_pipeline or args.max_batch:
+        ap.error("--tenant-spec/--no-pipeline/--max-batch need --serve-tier")
     if args.adaptive:
         return run_adaptive(args)
     if args.scenario or args.feedback or args.record or args.replay:
@@ -362,6 +401,101 @@ def run_adaptive(args):
             out = recorder.finish(server.reports).save(args.record)
             print(f"recorded trace -> {out}")
         return server.reports
+
+
+def run_serve_tier(args):
+    from repro.control import PlanLadder
+    from repro.core import conservative_L
+    from repro.core.numerics import enable_x64
+    from repro.serve import DEFAULT_SPEC, ServeTier, ServeTrace, \
+        parse_tenant_spec
+
+    with enable_x64():
+        import jax.numpy as jnp
+
+        spec = DEFAULT_SPEC
+        if args.tenant_spec:
+            spec = args.tenant_spec
+            if spec.startswith("@"):
+                from pathlib import Path
+
+                spec = Path(spec[1:]).read_text()
+        classes, tenants = parse_tenant_spec(spec)
+
+        p, m, n, K = 4, 2, 1, 12
+        v = max(args.size - args.size % p, p)
+        r, t = (v // 2) - (v // 2) % m, (v // 2) - (v // 2) % n
+        backend = args.backend
+        if backend == "mesh":
+            print("--serve-tier does not drive the mesh backend (the split "
+                  "worker/decode stages run fused on mesh); falling back to "
+                  "the reference executor")
+            backend = "reference"
+        ladder = PlanLadder(p, m, n, K=K, L=conservative_L(v, 4, 4),
+                            backend=backend)
+        top = args.max_batch or 8
+        buckets = tuple(1 << i for i in range((top - 1).bit_length() + 1))
+        split = args.sub_tasks == 1
+        info = ladder.prewarm((v, r), (v, t), batch_sizes=buckets,
+                              sub_tasks=args.sub_tasks, stages=split)
+        builds_at_prewarm = info["builds"]
+
+        feed = None
+        if args.scenario:
+            from repro.chaos import make_scenario, scenario_names
+
+            if args.scenario not in scenario_names():
+                raise SystemExit(f"unknown scenario {args.scenario!r}; "
+                                 f"have {scenario_names()}")
+            feed = make_scenario(args.scenario).compile(K, seed=args.seed)
+
+        tier = ServeTier(
+            ladder, classes=tuple(classes.values()),
+            tenants=tuple(tenants.values()), feed=feed,
+            seed=args.seed, score_threshold=args.monitor_threshold,
+            sub_tasks=args.sub_tasks, check_exact=True,
+            pipelined=not args.no_pipeline)
+        print(f"serve tier: rungs={ladder.rungs} K={K} v={v} r={r} t={t} "
+              f"buckets={buckets} pipelined={not args.no_pipeline} "
+              f"split_stages={tier.split_stages} "
+              f"tenants={sorted(tenants)} classes={sorted(classes)}; "
+              f"scenario={args.scenario or 'constant'} seed={args.seed}; "
+              f"prewarm: {builds_at_prewarm} executables")
+
+        rng = np.random.default_rng(args.seed)
+        payload = rng.integers(-4, 5, size=(len(tenants) * 64, v, r))
+
+        def make_A(request):
+            return jnp.asarray(payload[request.rid % len(payload)],
+                               jnp.float64)
+
+        B = jnp.asarray(rng.integers(-4, 5, size=(v, t)), jnp.float64)
+        result = tier.run(make_A, B, args.requests)
+
+        stats = result.tenant_stats()
+        print(f"{'tenant':<10} {'class':<10} {'gen':>4} {'adm':>4} "
+              f"{'shed':>4} {'p50 s':>8} {'p_slo s':>8} {'slo s':>7} "
+              f"{'viol':>5}  met")
+        for name, st in stats.items():
+            print(f"{name:<10} {st['slo_class']:<10} {st['generated']:>4} "
+                  f"{st['admitted']:>4} {st['shed']:>4} "
+                  f"{st['p50_s'] if st['p50_s'] is None else round(st['p50_s'], 3)!s:>8} "
+                  f"{st['p_slo_s'] if st['p_slo_s'] is None else round(st['p_slo_s'], 3)!s:>8} "
+                  f"{st['slo_s']:>7} {st['violations']:>5}  "
+                  f"{'yes' if st['slo_met'] else 'NO'}"
+                  + (f"  shed_reasons={st['shed_reasons']}"
+                     if st['shed_reasons'] else ""))
+        cache = ladder.cache_info()
+        assert cache["builds"] == builds_at_prewarm, (
+            f"recompile after prewarm: {cache}")
+        print(f"{len(result.admitted)}/{len(result.requests)} admitted, "
+              f"{len(result.shed)} shed, {len(result.batches)} batches, "
+              f"sustained {result.throughput_rps():.3f} req/s (simulated); "
+              f"{cache['builds']} executables (unchanged since prewarm)")
+        if args.record:
+            out = ServeTrace.from_result(result).save(args.record)
+            print(f"recorded serve trace -> {out}")
+        return result
 
 
 if __name__ == "__main__":

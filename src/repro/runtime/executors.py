@@ -116,7 +116,15 @@ class LocalExecutor:
         def finish(C_blocks, r, t):
             return unpad(block_recompose(C_blocks), (r, t)).astype(dtype)
 
+        if kind == "products":
+            # stage 1+2 only (encode + worker products), for split-stage
+            # serving: the (K, br, bt) output feeds a ("decode", r, t)
+            # executable later, possibly while the NEXT step's products run.
+            return products
+
         if isinstance(kind, tuple):
+            if kind[0] in ("decode", "decode-traced"):
+                return self._make_decode_pipeline(plan, kind, finish)
             return self._make_partial_pipeline(plan, kind, dtype, products,
                                                finish)
 
@@ -136,6 +144,39 @@ class LocalExecutor:
             C_blocks = decode_masked(plan.scheme, z_all, Y,
                                      mask.astype(Y.real.dtype), plan.s)
             return finish(C_blocks, A.shape[1], B.shape[1])
+
+        return fn
+
+    def _make_decode_pipeline(self, plan: CodedMatmulPlan, kind: tuple,
+                              finish: Callable) -> Callable:
+        """Stage 3+4 only: erase + decode precomputed worker products.
+
+        The kind tuple carries the ORIGINAL unpadded operand trailing dims
+        ``(r, t)`` statically — the products array has padded block shape,
+        so the slice that strips the padding cannot be recovered from the
+        stage input alone.  Signatures mirror the full pipeline's:
+
+          ("decode", r, t):         fn(Y, mask, W)   with W the (mn, K) panel
+          ("decode-traced", r, t):  fn(Y, mask)      in-body masked solve
+        """
+        style, r, t = kind
+
+        if style == "decode":
+
+            def fn(Y, mask, W):
+                Ym = Y * mask.astype(Y.dtype)[:, None, None]
+                C_blocks = decode_with_weights(plan.scheme, W, Ym, plan.s)
+                return finish(C_blocks, r, t)
+
+            return fn
+
+        z_all = jnp.asarray(plan.z_points)
+
+        def fn(Y, mask):
+            Ym = Y * mask.astype(Y.dtype)[:, None, None]
+            C_blocks = decode_masked(plan.scheme, z_all, Ym,
+                                     mask.astype(Y.real.dtype), plan.s)
+            return finish(C_blocks, r, t)
 
         return fn
 
@@ -323,14 +364,35 @@ class MeshExecutor:
 
         Raises:
             NotImplementedError: for partial-straggler (tuple) kinds — the
-                mesh pipeline decodes once per device from a single panel.
+                mesh pipeline decodes once per device from a single panel —
+                and for split-stage kinds ("products" / ("decode", r, t)),
+                whose stages run fused inside one shard_map program.
             ValueError: if the mesh axis size differs from the plan's K, or
                 the plan uses complex (unit-circle) evaluation points.
         """
-        if not isinstance(kind, str):
+        supported = ", ".join(sorted(
+            name for name, cls in BACKENDS.items()
+            if isinstance(cls, type) and issubclass(cls, LocalExecutor)))
+        is_stage = (kind == "products"
+                    or (isinstance(kind, tuple) and kind
+                        and kind[0] in ("decode", "decode-traced")))
+        if is_stage:
             raise NotImplementedError(
-                "mesh backend does not support partial-straggler sub-tasking "
-                "(sub_tasks > 1); use a local backend")
+                f"mesh backend does not support split-stage serving (kind "
+                f"{kind!r}): encode, worker products, and decode run fused "
+                f"inside one shard_map program, so there is no seam to "
+                f"pipeline across. Split worker/decode stages are supported "
+                f"by the local backends: {supported}.")
+        if not isinstance(kind, str):
+            Q = kind[1] if isinstance(kind, tuple) and len(kind) > 1 else "?"
+            raise NotImplementedError(
+                f"mesh backend does not support partial-straggler "
+                f"sub-tasking (kind {kind!r}, requested via sub_tasks={Q} — "
+                f"the --sub-tasks flag — or a progress= spec): the "
+                f"shard_map pipeline decodes once per device from a single "
+                f"panel. Partial patterns ARE supported by the local "
+                f"backends: {supported}. Switch to one of those, or pass "
+                f"--sub-tasks 1 to keep binary erasure on mesh.")
         K = self.mesh.shape[self.axis]
         if K != plan.K:
             raise ValueError(

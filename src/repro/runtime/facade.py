@@ -229,6 +229,72 @@ class CodedMatmul:
             return fn(A, B, mask_arr, W)
         return fn(A, B, mask_arr)
 
+    # -- split-stage serving -------------------------------------------------
+    def worker_stage(self, A, B) -> jnp.ndarray:
+        """Stages 1+2 only: encode + ALL-K worker products (no erase/decode).
+
+        The returned (*batch, K, br, bt) padded block products are what the
+        workers hand back before any erasure is applied; feed them to
+        :meth:`decode_stage` (with the erasure pattern observed MEANWHILE)
+        to finish the step.  Splitting the call lets a serving loop overlap
+        decode of step ``t`` with the worker stage of step ``t+1``; the
+        composition is bit-identical to the one-shot ``__call__``.
+
+        Raises:
+            NotImplementedError: on backends whose pipeline has no
+                worker/decode seam (mesh).
+        """
+        A = jnp.asarray(A)
+        B = jnp.asarray(B)
+        self._check_operands(A, B)
+        fn = self._get_executable(A, B, "products")
+        return fn(A, B)
+
+    def decode_stage(self, Y, rt, erasure: Any = None, *,
+                     erased: Optional[Sequence[int]] = None,
+                     survivors: Optional[Sequence[int]] = None,
+                     mask: Any = None) -> jnp.ndarray:
+        """Stages 3+4: erase + decode a :meth:`worker_stage` result.
+
+        Args:
+            Y: (*batch, K, br, bt) worker products from THIS facade's
+                :meth:`worker_stage` (same plan, same operand shapes).
+            rt: the original trailing dims ``(r, t)`` =
+                ``(A.shape[-1], B.shape[-1])`` — static per executable,
+                because slicing the block padding off the recomposed
+                product needs concrete sizes the stage input no longer
+                carries.
+            erasure / erased / survivors / mask: binary erasure spec, as
+                for ``__call__`` (concrete or traced; partial/progress
+                specs have no split path — decode panels are per chunk).
+
+        Returns:
+            (*batch, r, t) decoded product, bit-identical to the one-shot
+            call under the same pattern.
+
+        Raises:
+            ValueError: on conflicting specs or fewer than tau survivors.
+            NotImplementedError: on backends with no worker/decode seam.
+        """
+        Y = jnp.asarray(Y)
+        r, t = int(rt[0]), int(rt[1])
+        pattern = ErasurePattern.normalize(
+            self.plan.K, erasure, erased=erased, survivors=survivors,
+            mask=mask)
+        kind = (("decode", r, t) if pattern.kind == "concrete"
+                else ("decode-traced", r, t))
+        fn = self._get_decode_executable(Y, kind)
+        mask_arr = pattern.mask_array(self._mask_dtype())
+        if pattern.kind == "concrete":
+            if pattern.n_survivors < self.plan.tau:
+                raise ValueError(
+                    f"only {pattern.n_survivors} survivors < "
+                    f"tau={self.plan.tau}: undecodable")
+            panel = self.panel_cache.get(pattern.mask)
+            W = jnp.asarray(panel.W, self._decode_dtype())
+            return fn(Y, mask_arr, W)
+        return fn(Y, mask_arr)
+
     def _call_partial(self, A, B, pattern: PartialPattern) -> jnp.ndarray:
         """Partial-straggler decode path: per-chunk masks + panel stack."""
         A = jnp.asarray(A)
@@ -267,12 +333,35 @@ class CodedMatmul:
         self._stats["builds"] += 1
         return fn
 
+    def _get_decode_executable(self, Y, kind):
+        # decode-stage memo: keyed on the PRODUCTS shape plus the static
+        # (r, t) folded into the kind — leading dims beyond (K, br, bt)
+        # are batch dims, vmapped over Y only (mask/W stay per-step data).
+        key = (self._plan_token, self._executor.cache_token(), Y.shape,
+               str(self.dtype), kind)
+        fn = self._executables.get(key)
+        if fn is not None:
+            self._stats["hits"] += 1
+            return fn
+        base = self._executor.make_pipeline(self.plan, kind, self.dtype)
+        n_data = 2 if kind[0] == "decode" else 1
+        for _ in range(Y.ndim - 3):
+            base = jax.vmap(base, in_axes=(0, *([None] * n_data)))
+        fn = jax.jit(base)
+        self._executables[key] = fn
+        self._stats["builds"] += 1
+        return fn
+
     def _build(self, a_batch: int, b_batch: int, kind):
         base = self._executor.make_pipeline(self.plan, kind, self.dtype)
         # data operands after (A, B): (mask, W) / (chunk_masks, W_stack) for
-        # panel-carrying kinds, (mask,) / (progress,) for traced ones.
-        n_data = 2 if kind == "concrete" or (
-            isinstance(kind, tuple) and kind[0] == "partial") else 1
+        # panel-carrying kinds, (mask,) / (progress,) for traced ones, and
+        # none at all for the split worker stage ("products").
+        if kind == "products":
+            n_data = 0
+        else:
+            n_data = 2 if kind == "concrete" or (
+                isinstance(kind, tuple) and kind[0] == "partial") else 1
         if (a_batch or b_batch) and not self._executor.supports_batching:
             raise NotImplementedError(
                 f"backend {self.backend!r} does not support batched operands")

@@ -480,6 +480,66 @@ class TestBatchedLadder:
         with pytest.raises(ValueError):
             _ladder().prewarm(*SHAPES, batch_sizes=(0,))
 
+    def test_batch_exactly_on_bucket_boundary(self):
+        """A batch landing exactly on a prewarmed bucket serves through
+        that executable verbatim: zero new builds, zero padding rows."""
+        lad = _ladder(include=["bec"])
+        lad.prewarm(*SHAPES, batch_sizes=(2, 4))
+        builds = lad.cache_info()["builds"]
+        rng = np.random.default_rng(3)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        for n in (2, 4):
+            A = jnp.asarray(rng.integers(-4, 5, size=(n,) + SHAPES[0]),
+                            jnp.float64)
+            C = lad(A, B, erased=[1])
+            assert C.shape[0] == n
+            oracle = np.einsum("bvr,vt->brt", np.asarray(A), np.asarray(B))
+            np.testing.assert_array_equal(np.asarray(C), oracle)
+        assert lad.cache_info()["builds"] == builds, (
+            "a boundary-sized batch recompiled instead of reusing its "
+            "bucket executable")
+
+    def test_batch_larger_than_largest_bucket(self):
+        """Past the largest bucket there is nothing to round up to: the
+        call serves EXACTLY at its true size (one new build, memoized on
+        repeat) rather than truncating or failing."""
+        lad = _ladder(include=["bec"])
+        lad.prewarm(*SHAPES, batch_sizes=(2, 4))
+        builds = lad.cache_info()["builds"]
+        rng = np.random.default_rng(4)
+        A = jnp.asarray(rng.integers(-4, 5, size=(6,) + SHAPES[0]),
+                        jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        C = lad(A, B, erased=[0])
+        assert C.shape[0] == 6
+        oracle = np.einsum("bvr,vt->brt", np.asarray(A), np.asarray(B))
+        np.testing.assert_array_equal(np.asarray(C), oracle)
+        assert lad.cache_info()["builds"] == builds + 1
+        lad(A, B, erased=[0])  # the fresh executable is memoized
+        assert lad.cache_info()["builds"] == builds + 1
+
+    def test_batch_one_after_batched_call(self):
+        """A batch-1 request after larger batched traffic pads up to the
+        smallest bucket and slices back to one row — no recompile, and
+        the single row is the single-request answer."""
+        lad = _ladder(include=["bec"])
+        lad.prewarm(*SHAPES, batch_sizes=(4,))
+        rng = np.random.default_rng(5)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        A3 = jnp.asarray(rng.integers(-4, 5, size=(3,) + SHAPES[0]),
+                         jnp.float64)
+        lad(A3, B, erased=[2])  # batched traffic first
+        builds = lad.cache_info()["builds"]
+        A1 = jnp.asarray(rng.integers(-4, 5, size=(1,) + SHAPES[0]),
+                         jnp.float64)
+        C = lad(A1, B, erased=[2])
+        assert C.shape[0] == 1
+        oracle = np.einsum("bvr,vt->brt", np.asarray(A1), np.asarray(B))
+        np.testing.assert_array_equal(np.asarray(C), oracle)
+        assert lad.cache_info()["builds"] == builds, (
+            "batch=1 after a batched call recompiled instead of padding "
+            "into the existing bucket")
+
 
 class TestSLOFallback:
     def _heavy_feed(self, slow=(0, 1, 2)):

@@ -1,0 +1,514 @@
+"""Multi-tenant serve tier: admission, batching, SLO floors, pipeline."""
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.chaos import make_scenario  # noqa: E402
+from repro.chaos.serialize import (  # noqa: E402
+    REPORT_VOLATILE_FIELDS,
+    dataclass_to_dict,
+    jsonable,
+    report_to_dict,
+    tuplify,
+)
+from repro.control import (  # noqa: E402
+    AdaptiveServer,
+    PlanLadder,
+    QuantileLatencyPolicy,
+)
+from repro.core.simulator import LatencyModel  # noqa: E402
+from repro.serve import (  # noqa: E402
+    REJECT_QUEUE_FULL,
+    REJECT_RATE_LIMITED,
+    AdmissionController,
+    ContinuousBatcher,
+    Request,
+    RungFloorPolicy,
+    ServeTier,
+    ServeTrace,
+    SLOClass,
+    TenantSpec,
+    TokenBucket,
+    TwoStagePipeline,
+    parse_tenant_spec,
+)
+
+K = 12
+GRID = (4, 2, 1)
+L = 257
+SHAPES = ((16, 8), (16, 4))
+OVERHEAD = {"bec": 2.0, "tradeoff(p'=2)": 1.0, "polycode": 0.1}
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+
+@pytest.fixture(scope="module")
+def ladder():
+    """One prewarmed ladder shared by every tier test in this module."""
+    lad = PlanLadder(*GRID, K=K, L=L, backend="reference")
+    lad.prewarm(*SHAPES, batch_sizes=(2, 4), stages=True)
+    return lad
+
+
+def _req(rid, tenant="a", cls="c", arrival=0.0, deadline=10.0):
+    return Request(rid=rid, tenant=tenant, slo_class=cls,
+                   arrival_s=arrival, deadline_s=deadline)
+
+
+class TestTokenBucket:
+    def test_starts_full_and_caps_at_burst(self):
+        b = TokenBucket(rate_rps=1.0, burst=2)
+        assert b.take(0.0) and b.take(0.0)
+        assert not b.take(0.0)          # drained
+        assert b.take(100.0)            # refilled, but capped at burst
+        assert b.take(100.0)
+        assert not b.take(100.0)
+
+    def test_refills_at_rate(self):
+        b = TokenBucket(rate_rps=0.5, burst=1)
+        assert b.take(0.0)
+        assert not b.take(1.0)          # only 0.5 tokens back
+        assert b.take(2.0)              # one full token after 2 s
+
+    def test_infinite_rate_always_admits(self):
+        b = TokenBucket(rate_rps=float("inf"), burst=1)
+        assert all(b.take(0.0) for _ in range(50))
+
+
+class TestAdmission:
+    def _ctrl(self, rate=1.0, burst=2, max_queue=2):
+        spec = TenantSpec(name="a", slo_class="c", rate_rps=rate,
+                          burst=burst, max_queue=max_queue)
+        return AdmissionController({"a": spec})
+
+    def test_rate_limited_reason(self):
+        ctrl = self._ctrl(rate=0.1, burst=1, max_queue=8)
+        assert ctrl.offer(_req(0), 0.0) is None
+        assert ctrl.offer(_req(1), 0.0) == REJECT_RATE_LIMITED
+        assert ctrl.queued() == 1
+
+    def test_queue_full_reason(self):
+        ctrl = self._ctrl(rate=float("inf"), max_queue=2)
+        assert ctrl.offer(_req(0), 0.0) is None
+        assert ctrl.offer(_req(1), 0.0) is None
+        assert ctrl.offer(_req(2), 0.0) == REJECT_QUEUE_FULL
+        assert ctrl.queued() == 2
+
+    def test_unknown_tenant_raises(self):
+        with pytest.raises(KeyError):
+            self._ctrl().offer(_req(0, tenant="nobody"), 0.0)
+
+
+class TestBatcher:
+    def _queues(self, *reqs):
+        from collections import deque
+
+        out = {}
+        for r in reqs:
+            out.setdefault(r.tenant, deque()).append(r)
+        return out
+
+    def test_earliest_deadline_class_wins(self):
+        b = ContinuousBatcher({"a": "fast", "b": "slow"}, max_batch=4)
+        queues = self._queues(
+            _req(0, tenant="b", cls="slow", arrival=0.0, deadline=60.0),
+            _req(1, tenant="a", cls="fast", arrival=1.0, deadline=5.0))
+        batch = b.form(queues)
+        assert batch.slo_class == "fast"
+        assert [r.rid for r in batch.requests] == [1]
+        # the slow request is still queued for the next step
+        assert b.form(queues).slo_class == "slow"
+        assert b.form(queues) is None
+
+    def test_coalesces_across_tenants_and_caps(self):
+        b = ContinuousBatcher({"a": "c", "b": "c"}, max_batch=2)
+        queues = self._queues(
+            _req(0, tenant="a", deadline=9.0),
+            _req(1, tenant="b", deadline=7.0),
+            _req(2, tenant="a", deadline=8.0))
+        batch = b.form(queues)
+        # EDF order across BOTH tenant queues, capped at max_batch
+        assert [r.rid for r in batch.requests] == [1, 2]
+        assert [r.rid for r in queues["a"]] == [0]
+        assert not queues["b"]
+
+    def test_empty_returns_none(self):
+        b = ContinuousBatcher({"a": "c"}, max_batch=4)
+        assert b.form(self._queues()) is None
+
+    def test_bad_max_batch_raises(self):
+        with pytest.raises(ValueError):
+            ContinuousBatcher({}, max_batch=0)
+
+
+class TestTwoStagePipeline:
+    def test_pipelined_overlaps_decode(self):
+        pipe = TwoStagePipeline(pipelined=True)
+        first = pipe.schedule(0.0, worker_s=3.0, decode_s=2.0)
+        assert (first.compute_done_s, first.decode_done_s) == (3.0, 5.0)
+        # the next batch's workers start while the decoder drains batch 1
+        assert pipe.next_free_s == 3.0
+        second = pipe.schedule(3.0, worker_s=1.0, decode_s=2.0)
+        assert second.compute_start_s == 3.0
+        # decode of batch 2 queues behind the busy decoder
+        assert second.decode_start_s == 5.0
+        assert second.decode_done_s == 7.0
+
+    def test_serial_holds_both_resources(self):
+        pipe = TwoStagePipeline(pipelined=False)
+        first = pipe.schedule(0.0, worker_s=3.0, decode_s=2.0)
+        assert pipe.next_free_s == 5.0
+        second = pipe.schedule(0.0, worker_s=1.0, decode_s=2.0)
+        assert second.compute_start_s == first.decode_done_s == 5.0
+        assert second.decode_done_s == 8.0
+
+    def test_idle_pipeline_starts_at_now(self):
+        pipe = TwoStagePipeline()
+        t = pipe.schedule(7.5, worker_s=1.0, decode_s=0.5)
+        assert t.compute_start_s == 7.5 and t.decode_done_s == 9.0
+
+
+class TestRungFloorPolicy:
+    def _model(self):
+        return LatencyModel(base=np.ones(K), straggler_slowdown=2.0,
+                            jitter=np.full(K, 0.02))
+
+    def test_floor_clamps_thin_budget_winner(self, ladder):
+        # overheads make polycode (budget 1) the ranked winner ...
+        base = QuantileLatencyPolicy(ladder, q=0.9, overhead_s=OVERHEAD)
+        assert base.select(self._model()).rung == "polycode"
+        # ... but the floor refuses anything thinner than tradeoff
+        floored = RungFloorPolicy(ladder, q=0.9, overhead_s=OVERHEAD,
+                                  floor="tradeoff(p'=2)")
+        pick = floored.select(self._model())
+        assert pick.rung == "tradeoff(p'=2)"
+        assert ladder.budget(pick.rung) >= ladder.budget("tradeoff(p'=2)")
+
+    def test_no_floor_is_base_policy(self, ladder):
+        base = QuantileLatencyPolicy(ladder, q=0.9, overhead_s=OVERHEAD)
+        free = RungFloorPolicy(ladder, q=0.9, overhead_s=OVERHEAD)
+        assert free.select(self._model()).rung == \
+            base.select(self._model()).rung
+
+    def test_wide_budget_winner_passes_through(self, ladder):
+        # zero overheads rank by completion alone -> bec (budget 10) wins
+        zero = {r: 0.0 for r in ladder.rungs}
+        floored = RungFloorPolicy(ladder, q=0.9, overhead_s=zero,
+                                  floor="tradeoff(p'=2)")
+        assert floored.select(self._model()).rung == "bec"
+
+    def test_unknown_floor_raises(self, ladder):
+        with pytest.raises(KeyError):
+            RungFloorPolicy(ladder, floor="nonesuch", overhead_s=OVERHEAD)
+
+
+class TestTenantSpecParsing:
+    def test_json_string_round_trip(self):
+        spec = ('{"classes": [{"name": "c", "slo_s": 5.0}], '
+                '"tenants": [{"name": "a", "slo_class": "c"}]}')
+        classes, tenants = parse_tenant_spec(spec)
+        assert classes["c"].slo_s == 5.0
+        assert tenants["a"].slo_class == "c"
+
+    def test_sequence_defaults_classes(self):
+        classes, tenants = parse_tenant_spec(
+            [{"name": "a", "slo_class": "premium"}])
+        assert "premium" in classes and tenants["a"].slo_class == "premium"
+
+    def test_duplicate_and_unknown_raise(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            parse_tenant_spec({"classes": [{"name": "c"}, {"name": "c"}],
+                               "tenants": [{"name": "a", "slo_class": "c"}]})
+        with pytest.raises(ValueError, match="unknown SLO class"):
+            parse_tenant_spec({"classes": [{"name": "c"}],
+                               "tenants": [{"name": "a", "slo_class": "x"}]})
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SLOClass(name="c", quantile=1.5)
+        with pytest.raises(ValueError):
+            TenantSpec(name="a", slo_class="c", max_queue=0)
+
+
+class TestSharedSerializer:
+    def test_report_to_dict_drops_volatile_fields(self, ladder):
+        server = AdaptiveServer(ladder, feed=lambda s, r: np.ones(K),
+                                seed=0, check_exact=False)
+        A = jnp.zeros(SHAPES[0], jnp.float64)
+        B = jnp.zeros(SHAPES[1], jnp.float64)
+        rep = server.run(1, lambda i: (A, B))[0]
+        d = report_to_dict(rep)
+        for field in REPORT_VOLATILE_FIELDS:
+            assert field not in d
+        assert d["rung"] == rep.rung and d["exact"] == rep.exact
+
+    def test_jsonable_tuplify_round_trip(self):
+        value = {"mask": (1, 0, 1), "times": np.arange(3.0),
+                 "nested": {"pair": ((1, 2), (3, 4))}, "scalar": np.int64(7)}
+        j = jsonable(value)
+        assert j["mask"] == [1, 0, 1] and j["times"] == [0.0, 1.0, 2.0]
+        assert isinstance(j["scalar"], int)
+        back = tuplify(j)
+        assert back["mask"] == (1, 0, 1)
+        assert back["nested"]["pair"] == ((1, 2), (3, 4))
+
+    def test_dataclass_to_dict_requires_dataclass(self):
+        with pytest.raises(TypeError):
+            dataclass_to_dict({"not": "a dataclass"})
+
+    def test_request_record_new_fields_round_trip(self):
+        from repro.serve import RequestRecord
+
+        rec = RequestRecord(rid=3, tenant="a", slo_class="c", arrival_s=1.5,
+                            admitted=True, slo_s=10.0, queue_delay_s=0.25)
+        d = dataclass_to_dict(rec)
+        assert d["tenant"] == "a" and d["queue_delay_s"] == 0.25
+        assert RequestRecord(**d) == rec
+
+
+class TestSplitStages:
+    def test_stage_parity_and_zero_recompiles(self, ladder):
+        """worker_stage + decode_stage == the one-shot facade call, bit
+        for bit, on every rung — with no builds beyond prewarm."""
+        builds = ladder.cache_info()["builds"]
+        rng = np.random.default_rng(0)
+        A = jnp.asarray(rng.integers(-4, 5, size=SHAPES[0]), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        for rung in ladder.rungs:
+            ladder.switch(rung)
+            erased = list(range(min(2, ladder.budget(rung))))
+            Y, ctx = ladder.worker_stage(A, B)
+            C_split = ladder.decode_stage(Y, ctx, erased=erased)
+            C_one = ladder(A, B, erased=erased)
+            np.testing.assert_array_equal(np.asarray(C_split),
+                                          np.asarray(C_one))
+        assert ladder.cache_info()["builds"] == builds
+
+    def test_staged_batch_pads_to_bucket(self, ladder):
+        builds = ladder.cache_info()["builds"]
+        rng = np.random.default_rng(1)
+        A = jnp.asarray(rng.integers(-4, 5, size=(3,) + SHAPES[0]),
+                        jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        ladder.switch(ladder.rungs[0])
+        Y, ctx = ladder.worker_stage(A, B)
+        assert ctx["batch"] == 3           # padded to bucket 4, sliced back
+        C = ladder.decode_stage(Y, ctx, erased=[0])
+        assert C.shape[0] == 3
+        oracle = np.einsum("bvr,vt->brt", np.asarray(A), np.asarray(B))
+        np.testing.assert_array_equal(np.asarray(C), oracle)
+        assert ladder.cache_info()["builds"] == builds
+
+    def test_decode_follows_recorded_rung_after_switch(self, ladder):
+        """A batch decoded AFTER a rung switch must use the plan that
+        encoded it (the pipelined loop switches between stages)."""
+        rng = np.random.default_rng(2)
+        A = jnp.asarray(rng.integers(-4, 5, size=SHAPES[0]), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+        ladder.switch("bec")
+        Y, ctx = ladder.worker_stage(A, B)
+        ladder.switch("polycode")          # the loop moved on
+        C = ladder.decode_stage(Y, ctx, erased=[1])
+        oracle = np.einsum("vr,vt->rt", np.asarray(A), np.asarray(B))
+        np.testing.assert_array_equal(np.asarray(C), oracle)
+
+
+class TestMeshStageErrors:
+    def _executor(self):
+        from repro.runtime.executors import MeshExecutor
+
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        return MeshExecutor(mesh)
+
+    def _plan(self):
+        from repro.core import make_plan
+
+        return make_plan("bec", 2, 2, 1, K=4, L=257, points="chebyshev")
+
+    def test_partial_error_names_the_flag_and_backends(self):
+        with pytest.raises(NotImplementedError) as err:
+            self._executor().make_pipeline(self._plan(), ("partial", 4),
+                                           jnp.float64)
+        msg = str(err.value)
+        assert "--sub-tasks" in msg and "sub_tasks=4" in msg
+        for backend in ("reference", "staged", "fused"):
+            assert backend in msg
+        assert "--sub-tasks 1" in msg
+
+    def test_stage_kinds_error_names_supported_backends(self):
+        for kind in ("products", ("decode", 0, 0)):
+            with pytest.raises(NotImplementedError) as err:
+                self._executor().make_pipeline(self._plan(), kind,
+                                               jnp.float64)
+            msg = str(err.value)
+            assert "split-stage" in msg and "reference" in msg
+
+
+class TestDriverSplitSteps:
+    def test_begin_execute_complete_is_step(self, ladder):
+        """The decomposed entry points must be BIT-IDENTICAL to step()."""
+        feed = make_scenario("heavy_tail").compile(K, seed=3)
+        rng = np.random.default_rng(3)
+        A = jnp.asarray(rng.integers(-4, 5, size=SHAPES[0]), jnp.float64)
+        B = jnp.asarray(rng.integers(-4, 5, size=SHAPES[1]), jnp.float64)
+
+        ladder.switch(ladder.rungs[0])
+        one = AdaptiveServer(ladder, feed=feed, seed=3, check_exact=True)
+        whole = [one.step(A, B)[1] for _ in range(6)]
+
+        ladder.switch(ladder.rungs[0])
+        feed2 = make_scenario("heavy_tail").compile(K, seed=3)
+        two = AdaptiveServer(ladder, feed=feed2, seed=3, check_exact=True)
+        parts = []
+        for _ in range(6):
+            decision = two.begin_step()
+            C = two.execute(decision, A, B)
+            parts.append(two.complete_step(decision, C, 0.0, A, B))
+
+        for a, b in zip(whole, parts):
+            assert report_to_dict(a) == report_to_dict(b)
+
+
+def _small_tier(ladder, **kw):
+    classes = (SLOClass(name="premium", quantile=0.99, slo_s=12.0,
+                        rung_floor="tradeoff(p'=2)"),
+               SLOClass(name="standard", quantile=0.9, slo_s=60.0))
+    tenants = (TenantSpec(name="gold", slo_class="premium", arrival_rps=1.0),
+               TenantSpec(name="free", slo_class="standard", arrival_rps=2.0,
+                          rate_rps=0.5, burst=2, max_queue=3))
+    feed = make_scenario("heavy_tail").compile(K, seed=5)
+    defaults = dict(classes=classes, tenants=tenants, feed=feed,
+                    overhead_s=OVERHEAD, seed=5, check_exact=True,
+                    keep_results=True)
+    defaults.update(kw)
+    return ServeTier(ladder, **defaults)
+
+
+def _payload(rid):
+    base = np.arange(SHAPES[0][0] * SHAPES[0][1]).reshape(SHAPES[0])
+    return jnp.asarray((base * (rid + 3)) % 11 - 5, jnp.float64)
+
+
+def _run_small(ladder, **kw):
+    ladder.switch(ladder.rungs[0])  # order-independent under the shared fixture
+    tier = _small_tier(ladder, **kw)
+    B = jnp.asarray(np.arange(SHAPES[1][0] * SHAPES[1][1])
+                    .reshape(SHAPES[1]) % 7 - 3, jnp.float64)
+    return tier.run(lambda req: _payload(req.rid), B, 8), B
+
+
+class TestServeTier:
+    def test_every_request_accounted(self, ladder):
+        result, _ = _run_small(ladder)
+        assert len(result.requests) == 16
+        assert len(result.admitted) + len(result.shed) == 16
+        assert len(result.completed) == len(result.admitted)
+        for rec in result.shed:
+            assert rec.reject_reason in (REJECT_RATE_LIMITED,
+                                         REJECT_QUEUE_FULL)
+        # the overloaded free tenant actually sheds
+        assert any(r.tenant == "free" for r in result.shed)
+
+    def test_deterministic_replay(self, ladder):
+        r1, _ = _run_small(ladder)
+        r2, _ = _run_small(ladder)
+        t1, t2 = ServeTrace.from_result(r1), ServeTrace.from_result(r2)
+        assert t1.diff(t2) == []
+
+    def test_results_bit_identical_to_facade(self, ladder):
+        result, B = _run_small(ladder)
+        cm = ladder.facade(ladder.rungs[0])
+        for rec in result.completed:
+            C_sync = np.asarray(cm(_payload(rec.rid), B))
+            np.testing.assert_array_equal(result.results[rec.rid], C_sync)
+
+    def test_latency_bookkeeping(self, ladder):
+        result, _ = _run_small(ladder)
+        for rec in result.completed:
+            assert rec.queue_delay_s >= -1e-9
+            assert rec.latency_s == pytest.approx(
+                rec.completion_s - rec.arrival_s)
+            assert rec.violated == (rec.latency_s > rec.slo_s)
+        for b in result.batches:
+            assert b.size <= 4 and b.size <= b.bucket
+            assert b.report.get("exact") is True
+
+    def test_pipeline_beats_serial_on_drain_time(self, ladder):
+        fast, _ = _run_small(ladder)
+        slow, _ = _run_small(ladder, pipelined=False, max_batch=1)
+        assert fast.throughput_rps() > slow.throughput_rps()
+
+    def test_rerun_raises(self, ladder):
+        tier = _small_tier(ladder)
+        B = jnp.zeros(SHAPES[1], jnp.float64)
+        tier.run(lambda req: _payload(req.rid), B, 2)
+        with pytest.raises(RuntimeError, match="fresh tier"):
+            tier.run(lambda req: _payload(req.rid), B, 2)
+
+    def test_split_stages_needs_single_sub_task(self, ladder):
+        with pytest.raises(ValueError, match="sub_tasks"):
+            _small_tier(ladder, sub_tasks=2, split_stages=True)
+
+    def test_unknown_class_raises(self, ladder):
+        with pytest.raises(ValueError, match="unknown SLO class"):
+            ServeTier(ladder,
+                      classes=(SLOClass(name="c"),),
+                      tenants=(TenantSpec(name="a", slo_class="nope"),))
+
+
+class TestServeTrace:
+    def test_save_load_round_trip(self, ladder, tmp_path):
+        result, _ = _run_small(ladder)
+        trace = ServeTrace.from_result(result)
+        loaded = ServeTrace.load(trace.save(tmp_path / "t.jsonl"))
+        assert loaded.diff(trace) == []
+        assert loaded.meta == trace.meta
+
+    def test_diff_catches_drift(self, ladder):
+        result, _ = _run_small(ladder)
+        trace = ServeTrace.from_result(result)
+        mutated = list(trace.requests)
+        mutated[0] = dict(mutated[0], latency_s=999.0)
+        drifted = dataclasses.replace(trace, requests=tuple(mutated))
+        assert any("latency_s" in line for line in trace.diff(drifted))
+
+    def test_load_rejects_foreign_files(self, tmp_path):
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text('{"kind": "nonsense"}\n')
+        with pytest.raises(ValueError, match="header"):
+            ServeTrace.load(bad)
+        bad.write_text('{"kind": "header", "version": 99}\n')
+        with pytest.raises(ValueError, match="version"):
+            ServeTrace.load(bad)
+
+
+class TestGoldenServeTrace:
+    """Drift check: today's serve tier vs. the checked-in recording.
+
+    On an INTENDED behaviour change, regenerate via
+    ``PYTHONPATH=src python scripts/regen_golden_traces.py --serve`` and
+    commit the diff.
+    """
+
+    def test_golden_serve_replays_bit_exactly(self):
+        from repro.serve import GOLDEN_SERVE_SCENARIO, golden_serve_trace
+
+        recorded = ServeTrace.load(
+            GOLDEN_DIR / f"serve_{GOLDEN_SERVE_SCENARIO}.jsonl")
+        fresh = golden_serve_trace()
+        drift = fresh.diff(recorded)
+        assert drift == [], "\n".join(drift[:20])
+        # the recording must actually exercise the tier: batching,
+        # shedding, and both SLO classes (otherwise the replay is vacuous)
+        sizes = {b["size"] for b in recorded.batches}
+        assert any(s > 1 for s in sizes)
+        assert any(not r["admitted"] for r in recorded.requests)
+        assert {b["slo_class"] for b in recorded.batches} == \
+            {"premium", "standard"}
