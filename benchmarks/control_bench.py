@@ -13,7 +13,8 @@ control decision.
 Per (L, straggler-count) regime both sides replay the SAME per-worker time
 traces.  Every adaptive step also executes a real coded matmul through the
 ``PlanLadder`` facades and is checked exact against the uncoded oracle;
-the ladder's shared ``CacheGroup`` counters prove rung switches after
+the runtime's own ``runtime.executable.compile`` counter (read through
+``benchmarks.obs_util.CompileWatch``) proves rung switches after
 ``prewarm()`` compile nothing.
 
 The p50-vs-p99 POLICY sweep plays the same game at the tail: under a
@@ -73,6 +74,8 @@ from pathlib import Path
 
 import numpy as np
 
+from benchmarks.obs_util import CompileWatch, assert_no_recompiles
+
 # geometry shared by every rung of the ladder (paper Sec. IV family)
 P, M, N, K = 4, 2, 1, 12
 V, R, T = 16, 8, 4
@@ -123,9 +126,10 @@ def _run_regime(L: int, S: int, seed: int) -> dict:
     from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
 
     traces = _traces(S, seed)
+    watch = CompileWatch()
     ladder = PlanLadder(P, M, N, K=K, L=L, backend="reference")
-    prewarm = ladder.prewarm((V, R), (V, T))
-    builds_prewarm = prewarm["builds"]
+    ladder.prewarm((V, R), (V, T))
+    watch.mark()
     # uniform zero overhead: rungs differ only through masking/feasibility,
     # so the sweep is deterministic given the seeds (measured per-rung step
     # costs are reported by `prewarm` and exercised in coded_serve).
@@ -153,8 +157,7 @@ def _run_regime(L: int, S: int, seed: int) -> dict:
         "adaptive_s": float(np.mean([rep.sim_latency_s for rep in reports])),
         "adaptive_rungs": rung_counts,
         "switches": info["switches"],
-        "builds_prewarm": builds_prewarm,
-        "builds_final": info["builds"],
+        "recompiles": watch.delta(),
         "panel_builds": info["panel_builds"],
         "respecializations": sum(rep.respecialize for rep in reports),
         "all_exact": all(rep.exact for rep in reports),
@@ -188,9 +191,10 @@ def _run_policy(policy_name: str, traces: np.ndarray, seed: int) -> dict:
         QuantileLatencyPolicy,
     )
 
+    watch = CompileWatch()
     ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
-    prewarm = ladder.prewarm((V, R), (V, T), batch_sizes=Q_BUCKETS)
-    builds_prewarm = prewarm["builds"]
+    ladder.prewarm((V, R), (V, T), batch_sizes=Q_BUCKETS)
+    watch.mark()
     if policy_name == "mean":
         policy = ExpectedLatencyPolicy(ladder, overhead_s=Q_OVERHEAD)
     else:
@@ -218,8 +222,7 @@ def _run_policy(policy_name: str, traces: np.ndarray, seed: int) -> dict:
         "p99_s": float(np.quantile(realized, Q_SLO)),
         "rungs": rung_counts,
         "switches": info["switches"],
-        "builds_prewarm": builds_prewarm,
-        "builds_final": info["builds"],
+        "recompiles": watch.delta(),
         "all_exact": all(rep.exact for rep in reports),
     }
 
@@ -274,8 +277,10 @@ def _run_scenario(name: str, seed: int) -> dict:
         if variant == "calm":
             scenario = scenario.calm()
         traces = trace_matrix(scenario, K, SC_STEPS, seed=seed)
+        watch = CompileWatch()
         ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
-        prewarm = ladder.prewarm((V, R), (V, T))
+        ladder.prewarm((V, R), (V, T))
+        watch.mark()
         policy = ExpectedLatencyPolicy(
             ladder, overhead_s={r: 0.0 for r in ladder.rungs})
         server = AdaptiveServer(ladder, policy=policy,
@@ -285,14 +290,12 @@ def _run_scenario(name: str, seed: int) -> dict:
         A = jnp.asarray(rng.integers(-4, 5, size=(V, R)), jnp.float64)
         B = jnp.asarray(rng.integers(-4, 5, size=(V, T)), jnp.float64)
         reports = server.run(SC_STEPS, lambda i: (A, B))
-        info = ladder.cache_info()
         row[variant] = {
             "static_s": float(traces.max(axis=1).mean()),
             "adaptive_s": float(np.mean([r.sim_latency_s for r in reports])),
             "erasures": int(sum(len(r.erased) for r in reports)),
             "respecializations": int(sum(r.respecialize for r in reports)),
-            "builds_prewarm": prewarm["builds"],
-            "builds_final": info["builds"],
+            "recompiles": watch.delta(),
             "all_exact": all(r.exact for r in reports),
         }
     return row
@@ -315,8 +318,10 @@ def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int):
 
     from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
 
+    watch = CompileWatch()
     ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
-    prewarm = ladder.prewarm((V, R), (V, T), sub_tasks=sub_tasks)
+    ladder.prewarm((V, R), (V, T), sub_tasks=sub_tasks)
+    watch.mark()
     policy = ExpectedLatencyPolicy(ladder, overhead_s=Q_OVERHEAD,
                                    sub_tasks=sub_tasks)
     server = AdaptiveServer(ladder, policy=policy,
@@ -335,7 +340,6 @@ def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int):
         rung_counts[r.rung] = rung_counts.get(r.rung, 0) + 1
         if r.progress is not None:
             fractions += sum(1 for x in r.progress if 0.0 < x < 1.0)
-    info = ladder.cache_info()
     row = {
         "sub_tasks": sub_tasks,
         "p50_s": float(np.quantile(realized, 0.5)),
@@ -343,8 +347,7 @@ def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int):
         "mean_s": float(realized.mean()),
         "fractional_consumptions": fractions,
         "rungs": rung_counts,
-        "builds_prewarm": prewarm["builds"],
-        "builds_final": info["builds"],
+        "recompiles": watch.delta(),
         "all_exact": all(r.exact for r in reports),
     }
     return row, reports, ladder, (A, B)
@@ -536,8 +539,10 @@ def check_partial(rows: list) -> None:
         binary, partial = row["binary"], row["partial"]
         for side in (binary, partial):
             assert side["all_exact"], f"inexact partial-sweep decode: {row}"
-            assert side["builds_final"] == side["builds_prewarm"], (
-                f"recompile after prewarm in partial sweep: {row}")
+            assert_no_recompiles(
+                side["recompiles"],
+                f"the partial sweep ({row['scenario']}, "
+                f"Q={side['sub_tasks']})")
         assert row["q1_bit_identical"], (
             f"Q=1 partial decode diverged from the legacy mask path: {row}")
         assert partial["p99_s"] <= binary["p99_s"] * 1.001, (
@@ -555,8 +560,9 @@ def check_partial(rows: list) -> None:
 def check(result: dict) -> None:
     for row in result["regimes"]:
         assert row["all_exact"], f"inexact decode: {row}"
-        assert row["builds_final"] == row["builds_prewarm"], (
-            f"recompile after prewarm: {row}")
+        assert_no_recompiles(
+            row["recompiles"],
+            f"regime L={row['L']} S={row['stragglers']}")
         feasible = [r for r, ok in row["static_feasible"].items() if ok]
         assert set(row["adaptive_rungs"]) <= set(feasible), (
             f"adaptive served an invalid rung: {row}")
@@ -574,8 +580,10 @@ def check(result: dict) -> None:
     by_s: dict = {}
     for row in result["quantile_sweep"]:
         assert row["all_exact"], f"inexact batched decode: {row}"
-        assert row["builds_final"] == row["builds_prewarm"], (
-            f"recompile across batched rung switches: {row}")
+        assert_no_recompiles(
+            row["recompiles"],
+            f"batched rung switches (policy {row['policy']}, "
+            f"S={row['stragglers']})")
         by_s.setdefault(row["stragglers"], {})[row["policy"]] = row
     for S, pair in by_s.items():
         mean, quant = pair["mean"], pair["quantile"]
@@ -593,8 +601,8 @@ def check(result: dict) -> None:
         for variant in ("stressed", "calm"):
             v = row[variant]
             assert v["all_exact"], f"inexact decode ({variant}): {row}"
-            assert v["builds_final"] == v["builds_prewarm"], (
-                f"recompile after prewarm ({variant}): {row}")
+            assert_no_recompiles(
+                v["recompiles"], f"{variant} {row['scenario']}")
         # the S=0 criterion, stated so it CAN fail (a masked mean is <= the
         # all-worker max by construction, so a one-sided bound is vacuous):
         # at the calm control the monitor must erase NOBODY and never flag a
@@ -680,12 +688,11 @@ def main(argv=None, save: str = "BENCH_control.json"):
         print(f"L={row['L']:>6} S={row['stragglers']}: "
               f"static {static} vs adaptive {row['adaptive_s']:.3f} s "
               f"(rungs {row['adaptive_rungs']}, switches {row['switches']}, "
-              f"builds {row['builds_prewarm']}->{row['builds_final']})")
+              f"recompiles {row['recompiles']})")
     for row in result["quantile_sweep"]:
         print(f"S={row['stragglers']} policy={row['policy']:<8} "
               f"p50 {row['p50_s']:6.2f} s  p99 {row['p99_s']:6.2f} s "
-              f"(rungs {row['rungs']}, builds "
-              f"{row['builds_prewarm']}->{row['builds_final']})")
+              f"(rungs {row['rungs']}, recompiles {row['recompiles']})")
     for row in result["scenario_sweep"]:
         s, c = row["stressed"], row["calm"]
         print(f"scenario {row['scenario']:<12} stressed: static {s['static_s']:6.2f} "

@@ -35,6 +35,8 @@ from pathlib import Path
 
 import numpy as np
 
+from benchmarks.obs_util import CompileWatch, assert_no_recompiles
+
 # ladder geometry shared with control_bench (paper Sec. IV family)
 P, M, N, K = 4, 2, 1, 12
 V, R, T = 16, 8, 4
@@ -85,8 +87,8 @@ def _ladder():
     from repro.control import PlanLadder
 
     ladder = PlanLadder(P, M, N, K=K, L=V * 4 * 4 + 1, backend="reference")
-    info = ladder.prewarm((V, R), (V, T), batch_sizes=BUCKETS, stages=True)
-    return ladder, info["builds"]
+    ladder.prewarm((V, R), (V, T), batch_sizes=BUCKETS, stages=True)
+    return ladder
 
 
 def _run_side(ladder, scenario: str, *, pipelined: bool,
@@ -167,9 +169,13 @@ def run(scenarios=None) -> dict:
 
     names = tuple(scenarios) if scenarios else scenario_names()
     with enable_x64():
-        ladder, builds_prewarm = _ladder()
+        # the watch reads the runtime's own compile counter; mark() after
+        # prewarm makes every later build a recorded recompile.
+        watch = CompileWatch()
+        ladder = _ladder()
+        watch.mark()
         rows = [_run_scenario(ladder, name) for name in names]
-        builds_final = ladder.cache_info()["builds"]
+        recompiles = watch.delta()
     return {
         "config": {
             "grid": [P, M, N], "K": K, "shape": [V, R, T],
@@ -177,8 +183,7 @@ def run(scenarios=None) -> dict:
             "requests_per_tenant": REQUESTS, "overhead_s": OVERHEAD_S,
             "spec": SPEC,
         },
-        "builds_prewarm": builds_prewarm,
-        "builds_final": builds_final,
+        "recompiles": recompiles,
         "scenarios": rows,
     }
 
@@ -191,9 +196,7 @@ def check(result: dict) -> None:
     tier regression or a baseline speedup both trip it), explicit shed
     accounting on both sides, per-request bit-identity, zero recompiles.
     """
-    assert result["builds_final"] == result["builds_prewarm"], (
-        f"recompile after prewarm: {result['builds_prewarm']} -> "
-        f"{result['builds_final']}")
+    assert_no_recompiles(result["recompiles"], "the serve sweep")
     by_name = {row["scenario"]: row for row in result["scenarios"]}
     missing = set(CHECK_SCENARIOS) - set(by_name)
     assert not missing, f"check scenarios missing from the run: {missing}"
@@ -255,8 +258,9 @@ def main(argv=None, save: str = "BENCH_serve.json"):
         have = {row["scenario"]: row for row in merged.get("scenarios", [])}
         have.update({row["scenario"]: row for row in result["scenarios"]})
         merged["scenarios"] = list(have.values())
-        merged["builds_prewarm"] = result["builds_prewarm"]
-        merged["builds_final"] = result["builds_final"]
+        merged.pop("builds_prewarm", None)  # pre-obs schema
+        merged.pop("builds_final", None)
+        merged["recompiles"] = result["recompiles"]
     out.write_text(json.dumps(merged, indent=2) + "\n")
     print(f"wrote {out}")
 

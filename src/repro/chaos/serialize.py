@@ -31,10 +31,31 @@ from typing import Any, Tuple
 import numpy as np
 
 __all__ = ["REPORT_VOLATILE_FIELDS", "jsonable", "tuplify",
-           "dataclass_to_dict", "report_to_dict"]
+           "report_field_names", "dataclass_to_dict", "report_to_dict"]
 
 #: ``StepReport`` fields no serialiser records: wall-clock noise only.
 REPORT_VOLATILE_FIELDS: Tuple[str, ...] = ("wall_ms",)
+
+
+def report_field_names(report_cls: Any,
+                       volatile: Tuple[str, ...] = REPORT_VOLATILE_FIELDS,
+                       ) -> Tuple[str, ...]:
+    """Dataclass field names minus the volatile ones, declaration order.
+
+    The ONE place field selection happens for every trace surface:
+    :func:`dataclass_to_dict` (hence :func:`report_to_dict` and both
+    JSONL recorders) and ``chaos.trace.COMPARED_FIELDS`` all derive from
+    it, so a field added to ``StepReport`` either flows through every
+    surface at once or fails loudly — it can no longer be recorded by one
+    format and silently dropped by another.
+
+    Raises:
+        TypeError: if ``report_cls`` is not a dataclass.
+    """
+    if not dataclasses.is_dataclass(report_cls):
+        raise TypeError(f"need a dataclass, got {report_cls!r}")
+    return tuple(f.name for f in dataclasses.fields(report_cls)
+                 if f.name not in volatile)
 
 
 def jsonable(value: Any) -> Any:
@@ -86,8 +107,8 @@ def dataclass_to_dict(dc: Any, exclude: Tuple[str, ...] = ()) -> dict:
     """
     if not dataclasses.is_dataclass(dc) or isinstance(dc, type):
         raise TypeError(f"need a dataclass instance, got {type(dc).__name__}")
-    return {f.name: jsonable(getattr(dc, f.name))
-            for f in dataclasses.fields(dc) if f.name not in exclude}
+    return {name: jsonable(getattr(dc, name))
+            for name in report_field_names(type(dc), volatile=exclude)}
 
 
 def report_to_dict(report: Any,

@@ -42,7 +42,8 @@ from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.chaos.serialize import report_to_dict, tuplify
+from repro.chaos.serialize import (report_field_names, report_to_dict,
+                                   tuplify)
 from repro.core.simulator import TimeFeed
 
 if TYPE_CHECKING:  # StepReport lives in control/, which imports jax;
@@ -54,15 +55,6 @@ __all__ = ["TRACE_VERSION", "TraceStep", "Trace", "TraceRecorder",
            "verify_replay"]
 
 TRACE_VERSION = 1
-
-#: StepReport fields a replay must reproduce bit-exactly (wall_ms is
-#: wall-clock noise and is never recorded).
-COMPARED_FIELDS = (
-    "rung", "switched", "erased", "sim_latency_s", "slack", "respecialize",
-    "shrink_target", "exact", "slo_violation", "predicted_tail_s",
-    "realized_s", "realized_violation", "q_effective", "progress",
-    "threshold_effective",
-)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +80,8 @@ class TraceStep:
     progress: Optional[Tuple[float, ...]] = None
     #: feedback-adjusted flagging threshold (None without feedback).
     threshold_effective: Optional[float] = None
+    #: seed-derived obs correlation ID (span_id_for(seed, scope, step)).
+    span_id: Optional[str] = None
 
     @classmethod
     def from_report(cls, report: StepReport,
@@ -105,6 +99,15 @@ class TraceStep:
         rec["times"] = [float(t) for t in np.asarray(times)]
         return cls(**{k: tuplify(v) if isinstance(v, list) else v
                       for k, v in rec.items()})
+
+
+#: StepReport fields a replay must reproduce bit-exactly — every
+#: TraceStep field except the key (``step``) and the feed input
+#: (``times``).  Derived from the schema itself (via the shared
+#: ``report_field_names``), so a field added to StepReport + TraceStep is
+#: automatically compared; forgetting the TraceStep half still fails
+#: loudly in ``from_report``.
+COMPARED_FIELDS = report_field_names(TraceStep, volatile=("step", "times"))
 
 
 @dataclasses.dataclass(frozen=True)

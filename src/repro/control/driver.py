@@ -34,6 +34,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core.api import uncoded_matmul
 from repro.core.simulator import LatencyModel, TimeFeed, WorkerTimes
 from repro.distributed.elastic import CodedElasticPolicy, plan_shrink
@@ -70,6 +71,7 @@ class StepReport:
     q_effective: Optional[float] = None       # feedback-adjusted quantile this step
     progress: Optional[Tuple[float, ...]] = None  # partial plan (sub_tasks > 1)
     threshold_effective: Optional[float] = None   # adaptive monitor threshold
+    span_id: Optional[str] = None  # seed-derived obs correlation ID
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,9 +201,15 @@ class AdaptiveServer:
         self.reevaluate_every = max(1, reevaluate_every)
         self.score_threshold = score_threshold
         self.check_exact = check_exact
+        self.seed = int(seed)
         self.rng = np.random.default_rng(seed)
         self.steps = 0
         self.reports: List[StepReport] = []
+        # obs correlation scope: span IDs are span_id_for(seed, scope, step).
+        # Loops running SEVERAL servers off one seed (the serve tier's
+        # per-SLO-class servers) set a distinct scope per server so their
+        # step IDs never collide.
+        self.obs_scope = "step"
 
     # -- worker-time ingestion ----------------------------------------------
     def _worker_times(self) -> np.ndarray:
@@ -232,6 +240,18 @@ class AdaptiveServer:
         the head of the legacy ``step()`` did.  Pair each call with exactly
         one ``complete_step`` — the step counter only advances there.
         """
+        with obs.span("control.begin_step", step=self.steps,
+                      scope=self.obs_scope):
+            decision = self._decide()
+        if decision.switched:
+            obs.count("control.switch", rung=decision.rung)
+        if decision.slo_violation:
+            obs.count("control.slo_fallback", rung=decision.rung)
+        if decision.respecialize:
+            obs.count("control.respecialize")
+        return decision
+
+    def _decide(self) -> StepDecision:
         times = self._worker_times()
         self.monitor.record_step(times)
         scores = self.monitor.straggler_scores()
@@ -351,10 +371,12 @@ class AdaptiveServer:
         ``worker_stage``/``decode_stage`` with ``decision.mask`` instead;
         either route is bit-identical.
         """
-        if decision.progress is not None:
-            return self.ladder(A, B, progress=decision.progress,
-                               sub_tasks=self.sub_tasks)
-        return self.ladder(A, B, mask=decision.mask)
+        with obs.span("control.execute", rung=decision.rung,
+                      step=decision.step):
+            if decision.progress is not None:
+                return self.ladder(A, B, progress=decision.progress,
+                                   sub_tasks=self.sub_tasks)
+            return self.ladder(A, B, mask=decision.mask)
 
     def complete_step(self, decision: StepDecision, C, wall_ms: float,
                       A=None, B=None) -> StepReport:
@@ -371,18 +393,21 @@ class AdaptiveServer:
             exact = bool(np.array_equal(np.asarray(C),
                                         np.asarray(uncoded_matmul(A, B))))
 
-        sim_latency = (WorkerTimes(times).completion_with_progress(progress)
-                       if progress is not None
-                       else WorkerTimes(times).completion_with_mask(mask))
-        realized = None
-        realized_violation = False
-        if self.feedback is not None:
-            # realized = what this step actually cost under the model's
-            # own pricing: masked completion + the served rung's overhead
-            # (the same additive cost every prediction carries).
-            realized = sim_latency + self.slo_policy.overhead_for(
-                decision.rung)
-            realized_violation = self.feedback.observe(realized)
+        with obs.span("control.complete_step", step=decision.step,
+                      scope=self.obs_scope):
+            sim_latency = (
+                WorkerTimes(times).completion_with_progress(progress)
+                if progress is not None
+                else WorkerTimes(times).completion_with_mask(mask))
+            realized = None
+            realized_violation = False
+            if self.feedback is not None:
+                # realized = what this step actually cost under the model's
+                # own pricing: masked completion + the served rung's
+                # overhead (the same additive cost every prediction carries).
+                realized = sim_latency + self.slo_policy.overhead_for(
+                    decision.rung)
+                realized_violation = self.feedback.observe(realized)
 
         report = StepReport(
             step=decision.step,
@@ -403,7 +428,12 @@ class AdaptiveServer:
             progress=(None if progress is None
                       else tuple(float(x) for x in progress)),
             threshold_effective=decision.threshold_effective,
+            span_id=obs.span_id_for(self.seed, self.obs_scope,
+                                    decision.step),
         )
+        obs.observe("control.sim_latency_s", sim_latency, rung=decision.rung)
+        if realized_violation:
+            obs.count("control.realized_violation", rung=decision.rung)
         self.reports.append(report)
         self.steps += 1
         return report

@@ -29,6 +29,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import bounds as bounds_mod
 from repro.core.api import CodedMatmulPlan, make_plan
 from repro.core.schemes import make_scheme
@@ -134,6 +135,7 @@ class PlanLadder:
         """Make ``rung`` the active scheme (no recompile after prewarm)."""
         rung = self._check(rung)
         if rung != self._active:
+            obs.count("ladder.switch", rung=rung)
             self._active = rung
             self.switch_count += 1
         return self._facades[rung]
@@ -261,28 +263,35 @@ class PlanLadder:
         self._buckets = tuple(sorted(set(int(b) for b in batch_sizes)))
         A = jnp.zeros(tuple(a_shape), self.dtype)
         B = jnp.zeros(tuple(b_shape), self.dtype)
-        for rung in self._order:
-            cm = self._facades[rung]
-            jax.block_until_ready(cm(A, B, erased=[]))  # compile
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                jax.block_until_ready(cm(A, B, erased=[]))
-            self.step_overhead_s[rung] = (time.perf_counter() - t0) / reps
-            if sub_tasks > 1:
-                jax.block_until_ready(cm(A, B, sub_tasks=sub_tasks))
-            if stages:
-                rt = (int(a_shape[-1]), int(b_shape[-1]))
-                Y = cm.worker_stage(A, B)
-                jax.block_until_ready(cm.decode_stage(Y, rt, erased=[]))
-            for bucket in self._buckets:
-                Ab = jnp.zeros((bucket,) + tuple(a_shape), self.dtype)
-                jax.block_until_ready(cm(Ab, B, erased=[]))
-                if sub_tasks > 1:
-                    jax.block_until_ready(cm(Ab, B, sub_tasks=sub_tasks))
-                if stages:
-                    rt = (int(a_shape[-1]), int(b_shape[-1]))
-                    Yb = cm.worker_stage(Ab, B)
-                    jax.block_until_ready(cm.decode_stage(Yb, rt, erased=[]))
+        with obs.span("ladder.prewarm", rungs=len(self._order),
+                      buckets=len(self._buckets), stages=int(stages)):
+            for rung in self._order:
+                cm = self._facades[rung]
+                with obs.span("ladder.prewarm.rung", rung=rung):
+                    jax.block_until_ready(cm(A, B, erased=[]))  # compile
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        jax.block_until_ready(cm(A, B, erased=[]))
+                    self.step_overhead_s[rung] = (
+                        time.perf_counter() - t0) / reps
+                    if sub_tasks > 1:
+                        jax.block_until_ready(cm(A, B, sub_tasks=sub_tasks))
+                    if stages:
+                        rt = (int(a_shape[-1]), int(b_shape[-1]))
+                        Y = cm.worker_stage(A, B)
+                        jax.block_until_ready(
+                            cm.decode_stage(Y, rt, erased=[]))
+                    for bucket in self._buckets:
+                        Ab = jnp.zeros((bucket,) + tuple(a_shape), self.dtype)
+                        jax.block_until_ready(cm(Ab, B, erased=[]))
+                        if sub_tasks > 1:
+                            jax.block_until_ready(
+                                cm(Ab, B, sub_tasks=sub_tasks))
+                        if stages:
+                            rt = (int(a_shape[-1]), int(b_shape[-1]))
+                            Yb = cm.worker_stage(Ab, B)
+                            jax.block_until_ready(
+                                cm.decode_stage(Yb, rt, erased=[]))
         info = self.cache_info()
         info["overhead_s"] = dict(self.step_overhead_s)
         info["batch_buckets"] = self._buckets

@@ -21,6 +21,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.schemes import Scheme
 from repro.core.vandermonde import interpolate_solve, interpolate_masked
 
@@ -197,9 +198,14 @@ class DecodePanelCache:
         key = tuple(int(x != 0) for x in m)
         panel = self._panels.get(key)
         if panel is None:
-            panel = make_decode_panel(self.scheme, self.z_all, m, self.ridge)
+            with obs.span("decode.panel.build"):
+                panel = make_decode_panel(self.scheme, self.z_all, m,
+                                          self.ridge)
             self._panels[key] = panel
             self.builds += 1
+            obs.count("decode.panel_cache.miss", cache="panel")
+        else:
+            obs.count("decode.panel_cache.hit", cache="panel")
         return panel
 
     def get_partial(self, chunk_masks: np.ndarray) -> np.ndarray:
@@ -224,4 +230,7 @@ class DecodePanelCache:
         if stack is None:
             stack = np.stack([self.get(row).W for row in cm])
             self._partial_stacks[key] = stack
+            obs.count("decode.panel_cache.miss", cache="stack")
+        else:
+            obs.count("decode.panel_cache.hit", cache="stack")
         return stack

@@ -43,6 +43,13 @@ or ``@path/to/spec.json`` (default: the built-in three-tenant example);
 ``--requests`` becomes per-tenant; ``--record`` saves a replayable serve
 trace; ``--no-pipeline`` serialises the stages for A/B comparison.
 
+``--metrics-out PATH`` / ``--perfetto-out PATH`` enable the observability
+layer (``repro.obs``) for the run and write its Prometheus text dump and
+Chrome-trace/Perfetto span JSON (serve tier: one track per SLO class, so
+the decode-of-batch-t-overlaps-workers-of-batch-t+1 pipeline is visible
+on the timeline).  Render a terminal summary with
+``python -m repro.obs.report --metrics PATH [--perfetto PATH]``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.coded_serve --backend fused \
       --requests 12 --size 256 --fail-rate 0.3
@@ -131,6 +138,13 @@ def main(argv=None):
     ap.add_argument("--no-pipeline", action="store_true",
                     help="serve-tier: serialise worker and decode stages "
                          "instead of overlapping them (A/B baseline)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable observability and write the run's metrics "
+                         "as Prometheus text to PATH (see repro.obs)")
+    ap.add_argument("--perfetto-out", default=None, metavar="PATH",
+                    help="enable observability and write the run's spans "
+                         "as Chrome-trace/Perfetto JSON to PATH (serve "
+                         "tier: one track per SLO class)")
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="record the adaptive run as a JSONL trace")
     ap.add_argument("--replay", default=None, metavar="PATH",
@@ -156,17 +170,42 @@ def main(argv=None):
             ap.error("--serve-tier takes SLOs and feedback from the tenant "
                      "spec, not --slo-ms/--feedback, and does not replay "
                      "adaptive traces")
-        return run_serve_tier(args)
+        return _with_obs(run_serve_tier, args)
     if args.tenant_spec or args.no_pipeline or args.max_batch:
         ap.error("--tenant-spec/--no-pipeline/--max-batch need --serve-tier")
     if args.adaptive:
-        return run_adaptive(args)
+        return _with_obs(run_adaptive, args)
     if args.scenario or args.feedback or args.record or args.replay:
         ap.error("--scenario/--feedback/--record/--replay need --adaptive")
     if args.sub_tasks != 1:
         ap.error("--sub-tasks needs --adaptive (partial-straggler decoding "
                  "is driven by the monitor's progress plans)")
-    return run_static(args)
+    return _with_obs(run_static, args)
+
+
+def _with_obs(runner, args):
+    """Run ``runner`` with observability on when an export flag asks.
+
+    ``--metrics-out``/``--perfetto-out`` enable a FRESH obs session (so
+    the dumps cover exactly this run), then write the Prometheus text
+    and/or Chrome-trace JSON after the runner returns.  Without either
+    flag the runner executes with observability untouched (off unless
+    REPRO_OBS enabled it), keeping the default path zero-overhead.
+    """
+    if not (args.metrics_out or args.perfetto_out):
+        return runner(args)
+    from repro import obs
+    from repro.obs.export import write_perfetto, write_prometheus
+
+    obs.enable(fresh=True)
+    result = runner(args)
+    if args.metrics_out:
+        write_prometheus(args.metrics_out, obs.session().registry)
+        print(f"metrics -> {args.metrics_out}")
+    if args.perfetto_out:
+        write_perfetto(args.perfetto_out, obs.session().recorder.spans)
+        print(f"perfetto trace -> {args.perfetto_out}")
+    return result
 
 
 def run_static(args):

@@ -26,12 +26,18 @@ import jax.numpy as jnp
 
 import numpy as np
 
+from repro import obs
 from repro.core.api import CodedMatmulPlan
 from repro.runtime.erasure import ErasurePattern
 from repro.runtime.executors import Executor, resolve_executor
 from repro.runtime.partial import PartialPattern
 
 __all__ = ["CodedMatmul", "CacheGroup", "plan_token"]
+
+
+def _kind_label(kind) -> str:
+    """Bounded-cardinality metric label for an executable kind."""
+    return kind if isinstance(kind, str) else str(kind[0])
 
 
 def plan_token(plan: CodedMatmulPlan):
@@ -327,10 +333,13 @@ class CodedMatmul:
         fn = self._executables.get(key)
         if fn is not None:
             self._stats["hits"] += 1
+            obs.count("runtime.executable.hit", kind=_kind_label(kind))
             return fn
-        fn = self._build(A.ndim - 2, B.ndim - 2, kind)
+        with obs.span("runtime.executable.build", kind=_kind_label(kind), backend=self.backend):
+            fn = self._build(A.ndim - 2, B.ndim - 2, kind)
         self._executables[key] = fn
         self._stats["builds"] += 1
+        obs.count("runtime.executable.compile", kind=_kind_label(kind))
         return fn
 
     def _get_decode_executable(self, Y, kind):
@@ -342,14 +351,17 @@ class CodedMatmul:
         fn = self._executables.get(key)
         if fn is not None:
             self._stats["hits"] += 1
+            obs.count("runtime.executable.hit", kind=_kind_label(kind))
             return fn
-        base = self._executor.make_pipeline(self.plan, kind, self.dtype)
-        n_data = 2 if kind[0] == "decode" else 1
-        for _ in range(Y.ndim - 3):
-            base = jax.vmap(base, in_axes=(0, *([None] * n_data)))
-        fn = jax.jit(base)
+        with obs.span("runtime.executable.build", kind=_kind_label(kind), backend=self.backend):
+            base = self._executor.make_pipeline(self.plan, kind, self.dtype)
+            n_data = 2 if kind[0] == "decode" else 1
+            for _ in range(Y.ndim - 3):
+                base = jax.vmap(base, in_axes=(0, *([None] * n_data)))
+            fn = jax.jit(base)
         self._executables[key] = fn
         self._stats["builds"] += 1
+        obs.count("runtime.executable.compile", kind=_kind_label(kind))
         return fn
 
     def _build(self, a_batch: int, b_batch: int, kind):

@@ -41,6 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.chaos.serialize import report_to_dict
 from repro.control.driver import AdaptiveServer
 from repro.control.ladder import PlanLadder
@@ -116,6 +117,7 @@ class RequestRecord:
     queue_delay_s: Optional[float] = None
     latency_s: Optional[float] = None     # end-to-end (queueing included)
     violated: Optional[bool] = None       # latency_s > slo_s
+    span_id: Optional[str] = None         # span_id_for(seed, "request", rid)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +138,7 @@ class BatchRecord:
     decode_start_s: float
     decode_done_s: float
     report: dict                    # shared StepReport serialisation
+    span_id: Optional[str] = None   # span_id_for(seed, "batch", index)
 
 
 @dataclasses.dataclass
@@ -307,6 +310,9 @@ class ServeTier:
                 seed=seed, check_exact=check_exact,
                 slo_quantile=cls.quantile, slo_s=cls.slo_s,
                 feedback=cls.feedback, sub_tasks=sub_tasks)
+            # per-class obs scope: every class server shares the tier
+            # seed, so step span IDs need the class name to stay unique.
+            self.servers[cls.name].obs_scope = f"step.{cls.name}"
 
     # -- the shared scenario stream -----------------------------------------
     def _shared_feed(self, step: int, rng) -> np.ndarray:
@@ -374,6 +380,12 @@ class ServeTier:
         records: Dict[int, RequestRecord] = {}
         batches: List[BatchRecord] = []
         results: Dict[int, np.ndarray] = {}
+        # run the whole loop on a simulated-seconds obs clock: every span
+        # recorded during the run (control decisions included) stamps the
+        # loop's own deterministic `now`, so replays produce byte-identical
+        # span streams.  No-op while obs is disabled.
+        self._obs_clock = obs.SettableClock(0.0)
+        obs.use_clock(self._obs_clock)
         i = 0
         now = 0.0
         while True:
@@ -381,17 +393,25 @@ class ServeTier:
                 req = arrivals[i]
                 i += 1
                 reason = self.admission.offer(req, req.arrival_s)
+                if reason is None:
+                    obs.count("serve.admit", tenant=req.tenant,
+                              slo_class=req.slo_class)
+                else:
+                    obs.count("serve.shed", reason=reason,
+                              tenant=req.tenant, slo_class=req.slo_class)
                 records[req.rid] = RequestRecord(
                     rid=req.rid, tenant=req.tenant, slo_class=req.slo_class,
                     arrival_s=req.arrival_s, admitted=reason is None,
                     slo_s=self.classes[req.slo_class].slo_s,
-                    reject_reason=reason)
+                    reject_reason=reason,
+                    span_id=obs.span_id_for(self.seed, "request", req.rid))
             batch = self.batcher.form(self.admission.queues)
             if batch is None:
                 if i < len(arrivals):
                     now = max(now, arrivals[i].arrival_s)
                     continue
                 break
+            self._obs_clock.set(now)
             self._dispatch(batch, now, make_A, B, records, batches, results)
             now = max(now, self._pipe.next_free_s)
         meta = {
@@ -428,8 +448,28 @@ class ServeTier:
         decode_s = float(server.slo_policy.overhead_for(report.rung))
         timing = self._pipe.schedule(now, worker_s, decode_s)
         bucket = self.ladder.bucket_for(batch.size) or batch.size
+        index = len(batches)
+        span_id = obs.span_id_for(self.seed, "batch", index)
+        # pre-timed simulated spans: one Perfetto track per SLO class,
+        # with worker/decode lanes — overlapping slices on the two lanes
+        # ARE the pipeline overlap (decode of batch t under workers of
+        # batch t+1).
+        obs.emit_span("serve.dispatch", now, timing.decode_done_s,
+                      track=batch.slo_class, lane="dispatch",
+                      batch=index, rung=report.rung, span_id=span_id)
+        obs.emit_span("serve.worker_stage", timing.compute_start_s,
+                      timing.compute_done_s, track=batch.slo_class,
+                      lane="workers", batch=index, rung=report.rung,
+                      span_id=span_id)
+        obs.emit_span("serve.decode_stage", timing.decode_start_s,
+                      timing.decode_done_s, track=batch.slo_class,
+                      lane="decode", batch=index, rung=report.rung,
+                      span_id=span_id)
+        obs.observe("serve.stage.worker_s", worker_s, rung=report.rung)
+        obs.observe("serve.stage.decode_s", decode_s, rung=report.rung)
+        obs.count("serve.batch", slo_class=batch.slo_class)
         batches.append(BatchRecord(
-            index=len(batches), slo_class=batch.slo_class, rung=report.rung,
+            index=index, slo_class=batch.slo_class, rung=report.rung,
             size=batch.size, bucket=bucket,
             request_ids=tuple(r.rid for r in batch.requests),
             dispatch_s=now, worker_s=worker_s, decode_s=decode_s,
@@ -437,13 +477,19 @@ class ServeTier:
             compute_done_s=timing.compute_done_s,
             decode_start_s=timing.decode_start_s,
             decode_done_s=timing.decode_done_s,
-            report=report_to_dict(report)))
+            report=report_to_dict(report),
+            span_id=span_id))
         C_np = np.asarray(C)
         for j, req in enumerate(batch.requests):
             latency = timing.decode_done_s - req.arrival_s
+            obs.observe("serve.latency_s", latency,
+                        slo_class=batch.slo_class)
+            obs.observe("serve.queue_delay_s",
+                        timing.compute_start_s - req.arrival_s,
+                        slo_class=batch.slo_class)
             records[req.rid] = dataclasses.replace(
                 records[req.rid],
-                batch_index=batches[-1].index, rung=report.rung,
+                batch_index=index, rung=report.rung,
                 dispatch_s=timing.compute_start_s,
                 completion_s=timing.decode_done_s,
                 queue_delay_s=timing.compute_start_s - req.arrival_s,

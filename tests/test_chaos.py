@@ -325,4 +325,5 @@ def _report_like(step):
         predicted_tail_s=step.predicted_tail_s, realized_s=step.realized_s,
         realized_violation=step.realized_violation,
         q_effective=step.q_effective, progress=step.progress,
-        threshold_effective=step.threshold_effective)
+        threshold_effective=step.threshold_effective,
+        span_id=step.span_id)

@@ -1,0 +1,538 @@
+"""Observability layer: spans, metrics, exporters, report, trace IDs.
+
+Covers the ``repro.obs`` contracts end to end:
+
+* span nesting, exception safety, and the injectable clock;
+* histogram bucket-edge semantics (Prometheus ``le``-inclusive);
+* the disabled fast path — instrumented code returns bit-identical
+  results with observability off, and the conveniences are no-ops;
+* Perfetto / Prometheus exporter schemas (and the text-dump round
+  trip through ``parse_prometheus``);
+* the ``obs_report`` renderer against a golden expected output;
+* the serialize seam: ``report_to_dict -> JSON -> dict`` equality
+  modulo volatile fields (randomized, seeded — no hypothesis dep),
+  and the TraceStep/StepReport schema-consistency contract;
+* seed-derived span IDs: deterministic with obs OFF, stamped into the
+  golden chaos/serve traces byte-identically.
+"""
+import dataclasses
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.export import (parse_prometheus, perfetto_events,
+                              write_perfetto, write_prometheus)
+from repro.obs.metrics import DEFAULT_BUCKETS, Histogram, MetricsRegistry
+from repro.obs.report import render
+from repro.obs.spans import span_id_for
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+
+@pytest.fixture(autouse=True)
+def _fresh_session():
+    """Every test starts with observability OFF and leaves it off."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# -- spans --------------------------------------------------------------------
+
+class TestSpans:
+    def test_nesting_records_parent_chain(self):
+        obs.enable(fresh=True)
+        with obs.span("outer") as outer:
+            with obs.span("inner") as inner:
+                pass
+        spans = {s.name: s for s in obs.session().recorder.spans}
+        assert spans["inner"].parent == outer.sid
+        assert spans["outer"].parent is None
+        assert inner.sid != outer.sid
+        # children close before parents: creation order is inner, outer
+        assert [s.name for s in obs.session().recorder.spans] == \
+            ["inner", "outer"]
+
+    def test_exception_marks_span_failed_and_unwinds_stack(self):
+        obs.enable(fresh=True)
+        with pytest.raises(RuntimeError, match="boom"):
+            with obs.span("outer"):
+                with obs.span("inner"):
+                    raise RuntimeError("boom")
+        spans = {s.name: s for s in obs.session().recorder.spans}
+        assert spans["inner"].ok is False
+        assert spans["outer"].ok is False
+        # the stack fully unwound: a new span is a root again
+        with obs.span("after"):
+            pass
+        assert {s.name: s.parent for s in obs.session().recorder.spans}[
+            "after"] is None
+
+    def test_generator_leak_does_not_corrupt_siblings(self):
+        # a span left open by an abandoned generator must not become the
+        # parent of later siblings once its enclosing span closes
+        obs.enable(fresh=True)
+
+        def gen():
+            with obs.span("leaked"):
+                yield
+
+        with obs.span("outer"):
+            g = gen()
+            next(g)  # opens "leaked" and never closes it
+            del g
+        with obs.span("after"):
+            pass
+        spans = {s.name: s for s in obs.session().recorder.spans}
+        assert spans["after"].parent is None
+
+    def test_settable_clock_stamps_simulated_time(self):
+        clock = obs.SettableClock(10.0)
+        obs.enable(fresh=True, clock=clock)
+        with obs.span("step"):
+            clock.set(12.5)
+        (s,) = obs.session().recorder.spans
+        assert (s.start_s, s.end_s) == (10.0, 12.5)
+        assert s.duration_s == 2.5
+        # the clock never goes backwards
+        clock.set(1.0)
+        assert clock() == 12.5
+
+    def test_emit_records_pretimed_interval_verbatim(self):
+        obs.enable(fresh=True)
+        s = obs.emit_span("serve.worker_stage", 3.0, 7.0,
+                          track="premium", lane="workers", batch=4)
+        assert (s.start_s, s.end_s, s.track, s.lane) == \
+            (3.0, 7.0, "premium", "workers")
+        assert s.attrs == {"batch": "4"}
+
+    def test_span_ids_unique_and_ordered(self):
+        obs.enable(fresh=True)
+        for _ in range(5):
+            with obs.span("x"):
+                pass
+        sids = [s.sid for s in obs.session().recorder.spans]
+        assert sids == sorted(sids) and len(set(sids)) == 5
+
+
+# -- metrics ------------------------------------------------------------------
+
+class TestMetrics:
+    def test_histogram_bucket_edges_are_le_inclusive(self):
+        h = Histogram(edges=(1.0, 2.0, 5.0))
+        for v in (0.5, 1.0, 1.5, 2.0, 5.0, 5.0001):
+            h.observe(v)
+        # v == edge lands IN that edge's bucket (Prometheus le semantics)
+        assert h.counts == [2, 2, 1, 1]
+        assert h.cumulative() == ((1.0, 2), (2.0, 4), (5.0, 5),
+                                  (math.inf, 6))
+        assert h.count == 6
+        assert h.sum == pytest.approx(0.5 + 1.0 + 1.5 + 2.0 + 5.0 + 5.0001)
+
+    def test_histogram_rejects_unsorted_edges_and_rebucketing(self):
+        with pytest.raises(ValueError, match="ascending"):
+            Histogram(edges=(2.0, 1.0))
+        reg = MetricsRegistry()
+        reg.histogram("lat", buckets=(1.0, 2.0)).observe(0.5)
+        with pytest.raises(ValueError, match="re-bucket"):
+            reg.histogram("lat", buckets=(1.0, 3.0))
+
+    def test_counter_monotone_and_totals(self):
+        reg = MetricsRegistry()
+        reg.counter("serve.shed", reason="rate_limited").inc()
+        reg.counter("serve.shed", reason="queue_full").inc(2)
+        with pytest.raises(ValueError):
+            reg.counter("serve.shed", reason="queue_full").inc(-1)
+        assert reg.total("serve.shed") == 3
+        assert reg.value("serve.shed", reason="queue_full") == 2
+        assert reg.value("serve.shed", reason="nope") is None
+        assert reg.total("never.touched") == 0.0
+
+    def test_name_bound_to_one_kind(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(ValueError, match="already a counter"):
+            reg.histogram("x")
+
+
+# -- disabled-mode no-op ------------------------------------------------------
+
+class TestDisabledNoOp:
+    def test_conveniences_are_noops_while_disabled(self):
+        assert not obs.enabled()
+        obs.count("a.counter")
+        obs.observe("a.hist", 1.0)
+        obs.gauge("a.gauge", 2.0)
+        assert obs.emit_span("x", 0.0, 1.0) is None
+        assert obs.span("x") is obs.span("y")  # the shared NULL_SPAN
+        with obs.span("x"):
+            pass
+        with pytest.raises(RuntimeError, match="disabled"):
+            obs.session()
+
+    def test_instrumented_facade_results_bit_identical(self):
+        """The same coded matmul with obs off vs on: identical bits,
+        identical cache behaviour — instrumentation is observation only."""
+        import jax
+
+        from repro.control import PlanLadder
+        from repro.core.numerics import enable_x64
+
+        def serve():
+            ladder = PlanLadder(4, 2, 1, K=12, L=257, backend="reference")
+            ladder.prewarm((16, 8), (16, 4))
+            rng = np.random.default_rng(3)
+            A = jax.numpy.asarray(rng.integers(-4, 5, size=(16, 8)),
+                                  jax.numpy.float64)
+            B = jax.numpy.asarray(rng.integers(-4, 5, size=(16, 4)),
+                                  jax.numpy.float64)
+            outs = [np.asarray(ladder(A, B, erased=[1, 7]))]
+            ladder.switch(ladder.rungs[-1])
+            outs.append(np.asarray(ladder(A, B)))
+            return outs, ladder.cache_info()
+
+        with enable_x64():
+            obs.disable()
+            off, info_off = serve()
+            obs.enable(fresh=True)
+            on, info_on = serve()
+        for a, b in zip(off, on):
+            assert a.tobytes() == b.tobytes()
+        assert info_off == info_on
+        # and the instrumented run actually counted its compiles
+        assert obs.session().registry.total("runtime.executable.compile") > 0
+
+    def test_span_id_for_works_with_obs_disabled(self):
+        assert not obs.enabled()
+        sid = span_id_for(11, "step.premium", 0)
+        assert sid == span_id_for(11, "step.premium", 0)
+        assert len(sid) == 16 and int(sid, 16) >= 0
+        assert sid != span_id_for(11, "step.premium", 1)
+        assert sid != span_id_for(12, "step.premium", 0)
+        assert sid != span_id_for(11, "step.standard", 0)
+
+
+# -- exporters ----------------------------------------------------------------
+
+class TestExporters:
+    def _spans(self):
+        obs.enable(fresh=True)
+        rec = obs.session().recorder
+        rec.emit("serve.worker_stage", 0.0, 2.0, track="premium",
+                 lane="workers", batch=0)
+        rec.emit("serve.decode_stage", 2.0, 3.0, track="premium",
+                 lane="decode", batch=0)
+        rec.emit("serve.worker_stage", 2.5, 4.0, track="standard",
+                 lane="workers", batch=1)
+        return rec.spans
+
+    def test_perfetto_schema(self):
+        events = perfetto_events(self._spans())
+        meta = [e for e in events if e["ph"] == "M"]
+        slices = [e for e in events if e["ph"] == "X"]
+        # one process row per track, one thread row per (track, lane)
+        procs = {e["args"]["name"] for e in meta
+                 if e["name"] == "process_name"}
+        assert procs == {"premium", "standard"}
+        threads = [(e["pid"], e["args"]["name"]) for e in meta
+                   if e["name"] == "thread_name"]
+        assert len(threads) == 3
+        assert len(slices) == 3
+        for ev in slices:
+            assert set(ev) == {"ph", "name", "pid", "tid", "ts", "dur",
+                               "args"}
+        # microsecond timestamps
+        by = {(e["name"], e["args"]["batch"]): e for e in slices}
+        ev = by[("serve.worker_stage", "0")]
+        assert (ev["ts"], ev["dur"]) == (0.0, 2_000_000.0)
+
+    def test_write_perfetto_loads_as_json(self, tmp_path):
+        path = tmp_path / "t.json"
+        write_perfetto(str(path), self._spans())
+        doc = json.loads(path.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        assert any(e["ph"] == "X" for e in doc["traceEvents"])
+
+    def test_failed_span_flagged_in_args(self):
+        obs.enable(fresh=True)
+        with pytest.raises(ValueError):
+            with obs.span("bad"):
+                raise ValueError
+        (ev,) = [e for e in perfetto_events(obs.session().recorder.spans)
+                 if e["ph"] == "X"]
+        assert ev["args"]["error"] == "1"
+
+    def test_prometheus_round_trip(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("runtime.executable.compile", kind="concrete").inc(3)
+        reg.gauge("pool.size").set(12)
+        h = reg.histogram("serve.latency_s", buckets=(1.0, 10.0),
+                          slo_class="premium")
+        h.observe(0.5)
+        h.observe(1.0)
+        h.observe(20.0)
+        text = reg.to_prometheus()
+        # schema: TYPE lines, sanitised names, cumulative buckets
+        assert "# TYPE runtime_executable_compile counter" in text
+        assert 'runtime_executable_compile{kind="concrete"} 3' in text
+        assert "# TYPE serve_latency_s histogram" in text
+        assert 'le="+Inf"' in text
+
+        path = tmp_path / "m.prom"
+        write_prometheus(str(path), reg)
+        samples = parse_prometheus(path.read_text())
+        assert samples["pool_size"] == [({}, 12.0)]
+        buckets = {lab["le"]: v
+                   for lab, v in samples["serve_latency_s_bucket"]}
+        assert buckets == {"1.0": 2.0, "10.0": 2.0, "+Inf": 3.0}
+        assert samples["serve_latency_s_count"] == \
+            [({"slo_class": "premium"}, 3.0)]
+
+    def test_parse_rejects_garbage(self):
+        with pytest.raises(ValueError, match="unparseable"):
+            parse_prometheus("not a metric line at all!")
+
+
+# -- obs_report ---------------------------------------------------------------
+
+class TestReport:
+    def test_render_golden(self):
+        """The full report for a fixed dump pair, golden-checked."""
+        reg = MetricsRegistry()
+        reg.counter("runtime.executable.hit", kind="concrete").inc(9)
+        reg.counter("runtime.executable.compile", kind="concrete").inc(3)
+        reg.counter("serve.admit", tenant="gold").inc(5)
+        reg.counter("serve.shed", reason="rate_limited", tenant="free").inc(2)
+        h = reg.histogram("serve.stage.worker_s", buckets=(1.0, 5.0),
+                          rung="bec")
+        for v in (0.5, 0.75, 4.0):
+            h.observe(v)
+        perfetto = {"traceEvents": [
+            {"ph": "M", "name": "process_name", "pid": 1,
+             "args": {"name": "premium"}},
+            {"ph": "X", "name": "serve.worker_stage", "pid": 1, "tid": 1,
+             "ts": 0.0, "dur": 2_000_000.0, "args": {}},
+            {"ph": "X", "name": "serve.worker_stage", "pid": 1, "tid": 1,
+             "ts": 2.5e6, "dur": 1_500_000.0, "args": {}},
+            {"ph": "X", "name": "serve.decode_stage", "pid": 1, "tid": 2,
+             "ts": 2e6, "dur": 1_000_000.0, "args": {}},
+        ]}
+        expected = (
+            "== top spans (by total time, top 10) ==\n"
+            "  serve.worker_stage: n=2 total=3.5s mean=1.75s\n"
+            "  serve.decode_stage: n=1 total=1s mean=1s\n"
+            "== cache hit ratios ==\n"
+            "  runtime.executable: 9 hit / 3 other = 75.0%\n"
+            "== admission ==\n"
+            "  admitted = 5\n"
+            "  shed = 2\n"
+            "    reason=rate_limited,tenant=free: 2\n"
+            "== latency histograms ==\n"
+            "  serve_stage_worker_s{rung=bec}: n=3 mean=1.75s\n"
+            "    le 1: 2\n"
+            "    le 5: 1\n"
+            "== counters ==\n"
+            "  runtime_executable_compile{kind=concrete} = 3\n"
+            "  runtime_executable_hit{kind=concrete} = 9\n"
+            "  serve_admit{tenant=gold} = 5\n"
+            "  serve_shed{reason=rate_limited,tenant=free} = 2\n"
+        )
+        assert render(reg.to_prometheus(), perfetto) == expected
+
+    def test_render_empty_dump(self):
+        out = render("")
+        assert "(no cache activity recorded)" in out
+        assert "(no histograms recorded)" in out
+        assert "shed = 0" in out
+
+
+# -- serialize seam -----------------------------------------------------------
+
+class TestSerializeRoundTrip:
+    def _random_step(self, rng) -> "object":
+        from repro.chaos.trace import TraceStep
+
+        maybe = lambda v: None if rng.random() < 0.3 else v  # noqa: E731
+        return TraceStep(
+            step=int(rng.integers(0, 100)),
+            times=tuple(float(t) for t in rng.standard_normal(4) ** 2),
+            rung=str(rng.choice(["bec", "polycode", "tradeoff(p'=2)"])),
+            switched=bool(rng.integers(0, 2)),
+            erased=tuple(int(i) for i in rng.choice(
+                12, size=rng.integers(0, 4), replace=False)),
+            sim_latency_s=float(rng.standard_normal() ** 2),
+            slack=int(rng.integers(0, 10)),
+            respecialize=bool(rng.integers(0, 2)),
+            shrink_target=maybe((int(rng.integers(1, 5)),
+                                 int(rng.integers(1, 5)))),
+            exact=maybe(bool(rng.integers(0, 2))),
+            slo_violation=bool(rng.integers(0, 2)),
+            predicted_tail_s=maybe(float(rng.standard_normal() ** 2)),
+            realized_s=maybe(float(rng.standard_normal() ** 2)),
+            realized_violation=bool(rng.integers(0, 2)),
+            q_effective=maybe(float(rng.random())),
+            progress=maybe(tuple(float(p) for p in rng.random(12))),
+            threshold_effective=maybe(float(rng.random())),
+            span_id=maybe(span_id_for(int(rng.integers(0, 99)), "step",
+                                      int(rng.integers(0, 99)))),
+        )
+
+    def test_report_to_dict_json_round_trip_property(self):
+        """report_to_dict -> JSON -> dict equality modulo volatile fields,
+        over randomized records (seeded; stands in for hypothesis)."""
+        from repro.chaos.serialize import report_to_dict, tuplify
+        from repro.chaos.trace import TraceStep
+
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            step = self._random_step(rng)
+            rec = report_to_dict(step, exclude=())
+            rec2 = json.loads(json.dumps(rec))
+            assert rec2 == rec  # floats survive bit-exactly
+            rebuilt = TraceStep(**{
+                k: tuplify(v) if isinstance(v, list) else v
+                for k, v in rec2.items()})
+            assert rebuilt == step
+
+    def test_volatile_fields_routed_through_one_place(self):
+        from repro.chaos.serialize import (REPORT_VOLATILE_FIELDS,
+                                           report_field_names,
+                                           report_to_dict)
+        from repro.control.driver import StepReport
+
+        names = report_field_names(StepReport)
+        assert "wall_ms" in REPORT_VOLATILE_FIELDS
+        assert "wall_ms" not in names
+        # the dict serialisation uses the same selection
+        fields = {f.name: None for f in dataclasses.fields(StepReport)}
+        fields.update(step=0, rung="bec", switched=False, erased=(),
+                      sim_latency_s=0.0, slack=0, respecialize=False,
+                      slo_violation=False, realized_violation=False,
+                      wall_ms=123.0)
+        rep = StepReport(**{k: v for k, v in fields.items()})
+        assert tuple(report_to_dict(rep)) == names
+
+    def test_field_names_requires_dataclass(self):
+        from repro.chaos.serialize import report_field_names
+
+        with pytest.raises(TypeError):
+            report_field_names(dict)
+
+    def test_tracestep_covers_stepreport_schema(self):
+        """Every non-volatile StepReport field has a TraceStep slot (the
+        from_report contract) — and COMPARED_FIELDS derives from it."""
+        from repro.chaos.serialize import report_field_names
+        from repro.chaos.trace import COMPARED_FIELDS, TraceStep
+        from repro.control.driver import StepReport
+
+        report_names = set(report_field_names(StepReport))
+        step_names = {f.name for f in dataclasses.fields(TraceStep)}
+        assert report_names <= step_names
+        assert COMPARED_FIELDS == report_field_names(
+            TraceStep, volatile=("step", "times"))
+        assert "span_id" in COMPARED_FIELDS
+
+
+# -- golden trace span IDs ----------------------------------------------------
+
+class TestGoldenSpanIds:
+    def test_chaos_golden_span_ids_are_seed_derived(self):
+        # the canonical golden recipe constructs its AdaptiveServer with
+        # the DEFAULT server seed (0); the meta seed feeds the scenario.
+        path = GOLDEN_DIR / "heavy_tail.jsonl"
+        lines = path.read_text().splitlines()
+        for line in lines[1:]:
+            rec = json.loads(line)
+            assert rec["span_id"] == span_id_for(0, "step", rec["step"])
+
+    def test_serve_golden_span_ids_are_seed_derived(self):
+        from repro.serve import GOLDEN_SERVE_SEED
+
+        path = GOLDEN_DIR / "serve_heavy_tail.jsonl"
+        requests, batches = [], []
+        for line in path.read_text().splitlines()[1:]:
+            rec = json.loads(line)
+            (requests if rec["kind"] == "request" else batches).append(rec)
+        assert requests and batches
+        for rec in requests:
+            assert rec["span_id"] == span_id_for(
+                GOLDEN_SERVE_SEED, "request", rec["rid"])
+        for rec in batches:
+            assert rec["span_id"] == span_id_for(
+                GOLDEN_SERVE_SEED, "batch", rec["index"])
+            # the batch report carries the per-class control span ID
+            report = rec["report"]
+            assert report["span_id"] == span_id_for(
+                GOLDEN_SERVE_SEED, f"step.{rec['slo_class']}",
+                report["step"])
+
+
+# -- serve-tier integration ---------------------------------------------------
+
+class TestServeObsIntegration:
+    def _run_tier(self):
+        import jax
+
+        from repro.chaos import make_scenario
+        from repro.control import PlanLadder
+        from repro.core.numerics import enable_x64
+        from repro.serve import (GOLDEN_SERVE_OVERHEAD_S, GOLDEN_SERVE_SEED,
+                                 SLOClass, ServeTier, TenantSpec)
+
+        with enable_x64():
+            ladder = PlanLadder(4, 2, 1, K=12, L=257, backend="reference")
+            ladder.prewarm((16, 8), (16, 4), batch_sizes=(1, 2, 4),
+                           stages=True)
+            tier = ServeTier(
+                ladder,
+                classes=(SLOClass(name="premium", quantile=0.99,
+                                  slo_s=30.0),),
+                tenants=(TenantSpec(name="gold", slo_class="premium",
+                                    arrival_rps=2.0),),
+                feed=make_scenario("heavy_tail").compile(
+                    12, seed=GOLDEN_SERVE_SEED),
+                overhead_s=GOLDEN_SERVE_OVERHEAD_S,
+                seed=GOLDEN_SERVE_SEED, check_exact=True, pipelined=True)
+            A = jax.numpy.asarray(np.arange(16 * 8).reshape(16, 8) % 5,
+                                  jax.numpy.float64)
+            B = jax.numpy.asarray(np.arange(16 * 4).reshape(16, 4) % 5,
+                                  jax.numpy.float64)
+            return tier.run(lambda req: A, B, 8)
+
+    def test_spans_metrics_and_pipeline_overlap(self):
+        obs.enable(fresh=True)
+        result = self._run_tier()
+        rec = obs.session().recorder
+        workers = rec.by_name("serve.worker_stage")
+        decodes = rec.by_name("serve.decode_stage")
+        assert len(workers) == len(result.batches)
+        assert len(decodes) == len(result.batches)
+        assert all(s.track == "premium" for s in workers + decodes)
+        assert {s.lane for s in workers} == {"workers"}
+        assert {s.lane for s in decodes} == {"decode"}
+        # spans stamp SIMULATED seconds, straight off the batch schedule
+        for span, batch in zip(workers, result.batches):
+            assert span.start_s == batch.compute_start_s
+            assert span.end_s == batch.compute_done_s
+        # the pipeline contract: some decode(t) overlaps worker(t+1)
+        overlaps = sum(
+            1 for d, w in zip(decodes, workers[1:])
+            if d.start_s < w.end_s and w.start_s < d.end_s)
+        assert overlaps > 0, "pipelined tier showed no stage overlap"
+        reg = obs.session().registry
+        assert reg.total("serve.admit") == len(result.admitted)
+        assert reg.total("serve.batch") == len(result.batches)
+
+    def test_obs_off_and_on_give_identical_serve_records(self):
+        obs.disable()
+        off = self._run_tier()
+        obs.enable(fresh=True)
+        on = self._run_tier()
+        assert off.requests == on.requests
+        assert off.batches == on.batches
+        # span IDs are stamped either way (pure function of the seed)
+        assert all(r.span_id for r in off.requests)
