@@ -51,6 +51,17 @@ than the budget the binary server must WAIT IN FULL on the uncovered
 slow machines while the partial server consumes their completed chunk
 prefixes — fractional waits ``w * finish`` instead of ``finish``.
 
+The ELASTIC sweep (``elastic_sweep``) drives the executed pool handoff:
+a polycode-only ladder on a 12-worker universe loses 3 workers (past its
+budget of 2), the server executes the shrink respecialisation — the
+ladder re-lowers onto the 7 survivors, where only bec fits — then the 2
+initially-absent workers join on incrementally extended Vandermonde
+points and the policy re-ranks back to polycode.  Gates: the run
+survives the over-slack shrink exactly, priced latency recovers after
+the grow, and the grow recompiles NOTHING for pre-existing rungs (the
+old pool's executables all survive; post-grow serving adds zero
+compiles).
+
 Rows land in BENCH_control.json (a sweep run merge-appends into the
 existing file).  ``--check`` asserts the acceptance criteria (CI smoke):
 adaptive matches the best static rung at zero stragglers, beats every
@@ -250,6 +261,17 @@ PARTIAL_STEPS = 48
 PARTIAL_WARMUP = 6
 PARTIAL_SEED = 11
 
+# -- elastic shrink/grow sweep ------------------------------------------------
+EL_GRID = (3, 2, 1)         # bec(tau=2) + polycode(tau=8); 3 prime, no tradeoff
+EL_UNIVERSE = 12
+EL_STEPS = 24
+EL_DEPART = 4               # 3 departures > the polycode-only budget of 2
+EL_JOIN = 14                # the 2 absent workers join here
+EL_SEED = 7
+#: constant per-rung step costs: the grow gate is that readmitting the
+#: joiners wins back polycode's cheap digit stack (0.1 vs bec's 2.0).
+EL_OVERHEAD = {"bec": 2.0, "polycode": 0.1}
+
 # -- observed-violation feedback sweep ---------------------------------------
 FB_STEPS = 96
 FB_WARMUP = 8
@@ -441,6 +463,118 @@ def _run_feedback_sweep() -> list:
             for seed in FB_SEEDS for enabled in (False, True)]
 
 
+def _run_elastic(seed: int) -> dict:
+    """Elastic shrink-then-grow through the adaptive server (EXECUTED).
+
+    A polycode-only ladder (budget 2) on a worker universe of 12 serves on
+    an initial pool of 10; three departures exceed slack and trigger the
+    executed shrink handoff (the ladder re-lowers onto the survivors —
+    only bec fits the shrunk pool), then the two absent workers join at
+    ``EL_JOIN`` on incrementally extended evaluation points and the policy
+    re-ranks back to polycode.  The run measures priced step latency per
+    phase and proves the grow compiles NOTHING for pre-existing rungs:
+    every executable cached for the old pool survives the grow, and
+    serving after the grow's own prewarm adds zero compiles.
+    """
+    import jax.numpy as jnp
+
+    from repro.chaos import make_scenario
+    from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
+
+    scenario = make_scenario("pool_resize", num_departing=3,
+                             depart_step=EL_DEPART, num_arriving=2,
+                             join_step=EL_JOIN)
+    feed = scenario.compile(EL_UNIVERSE, seed=seed)
+    arriving = scenario.arriving_ids(EL_UNIVERSE, seed)
+    absent = {int(i) for i in arriving}
+    pool = [i for i in range(EL_UNIVERSE) if i not in absent]
+
+    watch = CompileWatch()
+    p, m, n = EL_GRID
+    ladder = PlanLadder(p, m, n, K=len(pool), L=L_SMALL,
+                        backend="reference", include=["polycode"])
+    ladder.prewarm((V, R), (V, T))
+    policy = ExpectedLatencyPolicy(ladder, overhead_s=EL_OVERHEAD)
+    server = AdaptiveServer(ladder, policy=policy, feed=feed, seed=seed,
+                            check_exact=True,
+                            universe=EL_UNIVERSE, pool=pool)
+    rng = np.random.default_rng(seed + 1)
+    A = jnp.asarray(rng.integers(-4, 5, size=(V, R)), jnp.float64)
+    B = jnp.asarray(rng.integers(-4, 5, size=(V, T)), jnp.float64)
+
+    shrink_step = None
+    exec_keys_pre_grow: set = set()
+    for i in range(EL_STEPS):
+        if i == EL_JOIN:
+            exec_keys_pre_grow = set(ladder.group.executables)
+            server.grow(arriving)
+            watch.mark()  # grow's own prewarm compiled the grown pool;
+            # everything SERVED after it must hit the cache.
+        server.step(A, B)
+        if shrink_step is None and len(server.pool) < len(pool):
+            shrink_step = i
+    reports = server.reports
+    priced = np.array([r.sim_latency_s + EL_OVERHEAD[r.rung]
+                       for r in reports])
+    return {
+        "seed": seed,
+        "universe": EL_UNIVERSE,
+        "pool_initial": len(pool),
+        "pool_shrunk": (len(reports[shrink_step].pool)
+                        if shrink_step is not None else None),
+        "pool_final": len(reports[-1].pool),
+        "shrink_step": shrink_step,
+        "join_step": EL_JOIN,
+        "respecializations": int(sum(r.respecialize for r in reports)),
+        "rung_first": reports[0].rung,
+        "rung_shrunk": (reports[shrink_step].rung
+                        if shrink_step is not None else None),
+        "rung_final": reports[-1].rung,
+        "pre_depart_mean_s": float(priced[:EL_DEPART].mean()),
+        "shrunk_mean_s": (float(priced[shrink_step:EL_JOIN].mean())
+                          if shrink_step is not None else None),
+        "post_grow_mean_s": float(priced[EL_JOIN:].mean()),
+        "post_grow_recompiles": watch.delta(),
+        "old_executables_survived": exec_keys_pre_grow
+        <= set(ladder.group.executables),
+        "all_exact": all(r.exact for r in reports),
+    }
+
+
+def check_elastic(row: dict) -> None:
+    """Acceptance gates of the elastic sweep (also run under ``--check``).
+
+    The run must SURVIVE a shrink that exceeds the active rung's slack
+    (the handoff executes: pool shrank, a respecialisation fired, every
+    step decoded exactly), must RECOVER throughput after the grow (the
+    readmitted pool serves the cheap wide rung again, beating the shrunk
+    phase and landing back at the pre-departure price), and the grow must
+    compile NOTHING for pre-existing rungs — the old pool's executables
+    all survive and post-grow serving adds zero compiles.
+    """
+    assert row["all_exact"], f"inexact decode in the elastic sweep: {row}"
+    assert row["shrink_step"] is not None, (
+        f"the shrink handoff never executed: {row}")
+    assert row["respecializations"] > 0, (
+        f"no respecialisation event recorded: {row}")
+    assert row["pool_shrunk"] < row["pool_initial"], (
+        f"pool did not shrink: {row}")
+    assert row["rung_shrunk"] != row["rung_first"], (
+        f"shrink did not re-lower the rung: {row}")
+    assert row["pool_final"] > row["pool_shrunk"], (
+        f"pool did not grow back: {row}")
+    assert row["rung_final"] == row["rung_first"], (
+        f"grow did not recover the wide rung: {row}")
+    assert row["post_grow_mean_s"] < 0.8 * row["shrunk_mean_s"], (
+        f"no throughput recovery after grow: {row}")
+    assert row["post_grow_mean_s"] <= 1.25 * row["pre_depart_mean_s"], (
+        f"post-grow price did not return to the pre-departure level: {row}")
+    assert_no_recompiles(row["post_grow_recompiles"],
+                         "serving after the elastic grow")
+    assert row["old_executables_survived"], (
+        f"grow evicted pre-existing executables: {row}")
+
+
 def _run_exhausted(seed: int) -> dict:
     """Budget-exhaustion handoff: a polycode-only ladder (budget 1) facing 3
     persistent stragglers must flag a respecialisation (plan_shrink)."""
@@ -478,11 +612,21 @@ def run(sweep: str = "all") -> dict:
         "steps": PARTIAL_STEPS, "warmup": PARTIAL_WARMUP,
         "seed": PARTIAL_SEED, "overhead_s": Q_OVERHEAD,
     }
+    elastic_config = {
+        "grid": list(EL_GRID), "universe": EL_UNIVERSE, "steps": EL_STEPS,
+        "depart_step": EL_DEPART, "join_step": EL_JOIN, "seed": EL_SEED,
+        "overhead_s": EL_OVERHEAD, "include": ["polycode"],
+    }
     if sweep == "partial_sweep":
         with enable_x64():
             partial_sweep = _run_partial_sweep()
         return {"config": {"partial_sweep": partial_config},
                 "partial_sweep": partial_sweep}
+    if sweep == "elastic_sweep":
+        with enable_x64():
+            elastic_sweep = _run_elastic(EL_SEED)
+        return {"config": {"elastic_sweep": elastic_config},
+                "elastic_sweep": elastic_sweep}
     with enable_x64():
         regimes = [_run_regime(L, S, seed=17 + S)
                    for L in (L_SMALL, L_LARGE)
@@ -491,6 +635,7 @@ def run(sweep: str = "all") -> dict:
         scenario_sweep = _run_scenario_sweep()
         feedback_sweep = _run_feedback_sweep()
         partial_sweep = _run_partial_sweep()
+        elastic_sweep = _run_elastic(EL_SEED)
         exhausted = _run_exhausted(seed=29)
     return {
         "config": {
@@ -512,12 +657,14 @@ def run(sweep: str = "all") -> dict:
                 "overhead_s": Q_OVERHEAD, "config": FB_CONFIG,
             },
             "partial_sweep": partial_config,
+            "elastic_sweep": elastic_config,
         },
         "regimes": regimes,
         "quantile_sweep": quantile_sweep,
         "scenario_sweep": scenario_sweep,
         "feedback_sweep": feedback_sweep,
         "partial_sweep": partial_sweep,
+        "elastic_sweep": elastic_sweep,
         "exhausted": exhausted,
     }
 
@@ -639,6 +786,18 @@ def check(result: dict) -> None:
         "feedback never strictly reduced realized SLO violations vs the "
         f"static-q policy: {result['feedback_sweep']}")
     check_partial(result["partial_sweep"])
+    check_elastic(result["elastic_sweep"])
+
+
+def _print_elastic(row: dict) -> None:
+    print(f"elastic: pool {row['pool_initial']} -> {row['pool_shrunk']} "
+          f"(shrink step {row['shrink_step']}, {row['rung_first']} -> "
+          f"{row['rung_shrunk']}) -> {row['pool_final']} "
+          f"(join step {row['join_step']}, back to {row['rung_final']}); "
+          f"priced mean {row['pre_depart_mean_s']:.2f} -> "
+          f"{row['shrunk_mean_s']:.2f} -> {row['post_grow_mean_s']:.2f} s, "
+          f"{row['post_grow_recompiles']} post-grow recompiles, old "
+          f"executables survived: {row['old_executables_survived']}")
 
 
 def _print_partial(rows: list) -> None:
@@ -656,9 +815,10 @@ def main(argv=None, save: str = "BENCH_control.json"):
 
     ap = argparse.ArgumentParser()
     ap.add_argument("sweep", nargs="?", default="all",
-                    choices=["all", "partial_sweep"],
-                    help="which sweep to run: the full bench (default) or "
-                         "only the binary-vs-partial comparison")
+                    choices=["all", "partial_sweep", "elastic_sweep"],
+                    help="which sweep to run: the full bench (default), "
+                         "only the binary-vs-partial comparison, or only "
+                         "the elastic shrink/grow handoff")
     ap.add_argument("--check", action="store_true",
                     help="assert the acceptance criteria (CI smoke)")
     args = ap.parse_args(argv)
@@ -683,6 +843,12 @@ def main(argv=None, save: str = "BENCH_control.json"):
             check_partial(result["partial_sweep"])
             print("control bench partial check: OK")
         return result
+    if args.sweep == "elastic_sweep":
+        _print_elastic(result["elastic_sweep"])
+        if args.check:
+            check_elastic(result["elastic_sweep"])
+            print("control bench elastic check: OK")
+        return result
     for row in result["regimes"]:
         static = {r: round(s, 3) for r, s in row["static_s"].items()}
         print(f"L={row['L']:>6} S={row['stragglers']}: "
@@ -704,6 +870,7 @@ def main(argv=None, save: str = "BENCH_control.json"):
               f"p50 {row['p50_s']:5.2f} s  p99 {row['p99_s']:5.2f} s "
               f"(rungs {row['rungs']})")
     _print_partial(result["partial_sweep"])
+    _print_elastic(result["elastic_sweep"])
     ex = result["exhausted"]
     print(f"exhausted-budget handoff: {ex['respecializations']} "
           f"respecialisations -> shrink {ex['shrink_target']}")

@@ -12,13 +12,18 @@ changed).
 Catalog: every registered scenario under its own name, plus
 ``pareto_feedback`` — the Pareto-tail regime served WITH observed-
 violation feedback, so the feedback control law itself is pinned by a
-golden trace too — and ``crawler_partial`` — the crawler regime served
-with ``sub_tasks=4``, pinning the fractional progress plans partial
-decoding emits.
+golden trace too — ``crawler_partial`` — the crawler regime served with
+``sub_tasks=4``, pinning the fractional progress plans partial decoding
+emits — and the ELASTIC pair ``pool_resize_shrink`` / ``pool_resize_grow``
+— the pool_resize regime served through an elastic ``AdaptiveServer``
+(``universe=``), pinning the executed shrink handoff (departures exceed
+the polycode-only ladder's slack, the pool re-lowers onto the survivors)
+and, in the grow variant, the subsequent admission of the arriving
+workers onto Leja-extended evaluation points.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -44,10 +49,32 @@ _SLO_S = 4.0                     # bound the predictive fallback is judged by
 _FEEDBACK_SLO_S = 2.5            # tighter bound for the feedback variant
 _PARTIAL_SUB_TASKS = 4           # Q of the crawler_partial variant
 
+#: the elastic pool_resize pair: a polycode-only ladder (narrow budget, so
+#: three departures exceed slack and force the EXECUTED handoff) on a grid
+#: whose bec rung (tau=2) still fits the shrunk pool — the paper's L<->tau
+#: tradeoff is what keeps the survivors decodable.
+_ELASTIC_KEYS = ("pool_resize_shrink", "pool_resize_grow")
+_ELASTIC_GRID = (3, 2, 1)        # bec(tau=2), polycode(tau=8)
+_ELASTIC_UNIVERSE = 12           # fleet size the feed emits for
+_ELASTIC_K = 10                  # initial pool: universe minus the arrivals
+_ELASTIC_STEPS = 16
+_ELASTIC_DEPART_STEP = 4
+_ELASTIC_JOIN_STEP = 12          # grow variant only
+_ELASTIC_OVERHEAD_S = {"bec": 2.0, "polycode": 0.1}
+
 
 def golden_names() -> Tuple[str, ...]:
-    """Catalog keys: every scenario + the feedback and partial variants."""
-    return scenario_names() + ("pareto_feedback", "crawler_partial")
+    """Catalog keys: every scenario + feedback/partial/elastic variants."""
+    return scenario_names() + ("pareto_feedback",
+                               "crawler_partial") + _ELASTIC_KEYS
+
+
+def _elastic_scenario(key: str):
+    """The pool_resize variant behind an elastic catalog ``key``."""
+    return make_scenario(
+        "pool_resize", num_departing=3, depart_step=_ELASTIC_DEPART_STEP,
+        num_arriving=2,
+        join_step=_ELASTIC_JOIN_STEP if key == "pool_resize_grow" else None)
 
 
 def _request(dtype):
@@ -60,7 +87,7 @@ def _request(dtype):
     return A, B
 
 
-def _serve(key: str, feed, steps: int):
+def _serve(key: str, feed, steps: int, seed: int = GOLDEN_SEED):
     """Run the canonical server config for ``key`` over ``feed``."""
     import jax.numpy as jnp
 
@@ -69,6 +96,28 @@ def _serve(key: str, feed, steps: int):
         ExpectedLatencyPolicy,
         PlanLadder,
     )
+
+    if key in _ELASTIC_KEYS:
+        scenario = _elastic_scenario(key)
+        arriving = scenario.arriving_ids(_ELASTIC_UNIVERSE, seed)
+        absent = set(int(i) for i in arriving)
+        pool = [i for i in range(_ELASTIC_UNIVERSE) if i not in absent]
+        p, m, n = _ELASTIC_GRID
+        ladder = PlanLadder(p, m, n, K=_ELASTIC_K, L=GOLDEN_L,
+                            backend="reference", dtype=jnp.float64,
+                            include=["polycode"])
+        ladder.prewarm(*GOLDEN_SHAPES)
+        policy = ExpectedLatencyPolicy(ladder,
+                                       overhead_s=_ELASTIC_OVERHEAD_S)
+        server = AdaptiveServer(ladder, policy=policy, feed=feed,
+                                check_exact=True,
+                                universe=_ELASTIC_UNIVERSE, pool=pool)
+        A, B = _request(jnp.float64)
+        for i in range(steps):
+            if scenario.join_step is not None and i == scenario.join_step:
+                server.grow(arriving)
+            server.step(A, B)
+        return server.reports
 
     feedback = key == "pareto_feedback"
     sub_tasks = _PARTIAL_SUB_TASKS if key == "crawler_partial" else 1
@@ -87,15 +136,33 @@ def _serve(key: str, feed, steps: int):
     return server.run(steps, lambda i: (A, B))
 
 
-def golden_trace(key: str, steps: int = GOLDEN_STEPS,
+def golden_trace(key: str, steps: Optional[int] = None,
                  seed: int = GOLDEN_SEED) -> Trace:
     """Run the canonical recipe for catalog entry ``key`` and record it.
+
+    ``steps`` defaults to ``GOLDEN_STEPS`` (``_ELASTIC_STEPS`` for the
+    elastic pair, whose grow event lands at step ``_ELASTIC_JOIN_STEP``).
 
     Raises:
         KeyError: for a key outside :func:`golden_names`.
     """
     if key not in golden_names():
         raise KeyError(f"unknown golden key {key!r}; have {golden_names()}")
+    if key in _ELASTIC_KEYS:
+        if steps is None:
+            steps = _ELASTIC_STEPS
+        scenario = _elastic_scenario(key)
+        recorder = TraceRecorder(
+            scenario.compile(_ELASTIC_UNIVERSE, seed=seed), _ELASTIC_UNIVERSE,
+            meta={"scenario": "pool_resize", "seed": seed, "steps": steps,
+                  "grid": list(_ELASTIC_GRID), "L": GOLDEN_L,
+                  "elastic": True, "universe": _ELASTIC_UNIVERSE,
+                  "include": ["polycode"],
+                  "join_step": scenario.join_step})
+        reports = _serve(key, recorder, steps, seed=seed)
+        return recorder.finish(reports)
+    if steps is None:
+        steps = GOLDEN_STEPS
     feedback = key == "pareto_feedback"
     scenario_name = {"pareto_feedback": "pareto",
                      "crawler_partial": "crawler"}.get(key, key)
@@ -107,7 +174,7 @@ def golden_trace(key: str, steps: int = GOLDEN_STEPS,
               "feedback": feedback,
               "sub_tasks": (_PARTIAL_SUB_TASKS
                             if key == "crawler_partial" else 1)})
-    reports = _serve(key, recorder, steps)
+    reports = _serve(key, recorder, steps, seed=seed)
     return recorder.finish(reports)
 
 
@@ -116,4 +183,5 @@ def replay_golden(key: str, trace: Trace):
     must reproduce the trace bit-exactly (``trace.diff(...) == []``)."""
     if key not in golden_names():
         raise KeyError(f"unknown golden key {key!r}; have {golden_names()}")
-    return _serve(key, trace.feed(), len(trace.steps))
+    return _serve(key, trace.feed(), len(trace.steps),
+                  seed=int(trace.meta.get("seed", GOLDEN_SEED)))

@@ -391,10 +391,13 @@ class PoolResize(Scenario):
     ``num_departing`` workers leave at ``depart_step`` (their finish times
     jump to ``down_factor`` x base — machines nobody should wait for);
     ``num_arriving`` workers are absent (same ``down_factor``) until they
-    join at ``join_step``.  The two sets are disjoint.  K itself stays
-    fixed — dynamic K is a ladder-level open item (ROADMAP) — so
-    departure/arrival is expressed purely through the time feed, which is
-    exactly what the monitor's mask can react to.
+    join at ``join_step``.  The two sets are disjoint.  The feed always
+    emits for the full universe of K workers; a fixed-pool server sees
+    departure/arrival purely through the monitor's mask, while an ELASTIC
+    ``AdaptiveServer`` (``universe=``) starts its pool without the
+    arriving set (:meth:`arriving_ids`), executes the shrink handoff when
+    the departures exhaust slack, and ``grow()``s onto Leja-extended
+    points at ``join_step``.
     """
 
     name: ClassVar[str] = "pool_resize"
@@ -406,11 +409,27 @@ class PoolResize(Scenario):
     join_step: Optional[int] = 4
     down_factor: float = 25.0
 
+    def member_sets(self, K: int, seed: int) -> tuple:
+        """The seed-fixed (departing, arriving) universe id arrays.
+
+        The same ranked-uniform pick :meth:`times` applies, exposed so an
+        elastic driver can start its pool without the arriving workers
+        and admit exactly them at ``join_step``.
+        """
+        both = self._pick(K, self.num_departing + self.num_arriving, seed, 0)
+        return both[: self.num_departing], both[self.num_departing:]
+
+    def departing_ids(self, K: int, seed: int) -> np.ndarray:
+        """Universe ids that go slow at ``depart_step``."""
+        return self.member_sets(K, seed)[0]
+
+    def arriving_ids(self, K: int, seed: int) -> np.ndarray:
+        """Universe ids absent until ``join_step``."""
+        return self.member_sets(K, seed)[1]
+
     def times(self, step: int, K: int, seed: int) -> np.ndarray:
         """Per-worker times with departures/arrivals applied at ``step``."""
-        both = self._pick(K, self.num_departing + self.num_arriving, seed, 0)
-        departing = both[: self.num_departing]
-        arriving = both[self.num_departing:]
+        departing, arriving = self.member_sets(K, seed)
         base = np.full(K, self.base)
         if self.depart_step is not None and step >= self.depart_step:
             base[departing] *= self.down_factor

@@ -82,6 +82,8 @@ class TraceStep:
     threshold_effective: Optional[float] = None
     #: seed-derived obs correlation ID (span_id_for(seed, scope, step)).
     span_id: Optional[str] = None
+    #: universe ids serving the step (elastic pool; None on fixed pools).
+    pool: Optional[Tuple[int, ...]] = None
 
     @classmethod
     def from_report(cls, report: StepReport,
@@ -198,6 +200,8 @@ class Trace:
                 rec["shrink_target"] = tuple(rec["shrink_target"])
             if rec.get("progress") is not None:
                 rec["progress"] = tuple(rec["progress"])
+            if rec.get("pool") is not None:
+                rec["pool"] = tuple(rec["pool"])
             steps.append(TraceStep(**rec))
         return cls(K=int(header["K"]), meta=dict(header.get("meta", {})),
                    steps=tuple(steps))

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -36,6 +36,7 @@ import jax
 
 from repro import obs
 from repro.core.api import uncoded_matmul
+from repro.core.points import extend_points
 from repro.core.simulator import LatencyModel, TimeFeed, WorkerTimes
 from repro.distributed.elastic import CodedElasticPolicy, plan_shrink
 from repro.control.feedback import FeedbackConfig, ViolationFeedback
@@ -72,6 +73,7 @@ class StepReport:
     progress: Optional[Tuple[float, ...]] = None  # partial plan (sub_tasks > 1)
     threshold_effective: Optional[float] = None   # adaptive monitor threshold
     span_id: Optional[str] = None  # seed-derived obs correlation ID
+    pool: Optional[Tuple[int, ...]] = None  # universe ids serving (elastic)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +104,7 @@ class StepDecision:
     threshold_effective: Optional[float]  # feedback-adjusted flag threshold
     respecialize: bool             # erasure budget exhausted ladder-wide
     shrink_target: Optional[Tuple[int, int]]  # plan_shrink mesh on handoff
+    pool: Optional[Tuple[int, ...]] = None  # universe ids serving (elastic)
 
 
 class AdaptiveServer:
@@ -146,10 +149,21 @@ class AdaptiveServer:
             flagged stragglers instead of erasing them outright, and both
             policies rank rungs under the refined fractional law.  ``Q=1``
             is the legacy binary loop, bit for bit.
+        universe: total worker-fleet size for ELASTIC pool execution.
+            When set, the feed emits ``(universe,)`` per-worker times and
+            the server serves on a subset of that fleet (``pool``); a
+            ``must_respecialize`` step then EXECUTES the handoff — the
+            ladder re-lowers onto the survivor pool's evaluation points —
+            and :meth:`grow` admits joiners on Leja-extended points.
+            ``None`` (default) is the fixed-pool loop, bit for bit.
+        pool: initial universe member ids serving (elastic mode only);
+            must have exactly ``ladder.K`` entries.  Defaults to the
+            first ``ladder.K`` universe members.
 
     Raises:
         ValueError: if ``slo_s`` is given without ``slo_quantile``,
-            ``feedback`` without both, or ``sub_tasks < 1``.
+            ``feedback`` without both, ``sub_tasks < 1``, or an invalid
+            ``universe``/``pool`` combination.
     """
 
     def __init__(self, ladder: PlanLadder, *,
@@ -164,7 +178,9 @@ class AdaptiveServer:
                  slo_quantile: Optional[float] = None,
                  slo_s: Optional[float] = None,
                  feedback: Union[bool, FeedbackConfig, None] = None,
-                 sub_tasks: int = 1):
+                 sub_tasks: int = 1,
+                 universe: Optional[int] = None,
+                 pool: Optional[Sequence[int]] = None):
         if slo_s is not None and slo_quantile is None:
             raise ValueError("slo_s needs slo_quantile (the quantile the "
                              "SLO is stated at)")
@@ -196,6 +212,26 @@ class AdaptiveServer:
             self.feedback = ViolationFeedback(slo_quantile, slo_s, config)
         self.elastic = CodedElasticPolicy(
             K=ladder.K, tau=ladder.tau(ladder.active))
+        self.universe: Optional[int] = None
+        self.pool: Optional[np.ndarray] = None
+        if universe is not None:
+            if universe < ladder.K:
+                raise ValueError(
+                    f"universe={universe} smaller than the pool K={ladder.K}")
+            self.universe = int(universe)
+            members = (np.arange(ladder.K, dtype=np.intp) if pool is None
+                       else np.asarray(pool, dtype=np.intp))
+            if (members.ndim != 1 or members.size != ladder.K
+                    or len(set(members.tolist())) != members.size):
+                raise ValueError(
+                    f"pool must list {ladder.K} distinct universe members, "
+                    f"got {pool!r}")
+            if members.min() < 0 or members.max() >= self.universe:
+                raise ValueError(
+                    f"pool members outside the universe of {self.universe}")
+            self.pool = members.copy()
+        elif pool is not None:
+            raise ValueError("pool= requires universe= (elastic mode)")
         self._feed = feed
         self._fallback = fallback_model or LatencyModel(base=1.0, jitter=0.0)
         self.reevaluate_every = max(1, reevaluate_every)
@@ -213,13 +249,16 @@ class AdaptiveServer:
 
     # -- worker-time ingestion ----------------------------------------------
     def _worker_times(self) -> np.ndarray:
+        """One step of per-worker finish times: (universe,) when elastic
+        (the fleet keeps emitting for non-members), else (K,)."""
+        width = self.universe if self.universe is not None else self.ladder.K
         if self._feed is not None:
             t = np.asarray(self._feed(self.steps, self.rng), dtype=np.float64)
-            if t.shape != (self.ladder.K,):
+            if t.shape != (width,):
                 raise ValueError(
-                    f"feed returned shape {t.shape}, need ({self.ladder.K},)")
+                    f"feed returned shape {t.shape}, need ({width},)")
             return t
-        return self._fallback.sample(self.ladder.K, (), self.rng)
+        return self._fallback.sample(width, (), self.rng)
 
     def _switch_to(self, rung: str) -> bool:
         """Activate ``rung`` (carrying elastic state); True if it changed."""
@@ -230,6 +269,69 @@ class AdaptiveServer:
             K=self.ladder.K, tau=self.ladder.tau(rung),
             healthy=self.elastic.healthy.copy())
         return True
+
+    # -- elastic pool execution ----------------------------------------------
+    def _execute_shrink(self, threshold: float) -> bool:
+        """Drop the flagged stragglers and re-lower onto the survivors.
+
+        The executed half of the respecialisation handoff: survivors keep
+        their evaluation points (a subset of the ladder's), the ladder
+        re-lowers its rung family onto them reusing the shared cache
+        group, and monitor/elastic state compacts to the survivor
+        indices.  Returns False — leaving the step a flag-only handoff,
+        exactly the fixed-pool behaviour — when no rung fits the survivor
+        pool or nobody survives.
+        """
+        victims = self.monitor.stragglers(threshold)
+        keep = np.setdiff1d(np.arange(self.ladder.K, dtype=np.intp), victims)
+        if keep.size == 0:
+            return False
+        try:
+            self.ladder.respecialize(self.ladder.z_points[keep])
+        except ValueError:
+            return False  # survivor pool below every rung's tau
+        self.monitor.resize(keep=keep)
+        self.elastic.shrink(keep)
+        self.elastic.tau = self.ladder.tau(self.ladder.active)
+        self.pool = self.pool[keep]
+        obs.count("control.pool.shrink", dropped=int(victims.size))
+        return True
+
+    def grow(self, joiners: Sequence[int]) -> None:
+        """Admit ``joiners`` (universe ids) onto Leja-extended points.
+
+        The symmetric elastic path: the ladder's evaluation points extend
+        by ``len(joiners)`` fresh Leja points (``core.points
+        .extend_points``) and every rung re-lowers incrementally —
+        surviving workers' encoded-task coefficients, cached decode
+        panels, and compiled executables for the old pool are untouched,
+        so only the grown pool's executables compile.  Joiners append at
+        the END of the pool (they own the new points) and start cold in
+        the monitor.
+
+        Raises:
+            ValueError: on a fixed-pool server, an empty/duplicate joiner
+                list, ids outside the universe, or ids already serving.
+        """
+        if self.pool is None:
+            raise ValueError("grow() needs an elastic server (universe=)")
+        ids = np.asarray(joiners, dtype=np.intp)
+        if ids.ndim != 1 or ids.size < 1:
+            raise ValueError(f"joiners must be 1-D non-empty, got {joiners!r}")
+        if len(set(ids.tolist())) != ids.size:
+            raise ValueError(f"duplicate joiner ids: {joiners!r}")
+        if ids.min() < 0 or ids.max() >= self.universe:
+            raise ValueError(
+                f"joiners outside the universe of {self.universe}")
+        if np.intersect1d(ids, self.pool).size:
+            raise ValueError(f"joiners already in the pool: {joiners!r}")
+        g = int(ids.size)
+        self.ladder.respecialize(extend_points(self.ladder.z_points, g))
+        self.monitor.resize(grow=g)
+        self.elastic.grow(g)
+        self.elastic.tau = self.ladder.tau(self.ladder.active)
+        self.pool = np.concatenate([self.pool, ids])
+        obs.count("control.pool.grow", joined=g)
 
     # -- one serving step ----------------------------------------------------
     def begin_step(self) -> StepDecision:
@@ -252,7 +354,8 @@ class AdaptiveServer:
         return decision
 
     def _decide(self) -> StepDecision:
-        times = self._worker_times()
+        times_all = self._worker_times()
+        times = times_all if self.pool is None else times_all[self.pool]
         self.monitor.record_step(times)
         scores = self.monitor.straggler_scores()
 
@@ -348,6 +451,22 @@ class AdaptiveServer:
                 shrink_target = plan_shrink(healthy)
             except ValueError:
                 shrink_target = None  # not even a 1x1 mesh left
+            if self.pool is not None:
+                # ELASTIC: execute the handoff now — this very step serves
+                # on the survivor pool's re-lowered ladder.
+                rung_before = self.ladder.active
+                if self._execute_shrink(thr):
+                    switched = switched or self.ladder.active != rung_before
+                    times = times_all[self.pool]
+                    if self.sub_tasks > 1:
+                        progress = self.monitor.progress_plan(
+                            self.sub_tasks,
+                            self.ladder.tau(self.ladder.active), thr)
+                        mask = (progress > 0).astype(np.float64)
+                    else:
+                        mask = self.monitor.erasure_mask(
+                            self.ladder.budget(self.ladder.active), thr)
+                    self.elastic.observe_mask(mask)
 
         return StepDecision(
             step=self.steps,
@@ -362,6 +481,8 @@ class AdaptiveServer:
             threshold_effective=thr_eff,
             respecialize=respecialize,
             shrink_target=shrink_target,
+            pool=(None if self.pool is None
+                  else tuple(int(x) for x in self.pool)),
         )
 
     def execute(self, decision: StepDecision, A, B) -> jax.Array:
@@ -430,6 +551,7 @@ class AdaptiveServer:
             threshold_effective=decision.threshold_effective,
             span_id=obs.span_id_for(self.seed, self.obs_scope,
                                     decision.step),
+            pool=decision.pool,
         )
         obs.observe("control.sim_latency_s", sim_latency, rung=decision.rung)
         if realized_violation:

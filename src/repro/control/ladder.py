@@ -28,10 +28,12 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.core import bounds as bounds_mod
-from repro.core.api import CodedMatmulPlan, make_plan
+from repro.core.api import CodedMatmulPlan, extend_plan, make_plan
+from repro.core.points import make_points
 from repro.core.schemes import make_scheme
 from repro.runtime import CacheGroup, CodedMatmul
 
@@ -62,12 +64,20 @@ class PlanLadder:
         self.switch_count = 0
         self.step_overhead_s: dict = {}
         self._buckets: Tuple[int, ...] = ()
+        self._backend = backend
+        self._mesh = mesh
+        self._include = None if include is None else tuple(include)
+        self._prewarm_args: Optional[dict] = None
 
         specs = [("bec", dict(kind="bec"))]
         specs += [(f"tradeoff(p'={pp})", dict(kind="tradeoff", p_prime=pp))
                   for pp in _divisors(p) if 1 < pp < p]
         specs.append(("polycode", dict(kind="polycode")))
+        self._specs = tuple(specs)
 
+        # one shared point set for every rung: the pool IS the points, and
+        # the elastic paths resize them as a unit (respecialize).
+        self.z_points = make_points(points, K)
         self._plans: dict = {}
         self._facades: dict = {}
         for name, spec in specs:
@@ -77,7 +87,8 @@ class PlanLadder:
                            p_prime=spec.get("p_prime", 1)).tau > K:
                 continue  # this rung can never decode with K workers
             plan = make_plan(spec["kind"], p, m, n, K=K, L=L,
-                             p_prime=spec.get("p_prime", 1), points=points)
+                             p_prime=spec.get("p_prime", 1),
+                             z_points=self.z_points)
             self._plans[name] = plan
             self._facades[name] = CodedMatmul(
                 plan, backend, dtype=dtype, mesh=mesh, cache_group=self.group)
@@ -139,6 +150,80 @@ class PlanLadder:
             self._active = rung
             self.switch_count += 1
         return self._facades[rung]
+
+    # -- elastic handoff ----------------------------------------------------
+    def respecialize(self, z_new, *, prewarm: bool = True) -> dict:
+        """Re-lower the rung family onto a resized worker pool.
+
+        ``z_new`` is the new pool's evaluation points: a survivor SUBSET
+        of the current points (shrink) or a Leja EXTENSION of them (grow,
+        ``core.points.extend_points``).  Rungs whose tau exceeds the new
+        K drop out; rungs that fit again rejoin.  Respecialisation
+        deliberately ignores the construction-time ``include`` filter —
+        the filter models the operator's preferred rungs, but a handoff's
+        job is to keep the job decodable on whatever pool remains, and
+        the paper's L <-> tau tradeoff is exactly what makes a
+        lower-threshold rung available when the preferred one no longer
+        fits.
+
+        The shared ``CacheGroup`` is REUSED: executable keys fold in the
+        plan token (worker count + points), so nothing built for the old
+        pool is evicted or aliased, and replaying an old-pool pattern
+        still hits its compiled executable.  On grow, plans extend
+        incrementally (``extend_plan`` — surviving workers' coefficient
+        rows are reused bit-exactly) and each surviving rung's decode
+        panels seed the grown plan's cache by zero-column padding
+        (``CacheGroup.seed_extended_panels``), so no old-pool pattern is
+        ever refactored.  When ``prewarm`` is True and the ladder was
+        prewarmed before, the same prewarm arguments re-run so the
+        post-handoff pool is warm before serving resumes.
+
+        Returns ``cache_info()`` for the post-handoff group.
+
+        Raises:
+            ValueError: on a non-1-D/empty ``z_new`` or a pool too small
+                for every rung in the family.
+        """
+        z = np.asarray(z_new)
+        if z.ndim != 1 or z.size < 1:
+            raise ValueError(f"need 1-D non-empty points, got shape {z.shape}")
+        K_new = int(z.size)
+        growing = K_new > self.K and np.array_equal(z[:self.K], self.z_points)
+        p, m, n = self.grid
+        plans: dict = {}
+        facades: dict = {}
+        for name, spec in self._specs:
+            if make_scheme(spec["kind"], p, m, n,
+                           p_prime=spec.get("p_prime", 1)).tau > K_new:
+                continue
+            old = self._plans.get(name)
+            if growing and old is not None:
+                plan = extend_plan(old, K_new - self.K, z_new=z)
+                self.group.seed_extended_panels(old, plan)
+            else:
+                plan = make_plan(spec["kind"], p, m, n, K=K_new, L=self.L,
+                                 p_prime=spec.get("p_prime", 1), z_points=z)
+            plans[name] = plan
+            facades[name] = CodedMatmul(
+                plan, self._backend, dtype=self.dtype, mesh=self._mesh,
+                cache_group=self.group)
+        if not plans:
+            raise ValueError(
+                f"no rung of grid (p={p}, m={m}, n={n}) fits K={K_new} "
+                "workers")
+        self._plans = plans
+        self._facades = facades
+        self.K = K_new
+        self.z_points = z
+        self._order = tuple(sorted(plans, key=lambda r: self.tau(r)))
+        if self._active not in plans or not self.feasible(self._active):
+            self._active = next((r for r in self._order if self.feasible(r)),
+                                self._order[0])
+        obs.count("ladder.respecialize",
+                  direction="grow" if growing else "shrink")
+        if prewarm and self._prewarm_args is not None:
+            self.prewarm(**self._prewarm_args)
+        return self.cache_info()
 
     def __call__(self, A, B, **erasure) -> jnp.ndarray:
         """Coded C = A^T B on the ACTIVE rung.
@@ -260,6 +345,12 @@ class PlanLadder:
         """
         if any(b < 1 for b in batch_sizes):
             raise ValueError(f"batch buckets must be >= 1, got {batch_sizes}")
+        # remembered so an elastic respecialize() can re-prewarm the
+        # post-handoff pool with the same shape family.
+        self._prewarm_args = dict(
+            a_shape=tuple(a_shape), b_shape=tuple(b_shape), reps=reps,
+            batch_sizes=tuple(batch_sizes), sub_tasks=sub_tasks,
+            stages=stages)
         self._buckets = tuple(sorted(set(int(b) for b in batch_sizes)))
         A = jnp.zeros(tuple(a_shape), self.dtype)
         B = jnp.zeros(tuple(b_shape), self.dtype)

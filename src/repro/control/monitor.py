@@ -77,6 +77,43 @@ class WorkerHealthMonitor:
                        + (1 - self.score_decay) * flagged)
         self.steps += 1
 
+    def resize(self, keep=None, grow: int = 0) -> None:
+        """Resize the tracked pool: keep survivors' state, cold-start joiners.
+
+        ``keep`` lists the pool-local indices that survive (in their new
+        order; default all), so an elastic shrink carries each survivor's
+        EWMA mean/variance and straggler score to its compacted index
+        instead of restarting the monitor.  ``grow`` appends that many new
+        workers with zero straggler score and the survivor-average mean as
+        their initial latency estimate (a joiner has no history; the pool
+        average is the least-surprising prior and keeps ``fitted_model``
+        well defined).  ``steps`` is NOT reset: the monitor stays past
+        ``min_history`` across a handoff, so erasure masks keep flowing.
+
+        Raises:
+            ValueError: on duplicate/out-of-range ``keep`` indices,
+                negative ``grow``, or an empty resulting pool.
+        """
+        idx = (np.arange(self.K, dtype=np.intp) if keep is None
+               else np.asarray(keep, dtype=np.intp))
+        if idx.ndim != 1 or len(set(idx.tolist())) != idx.size:
+            raise ValueError(f"keep must be 1-D and duplicate-free: {keep!r}")
+        if idx.size and (idx.min() < 0 or idx.max() >= self.K):
+            raise ValueError(f"keep indexes outside the pool of {self.K}")
+        if grow < 0:
+            raise ValueError(f"grow must be >= 0, got {grow}")
+        if idx.size + grow < 1:
+            raise ValueError("resize would leave an empty pool")
+        fill = (float(np.mean(self._mean[idx]))
+                if self.steps and idx.size else 0.0)
+        self._mean = np.concatenate(
+            [self._mean[idx], np.full(grow, fill, dtype=np.float64)])
+        self._var = np.concatenate(
+            [self._var[idx], np.zeros(grow, dtype=np.float64)])
+        self._score = np.concatenate(
+            [self._score[idx], np.zeros(grow, dtype=np.float64)])
+        self.K = int(idx.size + grow)
+
     # -- estimates ----------------------------------------------------------
     @property
     def mean(self) -> np.ndarray:

@@ -3,8 +3,10 @@ from repro.core.api import (
     CodedMatmulPlan,
     coded_matmul,
     encode_blocks,
+    extend_plan,
     fused_worker_products,
     make_plan,
+    shrink_plan,
     uncoded_matmul,
     worker_products,
 )
@@ -19,7 +21,7 @@ from repro.core.decoding import (
     make_decode_panel,
 )
 from repro.core.partition import GridSpec, block_decompose, block_recompose
-from repro.core.points import make_points
+from repro.core.points import extend_points, make_points
 from repro.core.schemes import (
     EntangledBoundedScheme,
     PolynomialCodeYu,
@@ -40,12 +42,13 @@ from repro.core.simulator import (
 __all__ = [
     "CodedMatmulPlan", "coded_matmul", "encode_blocks", "make_plan",
     "uncoded_matmul", "worker_products", "fused_worker_products",
+    "extend_plan", "shrink_plan",
     "BoundsReport", "choose_s", "conservative_L", "plan_p_prime",
     "decode", "decode_masked", "digit_extract",
     "DecodePanel", "DecodePanelCache", "decode_with_panel",
     "make_decode_panel",
     "GridSpec", "block_decompose", "block_recompose",
-    "make_points",
+    "extend_points", "make_points",
     "EntangledBoundedScheme", "PolynomialCodeYu", "Scheme", "TradeoffScheme",
     "make_scheme",
     "LatencyModel", "WorkerTimes", "simulate_completion",

@@ -22,8 +22,9 @@ from repro.core.decoding import DecodePanelCache
 from repro.core.points import make_points
 from repro.core.schemes import Scheme, make_scheme
 
-__all__ = ["CodedMatmulPlan", "make_plan", "coded_matmul", "encode_blocks",
-           "worker_products", "fused_worker_products", "runtime_facade"]
+__all__ = ["CodedMatmulPlan", "make_plan", "extend_plan", "shrink_plan",
+           "coded_matmul", "encode_blocks", "worker_products",
+           "fused_worker_products", "runtime_facade"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,7 @@ def make_plan(
     p_prime: int = 1,
     points: str = "equispaced",
     s: Optional[float] = None,
+    z_points: Optional[np.ndarray] = None,
 ) -> CodedMatmulPlan:
     """Freeze one coded-matmul configuration into a plan.
 
@@ -85,11 +87,20 @@ def make_plan(
              mod s) exact in binary floating point.  An explicit ``s`` must
              be >= 2 (bases below 2 cannot separate digits) and is only
              exact when s >= 2L; it is stored on the plan as ``float``.
+    z_points: explicit (K,) evaluation points, overriding ``points``.  The
+             elastic paths use this to build plans on a survivor subset or
+             a Leja-extended superset of a live pool's points
+             (``core.points.extend_points``).
     """
     scheme = make_scheme(kind, p, m, n, p_prime=p_prime)
     if K < scheme.tau:
         raise ValueError(f"K={K} below recovery threshold tau={scheme.tau}")
-    z = make_points(points, K)
+    if z_points is not None:
+        z = np.asarray(z_points)
+        if z.shape != (K,):
+            raise ValueError(f"z_points shape {z.shape} != ({K},)")
+    else:
+        z = make_points(points, K)
     s_val = float(s) if s is not None else float(bounds_mod.choose_s(L))
     if s_val < 2:
         raise ValueError(f"digit base s={s_val} must be >= 2 (and >= 2L={2 * L} "
@@ -97,6 +108,69 @@ def make_plan(
     ca, cb = scheme.encode_coeffs(z, s_val)
     return CodedMatmulPlan(scheme=scheme, K=K, s=s_val, z_points=z,
                            coeff_a=ca, coeff_b=cb)
+
+
+def extend_plan(plan: CodedMatmulPlan, g: int,
+                z_new: Optional[np.ndarray] = None) -> CodedMatmulPlan:
+    """Grow a plan by ``g`` workers via incremental point extension.
+
+    Evaluation points extend by greedy Leja selection
+    (``core.points.extend_points``) and ONLY the ``g`` new coefficient
+    rows are computed — the existing rows are reused by reference, so the
+    first K rows of the result are bit-identical to ``plan``'s.  Encoding
+    is per-point (every scheme's ``encode_coeffs`` evaluates row k from
+    ``z_k`` alone), so the same plan is produced by building fresh at
+    ``K + g`` with the same points; the incremental path just never
+    touches the surviving workers' tasks.
+
+    ``z_new`` optionally supplies the already-extended ``(K + g,)`` point
+    set (it must extend ``plan``'s points bit-exactly) so several plans
+    sharing one pool extend onto the SAME array.
+    """
+    if g < 0:
+        raise ValueError(f"g must be >= 0, got {g}")
+    if g == 0:
+        return plan
+    from repro.core.points import extend_points
+
+    if z_new is not None:
+        z = np.asarray(z_new)
+        if z.shape != (plan.K + g,) or not np.array_equal(
+                z[:plan.K], np.asarray(plan.z_points)):
+            raise ValueError(
+                f"z_new must extend the plan's {plan.K} points by {g}")
+    else:
+        z = extend_points(plan.z_points, g)
+    ca_new, cb_new = plan.scheme.encode_coeffs(z[plan.K:], plan.s)
+    return CodedMatmulPlan(
+        scheme=plan.scheme, K=plan.K + g, s=plan.s, z_points=z,
+        coeff_a=np.concatenate([plan.coeff_a, ca_new], axis=0),
+        coeff_b=np.concatenate([plan.coeff_b, cb_new], axis=0))
+
+
+def shrink_plan(plan: CodedMatmulPlan, keep: Sequence[int]) -> CodedMatmulPlan:
+    """Shrink a plan to the ``keep`` workers (pool-local indices, in order).
+
+    Survivors keep their evaluation points and coefficient rows (sliced,
+    not re-encoded — bit-identical), so their encoded tasks and any decode
+    panels for patterns inside the survivor set remain valid.
+
+    Raises:
+        ValueError: if ``keep`` has duplicates, indexes outside the pool,
+            or leaves fewer than ``tau`` workers (undecodable).
+    """
+    idx = np.asarray(keep, dtype=np.intp)
+    if idx.ndim != 1 or len(set(idx.tolist())) != idx.size:
+        raise ValueError(f"keep must be 1-D and duplicate-free, got {keep!r}")
+    if idx.size and (idx.min() < 0 or idx.max() >= plan.K):
+        raise ValueError(f"keep indexes outside the pool of {plan.K} workers")
+    if idx.size < plan.tau:
+        raise ValueError(
+            f"shrinking to {idx.size} workers breaks tau={plan.tau}")
+    return CodedMatmulPlan(
+        scheme=plan.scheme, K=int(idx.size), s=plan.s,
+        z_points=plan.z_points[idx],
+        coeff_a=plan.coeff_a[idx], coeff_b=plan.coeff_b[idx])
 
 
 def encode_blocks(plan: CodedMatmulPlan, a_blocks: jnp.ndarray, b_blocks: jnp.ndarray):

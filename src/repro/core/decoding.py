@@ -208,6 +208,49 @@ class DecodePanelCache:
             obs.count("decode.panel_cache.hit", cache="panel")
         return panel
 
+    def extended(self, z_new: np.ndarray) -> "DecodePanelCache":
+        """A cache over the Leja-extended point set, seeded from this one.
+
+        ``z_new`` must extend this cache's points (``z_new[:K] == z_all``
+        bit-exact).  Every cached panel transfers: a K-pool survivor
+        pattern is the (K+g)-pool pattern with all new workers erased,
+        and masking the new workers zeroes their Vandermonde rows, so the
+        normal-equations matrix G — hence the factored weights for the
+        old workers — is IDENTICAL, and the new workers contribute zero
+        columns.  Seeding therefore pads the cached ``W`` panels with
+        zero columns instead of refactoring: growing the pool costs no
+        host factorisations for any erasure pattern already seen
+        (``builds`` starts at 0; partial stacks transfer the same way).
+
+        Raises:
+            ValueError: if ``z_new`` does not extend this cache's points.
+        """
+        z = np.asarray(z_new)
+        K = self.z_all.shape[0]
+        if z.ndim != 1 or z.shape[0] < K or not np.array_equal(z[:K],
+                                                               self.z_all):
+            raise ValueError("z_new must extend this cache's point set "
+                             "(bit-exact prefix)")
+        g = z.shape[0] - K
+        cache = DecodePanelCache(self.scheme, z, self.ridge)
+        if g == 0:
+            cache._panels = dict(self._panels)
+            cache._partial_stacks = dict(self._partial_stacks)
+            return cache
+        pad_mask = np.zeros(g, dtype=np.float64)
+        for key, panel in self._panels.items():
+            W = np.concatenate(
+                [panel.W, np.zeros((panel.W.shape[0], g), panel.W.dtype)],
+                axis=1)
+            cache._panels[key + (0,) * g] = DecodePanel(
+                mask=np.concatenate([panel.mask, pad_mask]), W=W)
+        for key, stack in self._partial_stacks.items():
+            new_key = ("partial",) + tuple(row + (0,) * g for row in key[1:])
+            cache._partial_stacks[new_key] = np.concatenate(
+                [stack, np.zeros(stack.shape[:2] + (g,), stack.dtype)],
+                axis=2)
+        return cache
+
     def get_partial(self, chunk_masks: np.ndarray) -> np.ndarray:
         """Stacked (Q, mn, K) decode weights for per-chunk survivor masks.
 

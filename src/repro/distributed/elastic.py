@@ -59,6 +59,41 @@ class CodedElasticPolicy:
     def mask(self) -> np.ndarray:
         return self.healthy.astype(np.float64)
 
+    def shrink(self, keep) -> None:
+        """Drop every worker not in ``keep`` (pool-local indices, ordered).
+
+        The executed-respecialisation path: after the ladder re-lowers
+        onto the survivor pool, the policy's K and health state follow —
+        survivors keep their health bits at their new (compacted)
+        indices.
+
+        Raises:
+            ValueError: on duplicate/out-of-range indices or an empty
+                survivor set.
+        """
+        idx = np.asarray(keep, dtype=np.intp)
+        if idx.ndim != 1 or idx.size < 1:
+            raise ValueError(f"keep must be 1-D and non-empty, got {keep!r}")
+        if len(set(idx.tolist())) != idx.size:
+            raise ValueError(f"keep has duplicate indices: {keep!r}")
+        if idx.min() < 0 or idx.max() >= self.K:
+            raise ValueError(f"keep indexes outside the pool of {self.K}")
+        self.healthy = self.healthy[idx].copy()
+        self.K = int(idx.size)
+
+    def grow(self, g: int) -> None:
+        """Admit ``g`` new workers, healthy until observed otherwise.
+
+        New workers append at the end of the pool — matching the
+        point-extension contract, where joiners take the freshly
+        extended evaluation points and survivors keep theirs.
+        """
+        if g < 0:
+            raise ValueError(f"g must be >= 0, got {g}")
+        self.healthy = np.concatenate(
+            [self.healthy, np.ones(g, dtype=bool)])
+        self.K += g
+
     @property
     def must_respecialize(self) -> bool:
         """True when another failure would make steps undecodable."""

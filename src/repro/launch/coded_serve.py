@@ -33,6 +33,15 @@ config) as a JSONL trace; ``--replay PATH`` re-serves the recorded times
 verbatim — decisions reproduce bit-deterministically when the server
 flags match the recording, and a config drift prints a warning.
 
+``--elastic`` (with ``--adaptive``) serves on an ELASTIC pool: the feed
+emits times for a fixed worker universe, the server starts its pool
+without the ``pool_resize`` scenario's arriving set, the departures
+exhaust the polycode-only ladder's slack and trigger the EXECUTED shrink
+handoff (the ladder re-lowers its rungs onto the survivors, on the same
+executable cache), and at the scenario's join step the arrivals are
+admitted onto incrementally extended Vandermonde points — the surviving
+pool's executables and decode panels are reused, not recompiled.
+
 ``--serve-tier`` lifts the loop into the async multi-tenant tier
 (``repro.serve``): per-tenant token-bucket admission and bounded queues,
 continuous batching into the prewarmed buckets, per-SLO-class adaptive
@@ -123,6 +132,11 @@ def main(argv=None):
                     help="straggler-score threshold the monitor flags at; "
                          "with --feedback it becomes the BASE of the "
                          "adaptive threshold law")
+    ap.add_argument("--elastic", action="store_true",
+                    help="adaptive only: serve on an elastic pool driven "
+                         "by the pool_resize scenario — departures trigger "
+                         "the executed shrink handoff, arrivals join on "
+                         "extended evaluation points")
     ap.add_argument("--serve-tier", action="store_true",
                     help="serve through the async multi-tenant tier "
                          "(admission control + continuous batching + "
@@ -173,6 +187,18 @@ def main(argv=None):
         return _with_obs(run_serve_tier, args)
     if args.tenant_spec or args.no_pipeline or args.max_batch:
         ap.error("--tenant-spec/--no-pipeline/--max-batch need --serve-tier")
+    if args.elastic:
+        if not args.adaptive:
+            ap.error("--elastic needs --adaptive (the handoff is driven by "
+                     "the control plane)")
+        if args.replay or args.feedback or args.slo_ms is not None \
+                or args.sub_tasks != 1:
+            ap.error("--elastic does not combine with --replay/--feedback/"
+                     "--slo-ms/--sub-tasks")
+        if args.scenario not in (None, "pool_resize"):
+            ap.error("--elastic is driven by the pool_resize scenario; drop "
+                     f"--scenario {args.scenario}")
+        return _with_obs(run_elastic, args)
     if args.adaptive:
         return _with_obs(run_adaptive, args)
     if args.scenario or args.feedback or args.record or args.replay:
@@ -436,6 +462,116 @@ def run_adaptive(args):
             print(f"feedback: {fb.violations}/{fb.observations} realized "
                   f"violations, window rate {fb.realized_rate:.3f}, "
                   f"q_eff {fb.effective_q():.3f}")
+        if recorder is not None:
+            out = recorder.finish(server.reports).save(args.record)
+            print(f"recorded trace -> {out}")
+        return server.reports
+
+
+def run_elastic(args):
+    """Adaptive serving on an elastic pool: executed shrink, then grow.
+
+    Mirrors the golden ``pool_resize_shrink``/``pool_resize_grow`` recipe:
+    a polycode-only ladder (narrow erasure budget, so the departures
+    exceed slack and force the handoff) on the (3, 2, 1) grid, a worker
+    universe of 12 with the scenario's arriving set initially absent, and
+    a grow at 3/4 of the run readmitting them on extended points.
+    """
+    from repro.chaos import make_scenario
+    from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
+    from repro.core import conservative_L
+    from repro.core.numerics import enable_x64
+
+    with enable_x64():
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(args.seed)
+        universe = 12
+        join_step = (3 * args.requests) // 4 if args.requests >= 8 else None
+        scenario = make_scenario("pool_resize", num_departing=3,
+                                 depart_step=4, num_arriving=2,
+                                 join_step=join_step)
+        arriving = scenario.arriving_ids(universe, args.seed)
+        absent = {int(i) for i in arriving}
+        pool = [i for i in range(universe) if i not in absent]
+        feed = scenario.compile(universe, seed=args.seed)
+
+        p, m, n = 3, 2, 1
+        v = max(args.size - args.size % p, p)
+        r, t = (v // 2) - (v // 2) % m, v // 2
+        backend = args.backend
+        if backend == "mesh":
+            print("--elastic does not drive the mesh backend yet; "
+                  "falling back to the reference executor")
+            backend = "reference"
+        ladder = PlanLadder(p, m, n, K=len(pool), L=conservative_L(v, 4, 4),
+                            backend=backend, include=["polycode"])
+        info = ladder.prewarm((v, r), (v, t))
+        builds_marker = info["builds"]
+        print(f"elastic universe={universe} pool={pool} "
+              f"(arriving {sorted(absent)} absent) rungs={ladder.rungs} "
+              f"grid=({p},{m},{n}) v={v} r={r} t={t}; "
+              f"prewarm: {builds_marker} executables")
+
+        recorder = None
+        if args.record:
+            from repro.chaos import TraceRecorder
+
+            recorder = TraceRecorder(
+                feed, universe,
+                meta={"scenario": "pool_resize", "seed": args.seed,
+                      "source": "coded_serve", "elastic": True,
+                      "universe": universe, "join_step": join_step})
+            feed = recorder
+
+        policy = ExpectedLatencyPolicy(
+            ladder, score_threshold=args.monitor_threshold)
+        server = AdaptiveServer(ladder, policy=policy, feed=feed,
+                                seed=args.seed, check_exact=True,
+                                score_threshold=args.monitor_threshold,
+                                universe=universe, pool=pool)
+
+        def make_request():
+            A = jnp.asarray(rng.integers(-4, 5, size=(v, r)), jnp.float64)
+            B = jnp.asarray(rng.integers(-4, 5, size=(v, t)), jnp.float64)
+            return A, B
+
+        pool_before = tuple(int(x) for x in server.pool)
+        for i in range(args.requests):
+            if join_step is not None and i == join_step:
+                server.grow(arriving)
+                builds = ladder.cache_info()["builds"]
+                print(f"-- grow at step {i}: admitted {sorted(absent)} on "
+                      f"extended points; pool -> "
+                      f"{[int(x) for x in server.pool]} "
+                      f"({builds - builds_marker} new executables, old pool's"
+                      f" reused)")
+                builds_marker = builds
+                pool_before = tuple(int(x) for x in server.pool)
+            A, B = make_request()
+            _, rep = server.step(A, B)
+            now = tuple(int(x) for x in server.pool)
+            if now != pool_before:
+                builds = ladder.cache_info()["builds"]
+                print(f"-- shrink handoff at step {i}: pool "
+                      f"{list(pool_before)} -> {list(now)}; re-lowered onto "
+                      f"{rep.rung} ({builds - builds_marker} new "
+                      f"executables, survivors' reused)")
+                builds_marker = builds
+                pool_before = now
+            print(f"req {rep.step:02d}: pool={len(now):2d} "
+                  f"rung={rep.rung:<10} erased={str(list(rep.erased)):<10} "
+                  f"sim {rep.sim_latency_s:6.3f} s  "
+                  f"wall {rep.wall_ms:7.1f} ms  slack={rep.slack}  "
+                  f"{'exact' if rep.exact else 'CHECK FAILED'}"
+                  f"{' RESPECIALIZED' if rep.respecialize else ''}")
+        info = ladder.cache_info()
+        assert info["builds"] == builds_marker, (
+            f"recompile outside a pool transition: {info}")
+        print(f"{info['builds']} executables ({builds_marker} after the "
+              f"last transition — zero steady-state recompiles), "
+              f"{info['hits']} cache hits, {info['panel_builds']} decode "
+              f"panels, {info['switches']} rung switches")
         if recorder is not None:
             out = recorder.finish(server.reports).save(args.record)
             print(f"recorded trace -> {out}")

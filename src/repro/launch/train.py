@@ -6,6 +6,14 @@ mesh on real hardware.  Fault tolerance: periodic atomic checkpoints
 (params + optimizer + data-stream step); --resume restarts from the newest
 committed step and replays the exact data stream.
 
+Elastic shrink (--elastic-shrink-at N --elastic-devices D): simulate a
+mid-run device loss — checkpoint at step N, ``plan_shrink(D)`` picks the
+largest supported mesh that still fits, the step function re-lowers onto
+it, state restores from the checkpoint just written, and the run
+continues; because the data stream is a pure function of the step index,
+the handoff run is bit-exact with an uninterrupted one
+(tests/test_substrate.py::TestTrainResume).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --smoke \
       --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
@@ -22,6 +30,7 @@ import numpy as np
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.data import make_pipeline
+from repro.distributed.elastic import plan_shrink
 from repro.distributed.sharding import default_rules
 from repro.launch.steps import make_train_step
 from repro.models import init_params
@@ -54,7 +63,21 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--elastic-shrink-at", type=int, default=None,
+                    help="simulate losing devices BEFORE this step: "
+                         "checkpoint, plan_shrink the mesh, re-lower, "
+                         "restore, continue")
+    ap.add_argument("--elastic-devices", type=int, default=None,
+                    help="healthy device count after the simulated loss "
+                         "(required with --elastic-shrink-at)")
     args = ap.parse_args(argv)
+    if args.elastic_shrink_at is not None:
+        if args.elastic_devices is None or args.ckpt_dir is None:
+            ap.error("--elastic-shrink-at requires --elastic-devices and "
+                     "--ckpt-dir (the handoff restores from checkpoint)")
+        if not 0 < args.elastic_shrink_at < args.steps:
+            ap.error(f"--elastic-shrink-at {args.elastic_shrink_at} outside "
+                     f"(0, {args.steps})")
 
     cfg, step_fn, pipe = build(args.arch, args.smoke, args.seq, args.batch,
                                args.lr, args.steps)
@@ -74,6 +97,9 @@ def main(argv=None):
     losses = []
     t0 = time.time()
     for t in range(start, args.steps):
+        if args.elastic_shrink_at is not None and t == args.elastic_shrink_at:
+            step_fn, params, opt_state = _elastic_handoff(
+                args, params, opt_state, t)
         batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
         if cfg.input_mode == "embeds":
             # frontend stub: deterministic pseudo-embeddings from token ids
@@ -100,6 +126,34 @@ def main(argv=None):
                         extra={"data_step": args.steps})
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     return losses
+
+
+def _elastic_handoff(args, params, opt_state, t):
+    """Execute the shrink: checkpoint, re-lower, restore, continue.
+
+    The live state is checkpointed at step ``t`` (no progress lost),
+    ``plan_shrink`` picks the largest supported mesh that fits the
+    surviving devices, the train step re-lowers onto it (a debug mesh
+    when the host exposes enough devices, the single-device path
+    otherwise), and state restores from the checkpoint just written —
+    exactly the restart a real device loss would take.
+    """
+    save_checkpoint(args.ckpt_dir, t, (params, opt_state),
+                    extra={"data_step": t})
+    d, m = plan_shrink(args.elastic_devices)
+    mesh = None
+    if d * m > 1 and jax.device_count() >= d * m:
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(d, m)
+    _, step_fn, _ = build(args.arch, args.smoke, args.seq, args.batch,
+                          args.lr, args.steps, mesh=mesh)
+    (params, opt_state), _, _ = restore_checkpoint(
+        args.ckpt_dir, (params, opt_state))
+    print(f"elastic shrink at step {t}: {args.elastic_devices} healthy "
+          f"devices -> mesh ({d}, {m})"
+          f"{' (single-device lowering)' if mesh is None else ''}; "
+          f"re-lowered and restored", flush=True)
+    return step_fn, params, opt_state
 
 
 def _stub_embeds(tokens: jnp.ndarray, d: int) -> jnp.ndarray:

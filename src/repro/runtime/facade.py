@@ -81,6 +81,31 @@ class CacheGroup:
             self._panel_caches[key] = pc
         return pc
 
+    def seed_extended_panels(self, old_plan: CodedMatmulPlan,
+                             new_plan: CodedMatmulPlan,
+                             ridge: float = 0.0) -> bool:
+        """Seed ``new_plan``'s panel cache from ``old_plan``'s by extension.
+
+        The elastic grow path: when ``new_plan``'s evaluation points
+        extend ``old_plan``'s (bit-exact prefix), every decode panel
+        cached for the old pool transfers to the grown pool with zero
+        columns appended for the new workers
+        (``DecodePanelCache.extended``) — no refactorisation, and the old
+        plan's cache is untouched.  Returns True when seeding happened;
+        False when there was nothing to seed from, the new cache already
+        exists, or the points do not extend.
+        """
+        old = self._panel_caches.get((plan_token(old_plan), ridge))
+        new_key = (plan_token(new_plan), ridge)
+        if old is None or new_key in self._panel_caches:
+            return False
+        try:
+            self._panel_caches[new_key] = old.extended(
+                np.asarray(new_plan.z_points))
+        except ValueError:
+            return False
+        return True
+
     @property
     def panel_builds(self) -> int:
         """Total decode panels built across every member plan."""

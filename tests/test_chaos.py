@@ -199,6 +199,20 @@ class TestReplayDeterminism:
         assert any(s.switched for s in trace.steps)
         assert any(s.erased for s in trace.steps)
 
+    @pytest.mark.parametrize("key", ["pool_resize_shrink",
+                                     "pool_resize_grow"])
+    def test_elastic_replay_reproduces_handoff(self, key):
+        """Elastic record/replay: the executed shrink (and grow) handoff —
+        pool membership, rung re-lowering, exactness — replays bit-exactly
+        through a freshly built elastic server."""
+        trace = golden_trace(key)  # default steps cover shrink AND grow
+        pools = {s.pool for s in trace.steps}
+        assert len(pools) >= (3 if key == "pool_resize_grow" else 2)
+        assert any(s.respecialize for s in trace.steps)
+        assert all(s.exact for s in trace.steps)
+        reports = replay_golden(key, trace)
+        verify_replay(trace, reports)
+
 
 class TestGoldenTraces:
     """Drift check: today's control plane vs. the checked-in recordings.
@@ -227,6 +241,27 @@ class TestGoldenTraces:
         assert set(golden_names()) >= {"iid", "heavy_tail", "bursty", "rack",
                                        "crawler", "degrading",
                                        "crawler_partial"}
+
+    def test_elastic_goldens_pin_the_handoff(self):
+        """The checked-in elastic pair must contain the REAL transitions:
+        shrink drops members and re-lowers the rung; the grow variant then
+        readmits the joiners (appended at the tail, on extended points)
+        and returns to the low-overhead rung — every step exact."""
+        shrink = Trace.load(GOLDEN_DIR / "pool_resize_shrink.jsonl")
+        grow = Trace.load(GOLDEN_DIR / "pool_resize_grow.jsonl")
+        for golden in (shrink, grow):
+            assert all(s.pool is not None for s in golden.steps)
+            assert all(s.exact for s in golden.steps)
+        first, last = shrink.steps[0].pool, shrink.steps[-1].pool
+        assert len(last) < len(first)
+        assert set(last) < set(first)  # survivors only, order preserved
+        assert shrink.steps[0].rung != shrink.steps[-1].rung  # re-lowered
+        mid = next(s for s in grow.steps if len(s.pool) <
+                   len(grow.steps[0].pool))
+        final = grow.steps[-1].pool
+        assert len(final) > len(mid.pool)  # grew back
+        assert final[:len(mid.pool)] == mid.pool  # joiners appended at end
+        assert grow.steps[-1].rung == grow.steps[0].rung  # rung recovered
 
     def test_crawler_partial_golden_consumes_fractions(self):
         """The partial variant must actually emit FRACTIONAL progress —
@@ -326,4 +361,4 @@ def _report_like(step):
         realized_violation=step.realized_violation,
         q_effective=step.q_effective, progress=step.progress,
         threshold_effective=step.threshold_effective,
-        span_id=step.span_id)
+        span_id=step.span_id, pool=step.pool)

@@ -118,3 +118,22 @@ class TestTrainResume:
         # restored state is bit-exact; residual diff is CPU matmul
         # reduction-order noise across executions (~1e-5 rel)
         assert l_resumed[-1] == pytest.approx(l_full[-1], rel=1e-3)
+
+    def test_elastic_shrink_handoff_bitexact(self, tmp_path):
+        """The elastic path — checkpoint at the shrink step, plan_shrink
+        the mesh, re-lower, restore — matches the uninterrupted run."""
+        from repro.launch.train import main as train_main
+        base = ["--arch", "qwen3_0_6b", "--smoke", "--steps", "6",
+                "--batch", "2", "--seq", "32", "--log-every", "100"]
+        l_full = train_main(list(base))
+        l_elastic = train_main(base + [
+            "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "100",
+            "--elastic-shrink-at", "3", "--elastic-devices", "3"])
+        assert len(l_elastic) == len(l_full)
+        assert l_elastic[-1] == pytest.approx(l_full[-1], rel=1e-3)
+
+    def test_elastic_shrink_requires_checkpoint_dir(self):
+        from repro.launch.train import main as train_main
+        with pytest.raises(SystemExit):
+            train_main(["--arch", "qwen3_0_6b", "--smoke", "--steps", "4",
+                        "--elastic-shrink-at", "2"])
