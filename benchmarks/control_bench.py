@@ -50,6 +50,11 @@ narrow-budget polycode rung (budget 1), so with more flagged stragglers
 than the budget the binary server must WAIT IN FULL on the uncovered
 slow machines while the partial server consumes their completed chunk
 prefixes — fractional waits ``w * finish`` instead of ``finish``.
+``partial_sweep --backend mesh`` replays the strict-win regimes through
+``MeshExecutor`` facades (one worker per forced host device): the same
+gates — partial beats binary, zero recompiles across progress changes,
+Q=1 bit-parity — proven on the shard_map pipeline, landing under the
+``partial_sweep_mesh`` key next to the reference rows.
 
 The ELASTIC sweep (``elastic_sweep``) drives the executed pool handoff:
 a polycode-only ladder on a 12-worker universe loses 3 workers (past its
@@ -260,6 +265,11 @@ PARTIAL_SUB_TASKS = 4
 PARTIAL_STEPS = 48
 PARTIAL_WARMUP = 6
 PARTIAL_SEED = 11
+# the mesh gate replays only the strict-win regimes (a shard_map program
+# per step over K forced host devices is CI-expensive; the gates it proves
+# — partial beats binary ON MESH, zero recompiles across progress changes
+# — need exactly these rows)
+PARTIAL_MESH_SCENARIOS = ("heavy_tail", "pareto")
 
 # -- elastic shrink/grow sweep ------------------------------------------------
 EL_GRID = (3, 2, 1)         # bec(tau=2) + polycode(tau=8); 3 prime, no tradeoff
@@ -330,7 +340,33 @@ def _run_scenario_sweep() -> list:
     return [_run_scenario(name, seed=SC_SEED) for name in scenario_names()]
 
 
-def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int):
+def _partial_backend(backend: str):
+    """Ladder ``backend=`` argument for a partial-sweep server.
+
+    ``"mesh"`` builds a K-device mesh executor (pure-jnp worker products:
+    Pallas kernels run interpret-mode off-TPU, far too slow for a CI
+    sweep) — spawn with ``XLA_FLAGS=--xla_force_host_platform_device_count
+    =<K>`` so the devices exist.
+    """
+    if backend == "reference":
+        return "reference"
+    if backend != "mesh":
+        raise ValueError(f"unknown partial-sweep backend {backend!r}")
+    import jax
+
+    from repro.runtime import MeshExecutor
+
+    if len(jax.devices()) < K:
+        raise RuntimeError(
+            f"--backend mesh needs >= K={K} devices, have "
+            f"{len(jax.devices())}; spawn with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={K}")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:K]), ("model",))
+    return MeshExecutor(mesh, use_kernels=False)
+
+
+def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int,
+                   backend: str = "reference"):
     """One server (binary when ``sub_tasks=1``) over a fixed trace matrix.
 
     Returns ``(row, reports, ladder, (A, B))`` so the caller can run the
@@ -341,7 +377,8 @@ def _serve_partial(traces: np.ndarray, sub_tasks: int, seed: int):
     from repro.control import AdaptiveServer, ExpectedLatencyPolicy, PlanLadder
 
     watch = CompileWatch()
-    ladder = PlanLadder(P, M, N, K=K, L=L_SMALL, backend="reference")
+    ladder = PlanLadder(P, M, N, K=K, L=L_SMALL,
+                        backend=_partial_backend(backend))
     ladder.prewarm((V, R), (V, T), sub_tasks=sub_tasks)
     watch.mark()
     policy = ExpectedLatencyPolicy(ladder, overhead_s=Q_OVERHEAD,
@@ -391,7 +428,7 @@ def _q1_parity(ladder, A, B, binary_reports) -> bool:
     return True
 
 
-def _run_partial(name: str, seed: int) -> dict:
+def _run_partial(name: str, seed: int, backend: str = "reference") -> dict:
     """Binary erasure vs partial consumption under one chaos scenario.
 
     Both servers replay the SAME deterministic trace matrix; the binary
@@ -401,17 +438,21 @@ def _run_partial(name: str, seed: int) -> dict:
     from repro.chaos import make_scenario, trace_matrix
 
     traces = trace_matrix(make_scenario(name), K, PARTIAL_STEPS, seed=seed)
-    binary, binary_reports, ladder, (A, B) = _serve_partial(traces, 1, seed)
-    partial, _, _, _ = _serve_partial(traces, PARTIAL_SUB_TASKS, seed)
-    return {"scenario": name, "seed": seed, "binary": binary,
-            "partial": partial,
+    binary, binary_reports, ladder, (A, B) = _serve_partial(
+        traces, 1, seed, backend)
+    partial, _, _, _ = _serve_partial(traces, PARTIAL_SUB_TASKS, seed,
+                                      backend)
+    return {"scenario": name, "seed": seed, "backend": backend,
+            "binary": binary, "partial": partial,
             "q1_bit_identical": _q1_parity(ladder, A, B, binary_reports)}
 
 
-def _run_partial_sweep() -> list:
-    """Binary vs partial over every partial-regime scenario."""
-    return [_run_partial(name, seed=PARTIAL_SEED)
-            for name in PARTIAL_SCENARIOS]
+def _run_partial_sweep(backend: str = "reference") -> list:
+    """Binary vs partial over the backend's partial-regime scenarios."""
+    names = (PARTIAL_MESH_SCENARIOS if backend == "mesh"
+             else PARTIAL_SCENARIOS)
+    return [_run_partial(name, seed=PARTIAL_SEED, backend=backend)
+            for name in names]
 
 
 def _run_feedback(enabled: bool, seed: int) -> dict:
@@ -604,7 +645,7 @@ def _run_exhausted(seed: int) -> dict:
     }
 
 
-def run(sweep: str = "all") -> dict:
+def run(sweep: str = "all", backend: str = "reference") -> dict:
     from repro.core.numerics import enable_x64
 
     partial_config = {
@@ -618,10 +659,17 @@ def run(sweep: str = "all") -> dict:
         "overhead_s": EL_OVERHEAD, "include": ["polycode"],
     }
     if sweep == "partial_sweep":
+        # the mesh gate lands under its OWN key, so a mesh run appends to
+        # BENCH_control.json next to the reference rows instead of
+        # replacing them.
+        key = "partial_sweep" if backend == "reference" else (
+            f"partial_sweep_{backend}")
+        cfg = dict(partial_config, backend=backend)
+        if backend == "mesh":
+            cfg["scenarios"] = list(PARTIAL_MESH_SCENARIOS)
         with enable_x64():
-            partial_sweep = _run_partial_sweep()
-        return {"config": {"partial_sweep": partial_config},
-                "partial_sweep": partial_sweep}
+            partial_sweep = _run_partial_sweep(backend)
+        return {"config": {key: cfg}, key: partial_sweep}
     if sweep == "elastic_sweep":
         with enable_x64():
             elastic_sweep = _run_elastic(EL_SEED)
@@ -803,7 +851,9 @@ def _print_elastic(row: dict) -> None:
 def _print_partial(rows: list) -> None:
     for row in rows:
         b, p = row["binary"], row["partial"]
-        print(f"partial {row['scenario']:<12} binary p99 {b['p99_s']:6.2f} s "
+        backend = row.get("backend", "reference")
+        print(f"partial [{backend}] {row['scenario']:<12} "
+              f"binary p99 {b['p99_s']:6.2f} s "
               f"vs Q={p['sub_tasks']} p99 {p['p99_s']:6.2f} s "
               f"(p50 {b['p50_s']:5.2f} -> {p['p50_s']:5.2f} s, "
               f"{p['fractional_consumptions']} fractional consumptions, "
@@ -819,11 +869,19 @@ def main(argv=None, save: str = "BENCH_control.json"):
                     help="which sweep to run: the full bench (default), "
                          "only the binary-vs-partial comparison, or only "
                          "the elastic shrink/grow handoff")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "mesh"],
+                    help="executor the partial sweep serves through: "
+                         "reference (default) or mesh (one worker per "
+                         "device; needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=12)")
     ap.add_argument("--check", action="store_true",
                     help="assert the acceptance criteria (CI smoke)")
     args = ap.parse_args(argv)
+    if args.backend != "reference" and args.sweep != "partial_sweep":
+        ap.error("--backend mesh only applies to the partial_sweep sweep")
 
-    result = run(args.sweep)
+    result = run(args.sweep, args.backend)
     out = Path(__file__).resolve().parents[1] / save
     # merge-append: a single-sweep run updates its keys in the existing
     # file instead of discarding the other sweeps' rows.
@@ -838,10 +896,12 @@ def main(argv=None, save: str = "BENCH_control.json"):
     out.write_text(json.dumps(merged, indent=2) + "\n")
     print(f"wrote {out}")
     if args.sweep == "partial_sweep":
-        _print_partial(result["partial_sweep"])
+        key = ("partial_sweep" if args.backend == "reference"
+               else f"partial_sweep_{args.backend}")
+        _print_partial(result[key])
         if args.check:
-            check_partial(result["partial_sweep"])
-            print("control bench partial check: OK")
+            check_partial(result[key])
+            print(f"control bench partial check ({args.backend}): OK")
         return result
     if args.sweep == "elastic_sweep":
         _print_elastic(result["elastic_sweep"])

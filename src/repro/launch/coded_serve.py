@@ -21,7 +21,10 @@ prewarmed leading-dim buckets (round-up padding, zero recompiles).
 splits into Q ordered sub-tasks and the monitor's progress plan consumes
 completed chunk prefixes from flagged stragglers instead of erasing them;
 ``--monitor-threshold`` sets the flagging score (the base of the adaptive
-threshold law when ``--feedback`` is on).
+threshold law when ``--feedback`` is on).  ``--adaptive`` composes with
+``--backend mesh`` (including ``--sub-tasks``): the ladder's facades run
+the shard_map pipeline with progress strictly as data, so rung switches
+and progress changes stay recompile-free on the mesh too.
 
 Fault injection rides on ``repro.chaos``: ``--scenario NAME`` feeds the
 loop from any registered straggler regime (deterministic under ``--seed``)
@@ -302,14 +305,18 @@ def run_adaptive(args):
         v = max(args.size - args.size % p, p)
         r, t = (v // 2) - (v // 2) % m, (v // 2) - (v // 2) % n
         backend = args.backend
+        mesh = None
         if backend == "mesh":
-            # ladder facades are single-host for now (ROADMAP: real-mesh
-            # telemetry); say so instead of silently reporting host numbers
-            print("--adaptive does not drive the mesh backend yet; "
-                  "falling back to the reference executor")
-            backend = "reference"
+            import jax
+
+            n_dev = len(jax.devices())
+            if n_dev % K:
+                raise SystemExit(
+                    f"--backend mesh needs a multiple of K={K} devices, "
+                    f"have {n_dev}")
+            mesh = jax.make_mesh((n_dev // K, K), ("data", "model"))
         ladder = PlanLadder(p, m, n, K=K, L=conservative_L(v, 4, 4),
-                            backend=backend)
+                            backend=backend, mesh=mesh)
         # batched requests vary in size: prewarm power-of-two buckets so
         # round-up padding keeps every size recompile-free.
         buckets = ()

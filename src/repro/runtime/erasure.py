@@ -80,7 +80,10 @@ class ErasurePattern:
         """Pattern from a (K,) 0/1 mask — concrete array or jax tracer.
 
         Raises:
-            ValueError: if the mask's shape is not (K,).
+            ValueError: if the mask's shape is not (K,), or a concrete mask
+                holds values outside {0, 1} (a fractional progress vector
+                passed as a binary mask would otherwise silently decode as
+                if every straggler were fully alive).
         """
         if _is_traced(mask):
             if getattr(mask, "shape", None) != (K,):
@@ -90,6 +93,13 @@ class ErasurePattern:
         m = np.asarray(mask)
         if m.shape != (K,):
             raise ValueError(f"mask shape {m.shape} != ({K},)")
+        if not bool(np.all((m == 0) | (m == 1))):
+            raise ValueError(
+                f"binary erasure mask entries must be 0 or 1, got "
+                f"{m.tolist()}: a fractional per-worker completion vector "
+                f"is NOT an erasure mask — pass it as progress= with "
+                f"sub_tasks=Q (or a PartialPattern) so the finished prefix "
+                f"of each straggler is decoded instead of discarded")
         return cls(K=K, kind="concrete", mask=(m != 0).astype(np.float64))
 
     @classmethod

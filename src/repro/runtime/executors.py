@@ -8,7 +8,8 @@ is WHERE and HOW the worker products are computed:
   staged     Pallas encode kernel -> HBM -> Pallas block matmul per worker
   fused      one Pallas megakernel per call; coded tiles live only in VMEM
   mesh       shard_map over a worker axis: one device per worker, erasure
-             as a runtime mask, all-gather + replicated decode
+             (binary or per-chunk partial) as a runtime mask, all-gather +
+             replicated decode
 
 Executors expose ``make_pipeline(plan, kind, dtype)`` returning a pure
 function the ``CodedMatmul`` facade jit-compiles and memoises:
@@ -59,6 +60,7 @@ __all__ = [
     "MeshExecutor",
     "resolve_executor",
     "BACKENDS",
+    "local_backend_names",
 ]
 
 
@@ -296,6 +298,34 @@ def _decode_weights_masked(z_all: jnp.ndarray, mask: jnp.ndarray, tau: int,
     return W_full[useful]                                    # (mn, K)
 
 
+def _mesh_local_product(a_blocks, b_blocks, coeff_a, coeff_b, k,
+                        *, use_kernels, fused):
+    """Stages 1+2 on ONE device: encode worker ``k``'s share, multiply.
+
+    a_blocks (p, m, bv, br) / b_blocks (p, n, bv, bt) replicated; returns
+    the (br, bt) block product this device contributes to the all-gather.
+    """
+    p, m, bv, br = a_blocks.shape
+    _, n, _, bt = b_blocks.shape
+    ca = jax.lax.dynamic_index_in_dim(coeff_a, k, axis=0)     # (1, p, m)
+    cb = jax.lax.dynamic_index_in_dim(coeff_b, k, axis=0)
+    if use_kernels and fused:
+        # stages 1+2 fused: coded tiles exist only in VMEM.
+        return kops.fused_worker(
+            ca.reshape(1, p * m), cb.reshape(1, p * n),
+            a_blocks.reshape(p * m, bv, br),
+            b_blocks.reshape(p * n, bv, bt))[0]               # (br, bt)
+    if use_kernels:
+        a_tilde = kops.encode(ca.reshape(1, p * m),
+                              a_blocks.reshape(p * m, bv * br)).reshape(bv, br)
+        b_tilde = kops.encode(cb.reshape(1, p * n),
+                              b_blocks.reshape(p * n, bv * bt)).reshape(bv, bt)
+        return kops.matmul_t(a_tilde, b_tilde)                # (br, bt)
+    a_tilde = jnp.einsum("pm,pmvr->vr", ca[0], a_blocks)
+    b_tilde = jnp.einsum("pn,pnvt->vt", cb[0], b_blocks)
+    return a_tilde.T @ b_tilde
+
+
 def _mesh_worker_body(a_blocks, b_blocks, mask, coeff_a, coeff_b, zW,
                       *, tau, s, useful, axis, use_kernels, fused, have_panel):
     """Per-device body.  a_blocks (p, m, bv, br) replicated; mask (K,).
@@ -307,25 +337,8 @@ def _mesh_worker_body(a_blocks, b_blocks, mask, coeff_a, coeff_b, zW,
     k = jax.lax.axis_index(axis)
     p, m, bv, br = a_blocks.shape
     _, n, _, bt = b_blocks.shape
-
-    ca = jax.lax.dynamic_index_in_dim(coeff_a, k, axis=0)     # (1, p, m)
-    cb = jax.lax.dynamic_index_in_dim(coeff_b, k, axis=0)
-    if use_kernels and fused:
-        # stages 1+2 fused: coded tiles exist only in VMEM.
-        y_local = kops.fused_worker(
-            ca.reshape(1, p * m), cb.reshape(1, p * n),
-            a_blocks.reshape(p * m, bv, br),
-            b_blocks.reshape(p * n, bv, bt))[0]               # (br, bt)
-    elif use_kernels:
-        a_tilde = kops.encode(ca.reshape(1, p * m),
-                              a_blocks.reshape(p * m, bv * br)).reshape(bv, br)
-        b_tilde = kops.encode(cb.reshape(1, p * n),
-                              b_blocks.reshape(p * n, bv * bt)).reshape(bv, bt)
-        y_local = kops.matmul_t(a_tilde, b_tilde)             # (br, bt)
-    else:
-        a_tilde = jnp.einsum("pm,pmvr->vr", ca[0], a_blocks)
-        b_tilde = jnp.einsum("pn,pnvt->vt", cb[0], b_blocks)
-        y_local = a_tilde.T @ b_tilde
+    y_local = _mesh_local_product(a_blocks, b_blocks, coeff_a, coeff_b, k,
+                                  use_kernels=use_kernels, fused=fused)
 
     # stage 3: erasure - zero out "failed" workers' outputs.
     y_local = y_local * jax.lax.dynamic_index_in_dim(mask, k, 0, keepdims=False)
@@ -336,6 +349,52 @@ def _mesh_worker_body(a_blocks, b_blocks, mask, coeff_a, coeff_b, zW,
     else:
         W = _decode_weights_masked(zW, mask, tau, useful)    # (mn, K)
     X = jnp.einsum("uk,krt->urt", W, Y)
+    C = digit_extract(X, s) if s is not None else jnp.round(X)
+    return C.reshape(m, n, br, bt)
+
+
+def _mesh_partial_body(a_blocks, b_blocks, cm, coeff_a, coeff_b, zW,
+                       *, Q, tau, s, useful, axis, use_kernels, fused,
+                       have_panel):
+    """Per-device partial-straggler body: ONE block product, Q chunk decodes.
+
+    Each device emits its block product once; after the all-gather every
+    device decodes chunk-by-chunk.  ``cm`` is the (Q, K) chunk-availability
+    matrix and ``zW`` the stacked (Q, mn, K) decode panels when
+    ``have_panel`` (concrete progress); for traced progress ``cm`` is the
+    (K,) progress vector, ``zW`` the (K,) evaluation points, and chunk c's
+    mask + masked normal equations are derived in-body.  The chunk bounds
+    are static (from the padded block row count), so the per-chunk loop is
+    a plain Python loop inside the one shard_map program — progress stays
+    strictly DATA and one executable serves every progress vector.
+    """
+    k = jax.lax.axis_index(axis)
+    p, m, bv, br = a_blocks.shape
+    _, n, _, bt = b_blocks.shape
+    y_local = _mesh_local_product(a_blocks, b_blocks, coeff_a, coeff_b, k,
+                                  use_kernels=use_kernels, fused=fused)
+
+    # stage 4: all-gather the UNMASKED products; stage 3 erasure happens
+    # per chunk below (a slow worker's finished prefix still contributes).
+    Y = jax.lax.all_gather(y_local, axis)                    # (K, br, bt)
+    bounds = chunk_bounds(br, Q)
+    if not have_panel:
+        counts = jnp.floor(cm * Q + 1e-9)                    # (K,)
+        k_idx = jnp.arange(Y.shape[0])
+    parts = []
+    for c in range(Q):
+        if have_panel:
+            mask_c = cm[c]                                   # (K,)
+            W_c = zW[c]                                      # (mn, K)
+        else:
+            # worker k runs chunk (k + j) % Q as its j-th sub-task, so it
+            # holds chunk c iff ((c - k) mod Q) < its finished count.
+            mask_c = ((c - k_idx) % Q < counts).astype(Y.real.dtype)
+            W_c = _decode_weights_masked(zW, mask_c, tau, useful)
+        Yc = Y[:, bounds[c]:bounds[c + 1], :]
+        Yc = Yc * mask_c.astype(Yc.dtype)[:, None, None]
+        parts.append(jnp.einsum("uk,krt->urt", W_c, Yc))
+    X = jnp.concatenate(parts, axis=1)                       # (mn, br, bt)
     C = digit_extract(X, s) if s is not None else jnp.round(X)
     return C.reshape(m, n, br, bt)
 
@@ -362,17 +421,20 @@ class MeshExecutor:
     def make_pipeline(self, plan: CodedMatmulPlan, kind, dtype) -> Callable:
         """The shard_map pipeline (one device per worker) for ``kind``.
 
+        Binary kinds ("concrete"/"traced") and partial-straggler kinds
+        (("partial", Q) / ("partial-traced", Q)) are supported; partial
+        replicates the stacked (Q, mn, K) decode panels (or solves chunk
+        masks in-body when traced) so each device decodes chunk-by-chunk
+        after a single all-gather — same signatures as the local pipelines.
+
         Raises:
-            NotImplementedError: for partial-straggler (tuple) kinds — the
-                mesh pipeline decodes once per device from a single panel —
-                and for split-stage kinds ("products" / ("decode", r, t)),
-                whose stages run fused inside one shard_map program.
-            ValueError: if the mesh axis size differs from the plan's K, or
-                the plan uses complex (unit-circle) evaluation points.
+            NotImplementedError: for split-stage kinds ("products" /
+                ("decode", r, t)), whose stages run fused inside one
+                shard_map program, leaving no seam to pipeline across.
+            ValueError: if the mesh axis size differs from the plan's K,
+                the plan uses complex (unit-circle) evaluation points, or
+                the tuple kind is not a known partial style.
         """
-        supported = ", ".join(sorted(
-            name for name, cls in BACKENDS.items()
-            if isinstance(cls, type) and issubclass(cls, LocalExecutor)))
         is_stage = (kind == "products"
                     or (isinstance(kind, tuple) and kind
                         and kind[0] in ("decode", "decode-traced")))
@@ -382,17 +444,11 @@ class MeshExecutor:
                 f"{kind!r}): encode, worker products, and decode run fused "
                 f"inside one shard_map program, so there is no seam to "
                 f"pipeline across. Split worker/decode stages are supported "
-                f"by the local backends: {supported}.")
-        if not isinstance(kind, str):
-            Q = kind[1] if isinstance(kind, tuple) and len(kind) > 1 else "?"
-            raise NotImplementedError(
-                f"mesh backend does not support partial-straggler "
-                f"sub-tasking (kind {kind!r}, requested via sub_tasks={Q} — "
-                f"the --sub-tasks flag — or a progress= spec): the "
-                f"shard_map pipeline decodes once per device from a single "
-                f"panel. Partial patterns ARE supported by the local "
-                f"backends: {supported}. Switch to one of those, or pass "
-                f"--sub-tasks 1 to keep binary erasure on mesh.")
+                f"by the local backends: {local_backend_names()}.")
+        if not isinstance(kind, str) and (
+                not isinstance(kind, tuple) or len(kind) != 2
+                or kind[0] not in ("partial", "partial-traced")):
+            raise ValueError(f"unknown mesh pipeline kind {kind!r}")
         K = self.mesh.shape[self.axis]
         if K != plan.K:
             raise ValueError(
@@ -409,10 +465,18 @@ class MeshExecutor:
         s = plan.s if plan.scheme.needs_digit_extraction else None
         coeff_a = jnp.asarray(plan.coeff_a, dtype)
         coeff_b = jnp.asarray(plan.coeff_b, dtype)
-        body = partial(
-            _mesh_worker_body, tau=plan.tau, s=s, useful=useful,
-            axis=self.axis, use_kernels=self.use_kernels, fused=self.fused,
-            have_panel=(kind == "concrete"))
+        is_partial = isinstance(kind, tuple)
+        if is_partial:
+            style, Q = kind
+            body = partial(
+                _mesh_partial_body, Q=Q, tau=plan.tau, s=s, useful=useful,
+                axis=self.axis, use_kernels=self.use_kernels,
+                fused=self.fused, have_panel=(style == "partial"))
+        else:
+            body = partial(
+                _mesh_worker_body, tau=plan.tau, s=s, useful=useful,
+                axis=self.axis, use_kernels=self.use_kernels,
+                fused=self.fused, have_panel=(kind == "concrete"))
         mapped = shard_map_compat(
             body,
             mesh=self.mesh,
@@ -427,6 +491,21 @@ class MeshExecutor:
                               coeff_a, coeff_b, zW)
             return unpad(block_recompose(C_blocks),
                          (A.shape[1], B.shape[1])).astype(dtype)
+
+        if is_partial and style == "partial":
+
+            def fn(A, B, chunk_masks, W_stack):
+                return run(A, B, chunk_masks, W_stack.astype(dtype))
+
+            return fn
+
+        if is_partial:
+            z_all_pt = jnp.asarray(plan.z_points, dtype)
+
+            def fn(A, B, progress):
+                return run(A, B, progress, z_all_pt)
+
+            return fn
 
         if kind == "concrete":
 
@@ -449,6 +528,17 @@ BACKENDS = {
     "fused": FusedKernelExecutor,
     "mesh": MeshExecutor,
 }
+
+# The split-stage (products / decode) seam only exists on local backends;
+# computed ONCE from the registry so error messages cannot drift from it.
+_LOCAL_BACKEND_NAMES = ", ".join(sorted(
+    name for name, cls in BACKENDS.items()
+    if isinstance(cls, type) and issubclass(cls, LocalExecutor)))
+
+
+def local_backend_names() -> str:
+    """Comma-joined names of the local (split-stage capable) backends."""
+    return _LOCAL_BACKEND_NAMES
 
 
 def resolve_executor(backend, *, mesh=None, axis: str = "model",

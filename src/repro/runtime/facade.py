@@ -29,7 +29,11 @@ import numpy as np
 from repro import obs
 from repro.core.api import CodedMatmulPlan
 from repro.runtime.erasure import ErasurePattern
-from repro.runtime.executors import Executor, resolve_executor
+from repro.runtime.executors import (
+    Executor,
+    local_backend_names,
+    resolve_executor,
+)
 from repro.runtime.partial import PartialPattern
 
 __all__ = ["CodedMatmul", "CacheGroup", "plan_token"]
@@ -284,7 +288,8 @@ class CodedMatmul:
     def decode_stage(self, Y, rt, erasure: Any = None, *,
                      erased: Optional[Sequence[int]] = None,
                      survivors: Optional[Sequence[int]] = None,
-                     mask: Any = None) -> jnp.ndarray:
+                     mask: Any = None, progress: Any = None,
+                     sub_tasks: Optional[int] = None) -> jnp.ndarray:
         """Stages 3+4: erase + decode a :meth:`worker_stage` result.
 
         Args:
@@ -296,8 +301,9 @@ class CodedMatmul:
                 product needs concrete sizes the stage input no longer
                 carries.
             erasure / erased / survivors / mask: binary erasure spec, as
-                for ``__call__`` (concrete or traced; partial/progress
-                specs have no split path — decode panels are per chunk).
+                for ``__call__`` (concrete or traced).
+            progress / sub_tasks: rejected here — partial-straggler specs
+                have no split-stage path (see the raise below).
 
         Returns:
             (*batch, r, t) decoded product, bit-identical to the one-shot
@@ -305,8 +311,25 @@ class CodedMatmul:
 
         Raises:
             ValueError: on conflicting specs or fewer than tau survivors.
-            NotImplementedError: on backends with no worker/decode seam.
+            NotImplementedError: on backends with no worker/decode seam,
+                and for partial/progress specs: split-stage decode has no
+                per-chunk panel path, because the (Q, mn, K) panel stack is
+                keyed by the chunk-availability matrix, which the staged
+                (K, br, bt) products no longer determine — serve partial
+                patterns one-shot via ``cm(A, B, progress=..., sub_tasks=Q)``
+                instead (any backend).
         """
+        if (progress is not None
+                or (sub_tasks is not None and int(sub_tasks) != 1)
+                or isinstance(erasure, PartialPattern)):
+            raise NotImplementedError(
+                "split-stage decode has no per-chunk panel path: "
+                "decode_stage accepts only binary erasure specs "
+                "(erasure= / erased= / survivors= / mask=). Serve partial "
+                "patterns one-shot via cm(A, B, progress=..., sub_tasks=Q) "
+                "— supported on every backend, including mesh (the "
+                f"worker/decode seam itself exists only on the local "
+                f"backends: {local_backend_names()}).")
         Y = jnp.asarray(Y)
         r, t = int(rt[0]), int(rt[1])
         pattern = ErasurePattern.normalize(

@@ -26,7 +26,10 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 
 from repro.control.feedback import FeedbackConfig, ViolationFeedback  # noqa: E402
-from repro.control.partial import plan_partial_progress  # noqa: E402
+from repro.control.partial import (  # noqa: E402
+    expected_wait,
+    plan_partial_progress,
+)
 from repro.core import make_plan, make_scheme, uncoded_matmul  # noqa: E402
 from repro.core.simulator import (  # noqa: E402
     LatencyModel,
@@ -347,11 +350,67 @@ class TestPartialDecodeParity:
 
         check()
 
-    def test_mesh_backend_rejects_partial(self):
+    def test_mesh_backend_rejects_unknown_tuple_kind(self):
+        # partial kinds are supported on mesh now (tests/test_mesh.py has
+        # the multi-device parity suite); a MALFORMED tuple kind must still
+        # fail loudly instead of building a wrong pipeline.
         plan, _ = _make("bec", 2, 2, 2, 1)
         ex = MeshExecutor(object())
-        with pytest.raises(NotImplementedError, match="partial"):
-            ex.make_pipeline(plan, ("partial", 2), jnp.float64)
+        with pytest.raises(ValueError, match="unknown mesh pipeline kind"):
+            ex.make_pipeline(plan, ("partial",), jnp.float64)
+        with pytest.raises(ValueError, match="unknown mesh pipeline kind"):
+            ex.make_pipeline(plan, ("chunked", 2), jnp.float64)
+
+    def test_decode_stage_rejects_partial_specs(self, rng):
+        # split-stage decode has no per-chunk panel path: partial specs
+        # must raise loudly, pointing at the one-shot entry point, instead
+        # of silently funnelling through the binary normalizer.
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        Y = cm.worker_stage(A, B)
+        rt = (A.shape[1], B.shape[1])
+        prog = _spanning_progress(plan.K, 2)
+        with pytest.raises(NotImplementedError, match="per-chunk panel"):
+            cm.decode_stage(Y, rt, progress=prog)
+        with pytest.raises(NotImplementedError, match="sub_tasks"):
+            cm.decode_stage(Y, rt, sub_tasks=2)
+        with pytest.raises(NotImplementedError, match="one-shot"):
+            cm.decode_stage(Y, rt, PartialPattern.from_progress(
+                plan.K, 2, prog))
+        # sub_tasks=1 is the binary path and stays allowed
+        C = cm.decode_stage(Y, rt, erased=[0], sub_tasks=1)
+        np.testing.assert_array_equal(
+            np.asarray(C), np.asarray(cm(A, B, erased=[0])))
+
+
+class TestFractionalMaskRejection:
+    def test_from_mask_rejects_fractional_values(self):
+        with pytest.raises(ValueError, match="progress="):
+            ErasurePattern.from_mask(4, [1.0, 0.5, 1.0, 1.0])
+        with pytest.raises(ValueError, match="sub_tasks"):
+            ErasurePattern.from_mask(3, np.array([0.25, 1.0, 1.0]))
+        # negative / out-of-range values are just as silently wrong
+        with pytest.raises(ValueError, match="0 or 1"):
+            ErasurePattern.from_mask(3, [1.0, -1.0, 1.0])
+        with pytest.raises(ValueError, match="0 or 1"):
+            ErasurePattern.from_mask(3, [2.0, 1.0, 1.0])
+
+    def test_from_mask_accepts_binary_in_any_dtype(self):
+        for mask in ([1, 0, 1], [True, False, True],
+                     np.array([1.0, 0.0, 1.0])):
+            pat = ErasurePattern.from_mask(3, mask)
+            np.testing.assert_array_equal(pat.mask, [1.0, 0.0, 1.0])
+
+    def test_call_rejects_progress_passed_as_mask(self, rng):
+        # the end-to-end failure the bugfix closes: a progress vector
+        # passed as mask= used to decode as if every straggler were alive.
+        plan, v = _make("bec", 2, 2, 2, 1)
+        A, B, _ = _int_problem(rng, plan, v, 12, 10)
+        cm = CodedMatmul(plan, "reference")
+        prog = _spanning_progress(plan.K, 4)
+        with pytest.raises(ValueError, match="progress="):
+            cm(A, B, mask=prog)
 
 
 class TestDecodePartialKernel:
@@ -434,6 +493,63 @@ class TestProgressPlanner:
             plan_partial_progress(np.ones(4), [1, 1], 2, 2)
         with pytest.raises(ValueError, match="Q >= 1"):
             plan_partial_progress(np.ones(4), [], 0, 2)
+        with pytest.raises(ValueError, match="unknown method"):
+            plan_partial_progress(np.ones(4), [], 2, 2, method="ilp")
+
+    def test_lp_never_worse_than_greedy_fuzz(self):
+        # the LP planner's contract: same feasibility invariants as greedy
+        # (spans, healthy untouched, multiples of 1/Q) and an expected
+        # wait that NEVER exceeds greedy's — greedy's achieved wait is a
+        # feasible bound in the LP's candidate scan.
+        fuzz = np.random.default_rng(7)
+        for _ in range(200):
+            K = int(fuzz.integers(2, 10))
+            tau = int(fuzz.integers(1, K + 1))
+            Q = int(fuzz.integers(1, 6))
+            n_flag = int(fuzz.integers(0, K + 1))
+            flagged = fuzz.choice(K, size=n_flag, replace=False).tolist()
+            mean = fuzz.uniform(0.1, 10.0, size=K)
+            lp = plan_partial_progress(mean, flagged, Q, tau)
+            greedy = plan_partial_progress(mean, flagged, Q, tau,
+                                           method="greedy")
+            for plan in (lp, greedy):
+                counts = np.round(plan * Q).astype(np.int64)
+                assert chunk_coverage(counts, Q).min() >= tau
+            healthy = [k for k in range(K) if k not in flagged]
+            np.testing.assert_array_equal(lp[healthy], 1.0)
+            assert (expected_wait(lp, mean)
+                    <= expected_wait(greedy, mean) + 1e-9)
+
+    def test_lp_never_worse_than_greedy_hypothesis(self):
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need the 'test' extra "
+                   "(pip install .[test])")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @settings(max_examples=80, deadline=None)
+        @given(st.data())
+        def check(data):
+            K = data.draw(st.integers(min_value=2, max_value=9))
+            tau = data.draw(st.integers(min_value=1, max_value=K))
+            Q = data.draw(st.integers(min_value=1, max_value=5))
+            flagged = data.draw(st.lists(
+                st.integers(min_value=0, max_value=K - 1),
+                unique=True, max_size=K))
+            mean = data.draw(st.lists(
+                st.floats(min_value=0.05, max_value=50.0,
+                          allow_nan=False, allow_infinity=False),
+                min_size=K, max_size=K))
+            lp = plan_partial_progress(mean, flagged, Q, tau)
+            greedy = plan_partial_progress(mean, flagged, Q, tau,
+                                           method="greedy")
+            assert (expected_wait(lp, mean)
+                    <= expected_wait(greedy, mean) + 1e-9)
+            counts = np.round(lp * Q).astype(np.int64)
+            assert chunk_coverage(counts, Q).min() >= tau
+
+        check()
 
 
 class TestFractionalCompletion:
